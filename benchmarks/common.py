@@ -1,0 +1,26 @@
+"""Shared benchmark configuration (paper Section 7 settings)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import ExchangeConfig, HetSpec
+
+# paper: N = 1e6 points, K = 50 workers, threshold 0.01 * N/K
+N_PAPER = 1_000_000
+K_PAPER = 50
+THRESHOLD_FRAC = 0.01
+
+# Monte-Carlo budget (paper uses 50 heterogeneity draws per point)
+TRIALS = 20
+HET_DRAWS = 20
+
+
+def make_het(mu: float, sigma2: float, seed: int) -> HetSpec:
+    return HetSpec.uniform_random(K_PAPER, mu, sigma2,
+                                  np.random.default_rng(seed))
+
+
+def we_cfg(known: bool, threshold_frac: float = THRESHOLD_FRAC
+           ) -> ExchangeConfig:
+    return ExchangeConfig(known_heterogeneity=known,
+                          threshold_frac=threshold_frac)

@@ -1,0 +1,238 @@
+"""Roofline analysis from the dry-run compiled artifacts.
+
+Per (arch x shape) cell on the single-pod production mesh:
+
+  compute term    = HLO_FLOPs_per_device   / PEAK_FLOPS     [s]
+  memory term     = HLO_bytes_per_device   / HBM_BW         [s]
+  collective term = wire_bytes_per_device  / LINK_BW        [s]
+
+Sources: the unroll-mode dry-run gives exact per-device cost_analysis()
+FLOPs/bytes (scan bodies are counted once by XLA -- DESIGN §5.3); the
+trip-count-aware HLO parse gives collective wire bytes (ring-cost model).
+MODEL_FLOPS is the analytic useful work (6*N_active*D for training;
+2*N_active*D for single-pass inference; causal-aware attention terms), so
+MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste, and
+
+  roofline_fraction = (MODEL_FLOPS/chips/PEAK) / max(term_i)
+
+is the peak-utilization bound the compiled program can reach assuming
+perfect overlap -- the score tracked by EXPERIMENTS §Perf.
+
+Hardware model (TPU v5e-like, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s per ICI link (single-link conservative).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from pathlib import Path
+
+import jax
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS = Path(os.environ.get("REPRO_RESULTS", "results/dryrun"))
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+def _linear_params(cfg) -> tuple[float, float]:
+    """(active, total) matmul-parameter counts (embedding gather excluded,
+    lm_head included; MoE experts scaled by k/E for the active count)."""
+    from repro.models import build_model
+    model = build_model(cfg)
+    shapes = model.param_specs()
+    active = total = 0.0
+    k_frac = (cfg.experts_per_token / cfg.n_experts) if cfg.is_moe else 1.0
+
+    def visit(path, leaf):
+        nonlocal active, total
+        name = str(path[-1].key if hasattr(path[-1], "key") else path[-1])
+        if leaf.ndim < 2 or name == "embed":
+            return
+        n = float(np.prod(leaf.shape))
+        total += n
+        if name in ("wi_gate", "wi_up", "wo") and leaf.ndim >= 3:
+            # stacked expert weights
+            active += n * k_frac * cfg.capacity_factor
+        else:
+            active += n
+
+    jax.tree_util.tree_map_with_path(visit, shapes)
+    return active, total
+
+
+def _attn_flops(cfg, shape) -> float:
+    """Forward softmax-attention matmul FLOPs (scores + PV), causal-aware."""
+    B, S = shape.global_batch, shape.seq_len
+    H, hd = cfg.heads, cfg.hd
+
+    def pair_count(s, window):
+        if window and window < s:
+            return s * window - window * window / 2.0
+        return s * s / 2.0
+
+    total = 0.0
+    kinds = cfg.layer_kinds()
+    if cfg.family == "encdec":
+        s_src = S // 2 if shape.kind == "train" else S
+        s_tgt = S // 2 if shape.kind == "train" else 1024
+        enc = cfg.n_enc_layers * 4 * B * s_src * s_src * H * hd
+        dec_self = cfg.n_dec_layers * 4 * B * pair_count(s_tgt, 0) * H * hd
+        cross = cfg.n_dec_layers * 4 * B * s_tgt * s_src * H * hd
+        return enc + dec_self + cross
+    for kind in kinds:
+        if kind == "attn":
+            w = cfg.window if cfg.attn_kind == "swa" or cfg.block_pattern \
+                else 0
+            if cfg.attn_kind == "mla":
+                dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+                per = 2 * B * pair_count(S, 0) * H * (dn + dr + dv)
+            else:
+                per = 4 * B * pair_count(S, w) * H * hd
+            total += per
+        elif kind == "mlstm":
+            L = 256  # chunk
+            din = int(cfg.proj_factor_mlstm * cfg.d_model)
+            total += 4 * B * S * L * din / 2
+        # rec / slstm: recurrences are param-matmuls (already in N_active)
+    return total
+
+
+def _decode_attn_flops(cfg, shape) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    H, hd = cfg.heads, cfg.hd
+    total = 0.0
+    for kind in cfg.layer_kinds():
+        if kind == "attn":
+            w = cfg.window if cfg.attn_kind == "swa" or cfg.block_pattern \
+                else 0
+            ctx = min(S, w) if w else S
+            if cfg.attn_kind == "mla":
+                total += 2 * B * ctx * H * (cfg.kv_lora_rank
+                                            + cfg.qk_rope_dim
+                                            + cfg.kv_lora_rank)
+            else:
+                total += 4 * B * ctx * H * hd
+        elif kind == "mlstm":
+            din = int(cfg.proj_factor_mlstm * cfg.d_model)
+            dh = din // cfg.heads
+            total += 4 * B * din * dh
+    if cfg.family == "encdec":
+        total = cfg.n_dec_layers * (4 * B * S * H * hd) * 2  # self + cross
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    active, _ = _linear_params(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        return 6.0 * active * tokens + 3.0 * _attn_flops(cfg, shape)
+    if shape.kind == "prefill":
+        tokens = B * (S if cfg.family != "encdec" else S + 1024)
+        return 2.0 * active * tokens + _attn_flops(cfg, shape)
+    # decode: one token per sequence
+    return 2.0 * active * B + _decode_attn_flops(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# table assembly
+# ---------------------------------------------------------------------------
+
+def load_cell(arch: str, shape: str, mesh: str = "single"):
+    base = RESULTS / f"{mesh}__{arch}__{shape}.json"
+    unroll = RESULTS / f"{mesh}__{arch}__{shape}__unroll.json"
+    d = json.loads(base.read_text()) if base.exists() else None
+    du = json.loads(unroll.read_text()) if unroll.exists() else None
+    return d, du
+
+
+# calibrations measured against exact unroll-mode cost_analysis compiles
+# (EXPERIMENTS §Roofline): trip-corrected dot flops understate total HLO
+# flops by the elementwise share; the fusion-boundary byte census
+# overstates XLA's bytes-accessed by double-counting producer/consumer.
+ELEMWISE_UPLIFT = 1.10
+MEM_BYTES_CALIB = 1.45
+
+
+def cell_terms(arch: str, shape_name: str, mesh: str = "single"):
+    from repro.configs import SHAPES, get_config, resolve_for_tp
+    d, du = load_cell(arch, shape_name, mesh)
+    if d is None or d.get("skipped"):
+        return None
+    cfg = resolve_for_tp(get_config(arch), 16)
+    shape = SHAPES[shape_name]
+    n_dev = d["n_devices"]
+    # exact per-device flops/bytes prefer the unroll compile
+    if du is not None and not du.get("skipped"):
+        flops = max(du["cost_analysis"]["flops"], du["hlo"]["dot_flops"])
+        bytes_hi = bytes_lo = du["cost_analysis"]["bytes_accessed"]
+    else:
+        flops = d["hlo"]["dot_flops"] * ELEMWISE_UPLIFT
+        # bracket HBM traffic: the op-boundary census over-counts on the
+        # weakly-fusing CPU backend (upper bound); body-once cost_analysis
+        # under-counts scanned layers (lower bound).  Point estimate =
+        # geometric mean of the bracket.
+        bytes_hi = d["hlo"].get("mem_bytes", 0.0) / MEM_BYTES_CALIB
+        bytes_lo = d["cost_analysis"]["bytes_accessed"]
+        if not bytes_hi:
+            bytes_hi = bytes_lo
+    bytes_acc = (bytes_hi * bytes_lo) ** 0.5 if bytes_lo else bytes_hi
+    coll = d["hlo"].get("collective_bytes_bf16norm",
+                        d["hlo"]["total_collective_bytes"])
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_acc / HBM_BW
+    t_n = coll / LINK_BW
+    mf = model_flops(cfg, shape)
+    mf_dev = mf / n_dev
+    terms = {"compute": t_c, "memory": t_m, "collective": t_n}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    frac = (mf_dev / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh,
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dominant,
+        "model_flops": mf, "hlo_flops_dev": flops,
+        "useful_ratio": mf_dev / flops if flops else 0.0,
+        "roofline_fraction": frac,
+        "peak_mem_gib": d["memory"]["peak_bytes_est"] / 2**30,
+        "fits_16g": d["memory"]["peak_bytes_est"] < 16 * 2**30,
+        "accum": d.get("accum", 1),
+        "compile_s": d.get("compile_s", 0.0),
+        "memory_s_lo": bytes_lo / HBM_BW,
+        "memory_s_hi": bytes_hi / HBM_BW,
+    }
+
+
+def full_table(mesh: str = "single"):
+    from repro.configs import SHAPES, list_configs
+    rows = []
+    for arch in list_configs():
+        for shape in SHAPES:
+            r = cell_terms(arch, shape, mesh)
+            if r:
+                rows.append(r)
+    return rows
+
+
+def render_markdown(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful | roofline frac | peak GiB | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {r['peak_mem_gib']:.1f} | "
+            f"{'y' if r['fits_16g'] else 'N'} |")
+    return hdr + "\n".join(lines)

@@ -1,0 +1,86 @@
+"""Benchmark harness: one entry per paper figure + the roofline table.
+
+Emits ``name,value,derived`` CSV rows and validates the paper's claims
+against this reproduction (exit code reflects the validation).
+Set REPRO_BENCH_QUICK=1 for a fast smoke pass.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+QUICK = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
+
+
+def _emit(name: str, value, derived=""):
+    print(f"{name},{value},{derived}")
+
+
+def run_fig5():
+    from . import fig5
+    rows = fig5.run(quick=QUICK)
+    for r in rows:
+        tag = f"fig5[mu={r['mu']},s2={r['sigma2']}]"
+        for scheme in ("oracle", "mds_opt", "fixed", "we_known",
+                       "we_unknown"):
+            _emit(f"{tag}.{scheme}_T_comp_s", f"{r[scheme]:.4f}",
+                  f"L*={r['mds_L']}" if scheme == "mds_opt" else "")
+    return fig5.validate(rows)
+
+
+def run_fig6():
+    from . import fig6
+    rows = fig6.run(quick=QUICK)
+    for r in rows:
+        tag = f"fig6[s2={r['sigma2']:.0f}]"
+        _emit(f"{tag}.comm_known_frac", f"{r['comm_known']:.5f}",
+              f"std={r['comm_known_std']:.5f}")
+        _emit(f"{tag}.comm_unknown_frac", f"{r['comm_unknown']:.5f}",
+              f"std={r['comm_unknown_std']:.5f}")
+        _emit(f"{tag}.iters_known", f"{r['iters_known']:.2f}")
+        _emit(f"{tag}.iters_unknown", f"{r['iters_unknown']:.2f}")
+    return fig6.validate(rows)
+
+
+def run_fig7():
+    from . import fig7
+    rows = fig7.run(quick=QUICK)
+    for r in rows:
+        _emit(f"fig7[s2={r['sigma2']:.0f},th={r['threshold_frac']}].iters",
+              f"{r['iters']:.2f}",
+              f"T/oracle={r['t_comp_over_oracle']:.3f}")
+    return fig7.validate(rows)
+
+
+def run_roofline():
+    from . import roofline
+    try:
+        rows = roofline.full_table("single")
+    except Exception as e:  # dry-run results not present
+        print(f"# roofline skipped: {e}", file=sys.stderr)
+        return []
+    for r in rows:
+        _emit(f"roofline[{r['arch']},{r['shape']}].dominant_term_s",
+              f"{max(r['compute_s'], r['memory_s'], r['collective_s']):.3e}",
+              f"dom={r['dominant']};frac={r['roofline_fraction']:.3f}")
+    return []
+
+
+def main() -> None:
+    checks = []
+    checks += run_fig5()
+    checks += run_fig6()
+    checks += run_fig7()
+    checks += run_roofline()
+    failed = [name for name, ok in checks if not ok]
+    print("#", "=" * 60)
+    for name, ok in checks:
+        print(f"# {'PASS' if ok else 'FAIL'}: {name}")
+    print(f"# paper-claim checks: {len(checks) - len(failed)}/{len(checks)} "
+          f"passed")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

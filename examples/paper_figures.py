@@ -1,0 +1,40 @@
+"""Regenerate every paper figure's data to CSV under results/figures/.
+
+Run:  PYTHONPATH=src python examples/paper_figures.py [--quick]
+"""
+import argparse
+import csv
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import fig5, fig6, fig7
+
+
+def dump(rows, path: Path):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    print(f"wrote {path} ({len(rows)} rows)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="results/figures")
+    args = ap.parse_args()
+    out = Path(args.out)
+    dump(fig5.run(quick=args.quick), out / "fig5_completion_time.csv")
+    dump(fig6.run(quick=args.quick), out / "fig6_comm_and_iters.csv")
+    dump(fig7.run(quick=args.quick), out / "fig7_threshold.csv")
+    for mod, rows_fn in (("fig5", fig5), ("fig6", fig6), ("fig7", fig7)):
+        pass
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Serving example: batched greedy decoding + heterogeneity-aware request
+scheduling across replicas.
+
+A real (small) model serves batches of requests; the prefill work for a
+queue of requests is distributed across K heterogeneous serving replicas
+with the work-exchange scheduler -- the paper's technique applied to the
+serving plane (requests are the units).
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.core.exchange import MasterScheduler
+from repro.core.runtime import VirtualWorkerPool
+from repro.models import build_model
+from repro.train.serve import greedy_generate
+
+
+def main():
+    cfg = dataclasses.replace(smoke_config(get_config("phi4-mini-3.8b")),
+                              dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    # --- batched generation (real decode path with KV cache) --------------
+    B, S_prompt, steps = 4, 16, 12
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S_prompt)),
+                          jnp.int32)
+    cache = model.init_cache(B, S_prompt + steps)
+    toks, _ = greedy_generate(model, params, {"tokens": prompts}, cache,
+                              steps)
+    print(f"generated {toks.shape[1]} tokens for {B} requests "
+          f"(greedy, KV-cached):")
+    print(np.asarray(toks)[:, :10])
+
+    # --- heterogeneity-aware request scheduling ---------------------------
+    n_requests = 400
+    rates = np.array([2.0, 7.0, 3.0, 11.0])   # prefill throughput/replica
+    sched = MasterScheduler(range(n_requests), K=len(rates), rates=None,
+                            threshold_frac=0.02)
+    pool = VirtualWorkerPool(rates, seed=3)
+    while not sched.finished:
+        a = sched.next_assignment()
+        if a is None:
+            break
+        elapsed, done = pool.run_epoch(a)
+        sched.report(done, elapsed)
+    oracle = n_requests / rates.sum()
+    print(f"\nprefill queue of {n_requests} requests over "
+          f"{len(rates)} heterogeneous replicas:")
+    print(f"  work-exchange completion: {sched.t_comp:.2f}s "
+          f"(oracle {oracle:.2f}s, +{100 * (sched.t_comp / oracle - 1):.1f}%)")
+    print(f"  reassignment rounds: {sched.iterations}, "
+          f"requests moved: {sched.n_comm}")
+    print(f"  learned replica rates: "
+          f"{np.round(sched.estimated_rates(), 2)} (true {rates})")
+
+
+if __name__ == "__main__":
+    main()

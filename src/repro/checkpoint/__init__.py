@@ -1,0 +1,5 @@
+from .ckpt import (latest_checkpoint, reshard_rates, restore_checkpoint,
+                   save_checkpoint)
+
+__all__ = ["latest_checkpoint", "reshard_rates", "restore_checkpoint",
+           "save_checkpoint"]

@@ -1,0 +1,21 @@
+"""Work-exchange core: the paper's contribution as a composable library.
+
+Layout
+  types        -- HetSpec / RunStats / ExchangeConfig dataclasses
+  oracle       -- Theorem 1 lower bound + Corollary 2 (+ enumerated check)
+  erlang       -- exact non-iid Erlang order statistics (eqs. 4-5)
+  mds          -- optimized (K, L) MDS baseline (eq. 6), exact + Monte Carlo
+  assignment   -- proportional / capped / uniform allocation rules
+  estimator    -- online rate estimation (paper eq. 23 + EMA + Bayesian)
+  exchange     -- unit-id-level master protocol (Algorithms 1 & 3)
+  simulator    -- exact vectorized Monte-Carlo engine (paper figures)
+  coded        -- executable MDS matmul + gradient coding baselines
+  runtime      -- real-JAX-gradients / virtual-clock heterogeneous runtime
+"""
+from . import assignment, coded, erlang, estimator, exchange, mds, oracle, simulator
+from .types import ExchangeConfig, HetSpec, RunStats
+
+__all__ = [
+    "assignment", "coded", "erlang", "estimator", "exchange", "mds",
+    "oracle", "simulator", "ExchangeConfig", "HetSpec", "RunStats",
+]

@@ -1,0 +1,159 @@
+"""Unit-level work-exchange master protocol (Algorithms 1 & 3), id-aware.
+
+``simulator.py`` is the fast count-based Monte-Carlo engine for the paper's
+figures; this module is the *executable* protocol the training/serving
+runtimes drive.  It tracks concrete unit ids so that
+
+  * real computations (per-microbatch gradients) can be attached to units,
+  * N_comm is counted by actual unit movement (a worker keeping its own
+    leftover costs nothing -- eq. 1),
+  * failures/elasticity reduce to returning a worker's unfinished ids to
+    the pool and re-running the same assignment rule.
+
+The master is deliberately synchronous-at-iteration-boundaries, mirroring
+the paper's stop-flag protocol adapted to SPMD unit granularity (DESIGN §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .assignment import largest_remainder_round, proportional_assignment
+from .estimator import CumulativeRateEstimator, RateEstimator
+
+
+@dataclasses.dataclass
+class IterationLog:
+    assignment_sizes: np.ndarray
+    done_counts: np.ndarray
+    elapsed: float
+    moved_units: int          # N_comm contribution of this epoch
+
+
+@dataclasses.dataclass
+class Assignment:
+    """Per-worker ordered unit queues plus the master's wait mode."""
+    queues: List[List[int]]
+    wait_all: bool            # final phase below the cutting threshold
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return np.array([len(q) for q in self.queues], dtype=np.int64)
+
+
+class MasterScheduler:
+    """Work-exchange master (Algorithm 1 when rates given, Algorithm 3 when not)."""
+
+    def __init__(self, unit_ids: Sequence[int], K: int,
+                 rates: Optional[np.ndarray] = None,
+                 estimator: Optional[RateEstimator] = None,
+                 threshold_frac: float = 0.01,
+                 storage_cap_frac: Optional[float] = 1.0,
+                 prior_rate: float = 1.0):
+        self.K = K
+        self.N = len(unit_ids)
+        self.known = rates is not None
+        self.rates = None if rates is None else np.asarray(rates, np.float64)
+        self.estimator = estimator or CumulativeRateEstimator(K, prior_rate)
+        self.threshold = threshold_frac * self.N / K
+        self.cap = (None if self.known or storage_cap_frac is None
+                    else int(np.ceil(storage_cap_frac * self.N / K)))
+        self.pool: List[int] = list(unit_ids)       # unassigned units
+        self.holding: List[List[int]] = [[] for _ in range(K)]  # leftover ids
+        self.alive = np.ones(K, dtype=bool)
+        self.done_ids: List[int] = []
+        self.logs: List[IterationLog] = []
+        self.n_comm = 0
+        self._finished = False
+
+    # -- assignment -------------------------------------------------------
+
+    def _rule_sizes(self, n_rem: int) -> np.ndarray:
+        rates = self.rates if self.known else self.estimator.rates()
+        rates = np.where(self.alive, rates, 0.0)
+        sizes = largest_remainder_round(rates, n_rem)
+        if self.cap is not None:
+            sizes = np.minimum(sizes, self.cap)   # Alg. 3 storage cap; carry rest
+        return sizes
+
+    def next_assignment(self) -> Optional[Assignment]:
+        """Build the next epoch's queues, or None if all units are done."""
+        n_rem = len(self.pool) + sum(len(h) for h in self.holding)
+        if n_rem == 0:
+            self._finished = True
+            return None
+        wait_all = n_rem <= self.threshold
+        sizes = self._rule_sizes(n_rem)
+        if sizes.sum() == 0:     # degenerate rounding; push everything out
+            sizes = largest_remainder_round(self.alive.astype(float), n_rem)
+        # Workers first keep their own leftover (free), then the master ships
+        # surplus leftover back to the pool and pool units to deficit workers.
+        queues: List[List[int]] = [[] for _ in range(self.K)]
+        moved = 0
+        for k in range(self.K):
+            keep = self.holding[k][: int(sizes[k])]
+            spill = self.holding[k][int(sizes[k]):]
+            queues[k] = list(keep)
+            self.pool.extend(spill)
+            self.holding[k] = []
+        for k in range(self.K):
+            deficit = int(sizes[k]) - len(queues[k])
+            if deficit > 0:
+                ship = self.pool[:deficit]
+                del self.pool[:deficit]
+                queues[k].extend(ship)
+                if self.logs:          # eq. (2): initial assignment is free
+                    moved += len(ship)
+        self.n_comm += moved
+        self._pending = Assignment(queues=queues, wait_all=wait_all)
+        self._pending_moved = moved
+        return self._pending
+
+    # -- feedback ---------------------------------------------------------
+
+    def report(self, done_counts: Sequence[int], elapsed: float) -> None:
+        """Workers processed the first ``done_counts[k]`` units of their queue."""
+        a = self._pending
+        done_counts = np.asarray(done_counts, dtype=np.int64)
+        for k in range(self.K):
+            q = a.queues[k]
+            d = int(done_counts[k])
+            if d > len(q):
+                raise ValueError(f"worker {k} reported {d} > assigned {len(q)}")
+            self.done_ids.extend(q[:d])
+            self.holding[k] = q[d:]
+        self.estimator.update(done_counts, elapsed)
+        self.logs.append(IterationLog(a.sizes, done_counts, elapsed,
+                                      self._pending_moved))
+        if len(self.done_ids) == self.N:
+            self._finished = True
+
+    # -- fault tolerance / elasticity --------------------------------------
+
+    def mark_failed(self, k: int) -> None:
+        """Worker k died: return its unfinished units; stop assigning to it."""
+        self.alive[k] = False
+        self.pool.extend(self.holding[k])
+        self.holding[k] = []
+
+    def revive(self, k: int) -> None:
+        self.alive[k] = True
+
+    # -- stats --------------------------------------------------------------
+
+    @property
+    def finished(self) -> bool:
+        return self._finished
+
+    @property
+    def iterations(self) -> int:
+        return len(self.logs)
+
+    @property
+    def t_comp(self) -> float:
+        return float(sum(l.elapsed for l in self.logs))
+
+    def estimated_rates(self) -> np.ndarray:
+        return self.rates if self.known else self.estimator.rates()

@@ -1,0 +1,82 @@
+"""Shared dataclasses for the work-exchange core.
+
+Terminology follows the paper (Attia & Tandon, 2017):
+  N        -- total number of work units ("data points")
+  K        -- number of workers
+  lambdas  -- heterogeneity set, one Poisson service rate per worker
+  I        -- number of reassignment iterations (coordination rounds)
+  N_comm   -- extra communication: units shipped beyond a worker's leftover
+              from the previous assignment (eq. 1-2)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HetSpec:
+    """Heterogeneity description of a K-worker cluster."""
+
+    lambdas: np.ndarray  # shape (K,), rates > 0 (units/sec)
+
+    def __post_init__(self):
+        lam = np.asarray(self.lambdas, dtype=np.float64)
+        if lam.ndim != 1 or lam.size == 0:
+            raise ValueError("lambdas must be a non-empty 1-D array")
+        if np.any(lam < 0) or not np.all(np.isfinite(lam)):
+            raise ValueError("lambdas must be finite and non-negative")
+        object.__setattr__(self, "lambdas", lam)
+
+    @property
+    def K(self) -> int:
+        return int(self.lambdas.size)
+
+    @property
+    def lambda_sum(self) -> float:
+        return float(self.lambdas.sum())
+
+    @staticmethod
+    def uniform_random(K: int, mu: float, sigma2: float,
+                       rng: np.random.Generator) -> "HetSpec":
+        """Paper Section 7: lambda_k ~ Uniform(mu - sqrt(3 sigma^2), mu + sqrt(3 sigma^2)).
+
+        Requires 0 <= sigma2 <= mu^2/3 so rates stay non-negative.
+        """
+        if not 0 <= sigma2 <= mu * mu / 3 + 1e-12:
+            raise ValueError(f"sigma2 must be in [0, mu^2/3]; got {sigma2}")
+        half = np.sqrt(3.0 * sigma2)
+        lam = rng.uniform(mu - half, mu + half, size=K)
+        return HetSpec(np.maximum(lam, 1e-12))
+
+
+@dataclasses.dataclass
+class RunStats:
+    """Outcome of one simulated (or real) run of a scheduling policy."""
+
+    t_comp: float              # total computation time (sum over iterations)
+    iterations: int            # I, number of reassignment epochs
+    n_comm: float              # extra communication in units (eq. 2)
+    n_done: np.ndarray         # per-worker totals, shape (K,)
+    t_iter: Optional[np.ndarray] = None  # per-iteration durations
+
+    def check_work_conserved(self, N: int) -> None:
+        total = int(round(float(self.n_done.sum())))
+        if total != N:
+            raise AssertionError(
+                f"work conservation violated: processed {total} of {N}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeConfig:
+    """Knobs of the work-exchange master protocol (Algorithms 1 & 3)."""
+
+    known_heterogeneity: bool = True
+    # Cutting threshold (Remark 1): stop reassigning once N_rem <= threshold
+    # and wait for all workers. The paper default is 0.01 * N/K.
+    threshold_frac: float = 0.01     # of N/K
+    # Storage cap per worker for the unknown-het variant (Section 6): N/K.
+    storage_cap_frac: Optional[float] = 1.0   # of N/K; None = uncapped
+    max_iterations: int = 10_000

@@ -1,0 +1,4 @@
+from .pipeline import HetShardedLoader, UnitStore
+from .synthetic import structured_unit, unit_tokens
+
+__all__ = ["HetShardedLoader", "UnitStore", "structured_unit", "unit_tokens"]

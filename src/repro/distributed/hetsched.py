@@ -1,0 +1,226 @@
+"""Heterogeneity-aware training drivers: the paper's schemes as policies.
+
+The unit of work is a microbatch; the K workers are DP rank groups / pods
+(DESIGN §3).  Policies:
+
+  equal_static        -- uniform split, wait for all (the naive baseline)
+  het_static          -- Section 5.1: proportional split, wait for all
+  work_exchange       -- Section 5.2: known rates, iterative reassignment
+  work_exchange_online-- Section 6: rates estimated online (+ estimator
+                         variants: cumulative / EMA / Bayesian)
+  gradient_coded      -- Section 3 baseline translated to training:
+                         fractional-repetition gradient coding, any K-s
+                         replies recover the exact batch gradient
+
+All policies run REAL gradients through the same jitted per-unit step and
+MUST produce the same parameter trajectory (work conservation) -- asserted
+in tests.  Time is virtual (exponential service model or traces).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coded import GradientCoding
+from repro.core.estimator import make_estimator
+from repro.core.exchange import MasterScheduler
+from repro.core.runtime import VirtualWorkerPool
+from repro.data.pipeline import HetShardedLoader, UnitStore
+from repro.optim import AdamW
+from repro.train.loop import make_grad_step
+
+POLICIES = ("equal_static", "het_static", "work_exchange",
+            "work_exchange_online", "gradient_coded")
+
+
+@dataclasses.dataclass
+class StepReport:
+    step: int
+    loss: float
+    t_virtual: float
+    iterations: int
+    n_comm_units: int
+    refetch_tokens: int
+    grad_bytes: float
+
+
+class HetTrainer:
+    """Drives one of the paper's policies over real JAX training."""
+
+    def __init__(self, model, opt: AdamW, rates: Sequence[float],
+                 store: UnitStore, policy: str = "work_exchange",
+                 units_per_step: int = 32, seed: int = 0,
+                 estimator_kind: str = "cumulative",
+                 coded_stragglers: int = 1,
+                 threshold_frac: float = 0.05,
+                 compressor=None):
+        if policy not in POLICIES:
+            raise ValueError(f"policy {policy!r} not in {POLICIES}")
+        self.model = model
+        self.opt = opt
+        self.rates = np.asarray(rates, dtype=np.float64)
+        self.K = self.rates.size
+        self.policy = policy
+        self.units_per_step = units_per_step
+        self.store = store
+        self.loader = HetShardedLoader(store, self.K)
+        self.pool = VirtualWorkerPool(self.rates, seed=seed)
+        self.estimator_kind = estimator_kind
+        self.coded_stragglers = coded_stragglers
+        self.threshold_frac = threshold_frac
+        self.compressor = compressor
+        self._grad_fn = jax.jit(make_grad_step(model, mode="scan"))
+        self._update_fn = jax.jit(self.opt.update)
+        self._persistent_estimator = None
+        self._next_unit = 0
+
+    # -- scheduler construction per policy ---------------------------------
+
+    def _make_scheduler(self, unit_ids) -> MasterScheduler:
+        if self.policy == "equal_static":
+            return MasterScheduler(unit_ids, self.K, rates=np.ones(self.K),
+                                   threshold_frac=1e9)
+        if self.policy == "het_static":
+            return MasterScheduler(unit_ids, self.K, rates=self.rates,
+                                   threshold_frac=1e9)
+        if self.policy == "work_exchange":
+            return MasterScheduler(unit_ids, self.K, rates=self.rates,
+                                   threshold_frac=self.threshold_frac)
+        if self.policy == "work_exchange_online":
+            if self._persistent_estimator is None:
+                self._persistent_estimator = make_estimator(
+                    self.estimator_kind, self.K)
+            return MasterScheduler(unit_ids, self.K, rates=None,
+                                   estimator=self._persistent_estimator,
+                                   threshold_frac=self.threshold_frac)
+        raise ValueError(self.policy)
+
+    # -- one optimizer step --------------------------------------------------
+
+    def step(self, params, opt_state, step_idx: int,
+             failures: Sequence[int] = ()) -> tuple:
+        unit_ids = list(range(self._next_unit,
+                              self._next_unit + self.units_per_step))
+        self._next_unit += self.units_per_step
+        if self.policy == "gradient_coded":
+            return self._coded_step(params, opt_state, step_idx, unit_ids)
+
+        sched = self._make_scheduler(unit_ids)
+        # initial placement follows the first assignment (free prefetch)
+        grads_sum = None
+        loss_sum = 0.0
+        grad_bytes = 0.0
+        processed = set()
+        dead = np.zeros(self.K, dtype=bool)
+        epoch = 0
+        refetch0 = self.loader.refetched_tokens
+        while not sched.finished:
+            assignment = sched.next_assignment()
+            if assignment is None:
+                break
+            if epoch == 0:
+                for k in range(self.K):
+                    self.loader.prefetch(k, assignment.queues[k])
+            for w in failures:
+                if not dead[w]:
+                    dead[w] = True
+            elapsed, done = self.pool.run_epoch(assignment, dead)
+            for k in range(self.K):
+                todo = assignment.queues[k][: int(done[k])]
+                if todo:
+                    batches = self.loader.assign(k, todo)
+                for j, u in enumerate(todo):
+                    assert u not in processed, f"unit {u} done twice"
+                    processed.add(u)
+                    loss, g = self._grad_fn(params, batches[j])
+                    loss_sum += float(loss)
+                    g, nbytes = self._ship(g, k)
+                    grad_bytes += nbytes
+                    grads_sum = g if grads_sum is None else jax.tree.map(
+                        jnp.add, grads_sum, g)
+            sched.report(done, elapsed)
+            for w in np.nonzero(dead)[0]:
+                sched.mark_failed(int(w))
+            epoch += 1
+        assert processed == set(unit_ids), "work conservation violated"
+        grads = jax.tree.map(lambda g: g / len(unit_ids), grads_sum)
+        params, opt_state = self._update_fn(grads, opt_state, params)
+        report = StepReport(
+            step=step_idx, loss=loss_sum / len(unit_ids),
+            t_virtual=sched.t_comp, iterations=sched.iterations,
+            n_comm_units=sched.n_comm,
+            refetch_tokens=self.loader.refetched_tokens - refetch0,
+            grad_bytes=grad_bytes)
+        return params, opt_state, report
+
+    def _ship(self, grads, worker: int):
+        """Optionally compress the per-unit gradient for 'transmission'."""
+        if self.compressor is None:
+            nbytes = sum(g.size * g.dtype.itemsize
+                         for g in jax.tree.leaves(grads))
+            return grads, float(nbytes)
+        return self.compressor.roundtrip(grads, worker)
+
+    # -- gradient-coded baseline ---------------------------------------------
+
+    def _coded_step(self, params, opt_state, step_idx, unit_ids):
+        gc = GradientCoding(self.K, self.coded_stragglers)
+        owners = gc.assignment(len(unit_ids))   # per-worker local unit idx
+        sizes = np.array([len(o) for o in owners])
+        # completion: worker k finishes its whole queue at Gamma(|q|, rate);
+        # master stops at the earliest time the union of done-prefixes
+        # covers every unit (redundancy => no work exchange needed).
+        t_k = self.pool.rng.gamma(shape=np.maximum(sizes, 1),
+                                  scale=1.0 / self.rates)
+        order = np.argsort(t_k)
+        covered: set = set()
+        t_done = float(t_k[order[-1]])
+        used_workers: List[int] = []
+        for w in order:
+            used_workers.append(int(w))
+            covered |= set(owners[w])
+            if len(covered) == len(unit_ids):
+                t_done = float(t_k[w])
+                break
+        # real gradients: one replica per unit, from the covering workers
+        grads_sum = None
+        loss_sum = 0.0
+        grad_bytes = 0.0
+        done_units: set = set()
+        compute_units = 0
+        for w in used_workers:
+            for li in owners[w]:
+                compute_units += 1          # redundant compute happens anyway
+                if li in done_units:
+                    continue
+                done_units.add(li)
+                batch = self.store.fetch(unit_ids[li])
+                loss, g = self._grad_fn(params, batch)
+                loss_sum += float(loss)
+                g, nbytes = self._ship(g, w)
+                grad_bytes += nbytes
+                grads_sum = g if grads_sum is None else jax.tree.map(
+                    jnp.add, grads_sum, g)
+        grads = jax.tree.map(lambda g: g / len(unit_ids), grads_sum)
+        params, opt_state = self._update_fn(grads, opt_state, params)
+        report = StepReport(step=step_idx, loss=loss_sum / len(unit_ids),
+                            t_virtual=t_done, iterations=1,
+                            n_comm_units=0, refetch_tokens=0,
+                            grad_bytes=grad_bytes)
+        return params, opt_state, report
+
+    # -- loop -----------------------------------------------------------------
+
+    def train(self, params, steps: int,
+              failures: Optional[Dict[int, Sequence[int]]] = None):
+        opt_state = self.opt.init(params)
+        history: List[StepReport] = []
+        for s in range(steps):
+            fail = (failures or {}).get(s, ())
+            params, opt_state, rep = self.step(params, opt_state, s, fail)
+            history.append(rep)
+        return params, opt_state, history

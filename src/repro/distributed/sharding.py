@@ -1,0 +1,212 @@
+"""Per-architecture PartitionSpec rules (params, optimizer state, caches).
+
+Name+path+rank-based rules mirror the init structure; stacked layer dims
+(body/enc/dec leading axes) are detected by rank and padded with None.
+
+Conventions (DESIGN §5.4-5.5):
+  * 'model' = tensor parallel (+ expert parallel when E % tp == 0)
+  * 'data'  = batch + FSDP: every weight's non-TP matrix dim is sharded
+              over 'data' in train mode; serve mode replicates over 'data'
+  * 'pod'   = pure DP (gradient reduction only) and the work-exchange domain
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# weights whose (in, out) trailing dims shard (FSDP, model)
+_IN_OUT = {"wq", "wk", "wv", "wi_gate", "wi_up", "wi", "w_in", "w_gate",
+           "w_a", "w_x", "wq_a", "wq_b", "wk_b", "wv_b", "w_up", "w",
+           "vis_proj", "lm_head"}
+# weights whose trailing dims shard (model, FSDP)
+_OUT_IN = {"wo", "w_out", "w_down"}
+# weights replicated on the model axis (small / shared outputs)
+_FS_ONLY = {"router", "wkv_a", "w_if"}
+_NORM_1D = re.compile(r"^(ln\w*|.*_norm|b|bias)$")
+
+
+def _leaf_name(path) -> str:
+    return str(path[-1].key if hasattr(path[-1], "key") else path[-1])
+
+
+def _path_strs(path) -> list[str]:
+    return [str(p.key if hasattr(p, "key") else p) for p in path]
+
+
+def _pad(spec: tuple, ndim: int) -> P:
+    extra = ndim - len(spec)
+    assert extra >= 0, f"rank mismatch: spec {spec} for ndim {ndim}"
+    return P(*((None,) * extra + spec))
+
+
+def param_spec(path, leaf, cfg, tp: int = 16, fsdp: bool = True) -> P:
+    """Sharding for one parameter leaf."""
+    name = _leaf_name(path)
+    parts = _path_strs(path)
+    nd = leaf.ndim
+    fs = "data" if fsdp else None
+    moe = cfg.is_moe and "mlp" in parts and name in ("wi_gate", "wi_up", "wo")
+    if moe:
+        ep = cfg.n_experts % tp == 0
+        if name in ("wi_gate", "wi_up"):      # (E, D, F)
+            spec = ("model", fs, None) if ep else (None, fs, "model")
+        else:                                  # wo (E, F, D)
+            spec = ("model", None, fs) if ep else (None, "model", fs)
+        return _pad(spec, nd)
+    if name == "embed":
+        return _pad(("model", fs), nd)
+    if name == "r":                            # slstm recurrent (H, 4, dh, dh)
+        h = leaf.shape[-4]
+        return _pad(("model" if h % tp == 0 else None, None, None, None), nd)
+    if name == "conv_w":                       # (W, R)
+        width = leaf.shape[-1]
+        return _pad((None, "model" if width % tp == 0 else None), nd)
+    if name in ("lambda", "skip_scale"):
+        return _pad(("model" if leaf.shape[-1] % tp == 0 else None,), nd)
+    if _NORM_1D.match(name) or nd - _stack_extra(parts, nd, 1) == 1:
+        return _pad((None,), nd) if nd <= 1 else P(*((None,) * nd))
+    if name in _FS_ONLY:
+        return _pad((fs, None), nd)
+    if name in _IN_OUT:
+        out_dim = leaf.shape[-1]
+        return _pad((fs, "model" if out_dim % tp == 0 else None), nd)
+    if name in _OUT_IN:
+        in_dim = leaf.shape[-2]
+        return _pad(("model" if in_dim % tp == 0 else None, fs), nd)
+    # default: replicate
+    return P(*((None,) * nd))
+
+
+def _stack_extra(parts, nd, base) -> int:
+    return 1 if any(p in ("body", "enc", "dec") for p in parts) else 0
+
+
+def param_specs(cfg, params_shape, tp: int = 16, fsdp: bool = True):
+    """Spec tree matching a (possibly eval_shape'd) param tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, cfg, tp, fsdp),
+        params_shape)
+
+
+def opt_specs(cfg, opt_state_shape, pspecs):
+    """AdamWState(step, mu, nu, master): moments/master mirror params."""
+    from repro.optim import AdamWState
+    return AdamWState(step=P(), mu=pspecs, nu=pspecs, master=pspecs)
+
+
+# ---------------------------------------------------------------------------
+# cache / batch specs
+# ---------------------------------------------------------------------------
+
+def cache_spec(path, leaf, cfg, dp, tp: int = 16,
+               batch_shardable: bool = True) -> P:
+    name = _leaf_name(path)
+    parts = _path_strs(path)
+    nd = leaf.ndim
+    # stacked caches have a leading layer dim under body keys; UNSTACKED
+    # (serving-layout) caches interpose a list index ("[j]") and have none
+    has_body = any(p.startswith("b") and p[1:].isdigit() for p in parts)
+    has_list = any(p.startswith("[") for p in parts)
+    extra = 1 if ((has_body and not has_list)
+                  or any(p in ("self", "cross") for p in parts)) else 0
+    dps = dp if batch_shardable else None
+    if name == "pos":
+        return P()
+    if name in ("k", "v"):                     # (B, S, Hkv, hd)
+        hkv = leaf.shape[-2]
+        head_ax = "model" if hkv % tp == 0 else None
+        seq_ax = "data" if not batch_shardable else None
+        return _pad((dps, seq_ax, head_ax, None), nd)
+    if name in ("latent", "k_rope"):           # (B, S, r)
+        # MLA latent is shared across heads (never head-shardable); store it
+        # sequence-sharded over 'model' -- the per-step gather for the
+        # absorbed attention is tiny vs 16x cache storage (§Perf decode)
+        seq_ax = "data" if not batch_shardable else "model"
+        return _pad((dps, seq_ax, None), nd)
+    if name == "conv":                         # (B, W-1, R)
+        r = leaf.shape[-1]
+        return _pad((dps, None, "model" if r % tp == 0 else None), nd)
+    if name == "C":                            # mlstm (B, H, dh, dh)
+        dh = leaf.shape[-1]
+        d_ax = "data" if not batch_shardable and dh % tp == 0 else None
+        return _pad((dps, "model", d_ax, None), nd)
+    if name in ("n", "m", "c", "h"):
+        core = nd - extra
+        if core == 2:                          # (B, X): rglru h / mlstm m
+            x = leaf.shape[-1]
+            return _pad((dps, "model" if x % tp == 0 else None), nd)
+        return _pad((dps, "model") + (None,) * (core - 2), nd)
+    return P(*((None,) * nd))
+
+
+def cache_specs(cfg, cache_shape, dp, tp: int = 16,
+                batch_shardable: bool = True):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_spec(path, leaf, cfg, dp, tp,
+                                      batch_shardable),
+        cache_shape)
+
+
+def batch_specs(batch_shape, dp, batch_shardable: bool = True):
+    dps = dp if batch_shardable else None
+    return jax.tree.map(lambda leaf: P(*((dps,) + (None,) * (leaf.ndim - 1))),
+                        batch_shape)
+
+
+def maybe_shard(x, *spec):
+    """Activation sharding constraint, robust to the ambient mesh.
+
+    Axes absent from the current (abstract) mesh are dropped; axes that do
+    not divide the corresponding dim are dropped too (e.g. batch=1 decode).
+    No-op outside a mesh context so model code stays runnable on 1 CPU.
+    """
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return x
+    if mesh is None or mesh.empty:
+        return x
+    sizes = dict(mesh.shape)
+    out, nontrivial = [], False
+    for dim, s in zip(x.shape, spec):
+        elems = s if isinstance(s, tuple) else ((s,) if s else ())
+        keep, prod = [], 1
+        for a in elems:
+            if a in sizes and dim % (prod * sizes[a]) == 0:
+                keep.append(a)
+                prod *= sizes[a]
+        if keep:
+            nontrivial = True
+        out.append(tuple(keep) if len(keep) > 1 else
+                   (keep[0] if keep else None))
+    if not nontrivial:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*out))
+
+
+BATCH_AXES = ("pod", "data")
+
+# Megatron-style sequence parallelism for layer-boundary activations:
+# residuals (and their remat-saved stacks) are sharded over 'model' along
+# the sequence axis, cutting saved-activation memory by the TP degree.
+# XLA inserts the all-gather before attention / reduce-scatter after --
+# the SP collective pattern.  Toggled off by the perf harness to measure
+# its contribution (EXPERIMENTS §Perf).
+SEQ_SHARD_ACTIVATIONS = True
+
+
+def shard_activations(h):
+    """Seed batch sharding on (B, S, D) activations (DESIGN §5.4): XLA's
+    propagation cannot infer it through the vocab-sharded embedding gather."""
+    return maybe_shard(h, BATCH_AXES, None, None)
+
+
+def shard_residual(h):
+    """Layer-boundary activation constraint (between transformer blocks)."""
+    if SEQ_SHARD_ACTIVATIONS:
+        return maybe_shard(h, BATCH_AXES, "model", None)
+    return maybe_shard(h, BATCH_AXES, None, None)

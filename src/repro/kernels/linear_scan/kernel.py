@@ -1,0 +1,58 @@
+"""Pallas TPU chunked linear-recurrence kernel: h_t = a_t * h_{t-1} + b_t.
+
+Covers the RG-LRU (recurrentgemma) and diagonal-state updates.  Grid =
+(B, S/chunk) with the chunk axis innermost-sequential; the carry h lives
+in VMEM scratch and persists across chunks, so HBM traffic is exactly one
+read of (a, b) and one write of h -- the memory-roofline optimum for this
+memory-bound op.  Within a chunk the recurrence runs as a fori_loop over
+time steps on (D,)-vectors (VPU lanes); D blocks map to the lane axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 256
+
+
+def _scan_kernel(a_ref, b_ref, o_ref, h_scr, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    def step(t, h):
+        h = a_ref[t, :] * h + b_ref[t, :]
+        o_ref[t, :] = h
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+
+def linear_scan(a: jnp.ndarray, b: jnp.ndarray,
+                chunk: int = DEFAULT_CHUNK,
+                interpret: bool = False) -> jnp.ndarray:
+    """a, b: (B, S, D). Returns h with h_t = a_t h_{t-1} + b_t, h_0 = b_0."""
+    B, S, D = a.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, "pad sequence to the chunk size"
+    nc = S // chunk
+    kernel = functools.partial(_scan_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((None, chunk, D), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((None, chunk, D), lambda bi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk, D), lambda bi, ci: (bi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), a.dtype),
+        scratch_shapes=[pltpu.VMEM((D,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,40 @@
+"""Jit'd wrapper + custom VJP for the linear-scan kernel.
+
+Backward of h_t = a_t h_{t-1} + b_t:
+    db_t = g_t + a_{t+1} db_{t+1}      (reverse linear scan)
+    da_t = db_t * h_{t-1}
+so the backward reuses the SAME kernel on reversed inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import linear_scan as _kernel_scan
+from .ref import linear_scan_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def linear_scan(a, b, interpret: bool = False):
+    return _kernel_scan(a, b, interpret=interpret)
+
+
+def _fwd(a, b, interpret):
+    h = _kernel_scan(a, b, interpret=interpret)
+    return h, (a, h)
+
+
+def _bwd(interpret, res, g):
+    a, h = res
+    # reverse-scan: db_t = g_t + a_{t+1} db_{t+1}
+    a_next = jnp.concatenate([a[:, 1:], jnp.zeros_like(a[:, :1])], axis=1)
+    db = _kernel_scan(a_next[:, ::-1], g[:, ::-1],
+                      interpret=interpret)[:, ::-1]
+    h_prev = jnp.concatenate([jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
+    da = db * h_prev
+    return da, db
+
+
+linear_scan.defvjp(_fwd, _bwd)

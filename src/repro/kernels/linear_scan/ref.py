@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the chunked linear recurrence h_t = a_t h_{t-1} + b_t."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(a: jnp.ndarray, b: jnp.ndarray,
+                    h0: jnp.ndarray | None = None) -> jnp.ndarray:
+    """a, b: (B, S, D) fp32. Returns h: (B, S, D)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    B, S, D = a.shape
+    h0 = jnp.zeros((B, D), a.dtype) if h0 is None else h0
+    _, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2),
+                                    b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

@@ -1,0 +1,60 @@
+"""Pallas TPU batched expert matmul: (E, C, D) x (E, D, F) -> (E, C, F).
+
+This is the compute hot spot of the capacity-buffer MoE path (models/moe):
+each expert's token slab times its FFN weight.  Grid = (E, C/bc, F/bf,
+D/bd) with the contraction axis innermost; a VMEM fp32 accumulator
+persists across the D-steps.  Block shapes default to MXU-aligned 128s;
+the expert axis maps to the outer grid so an expert's weight tile streams
+HBM->VMEM once per (C-block, F-block) pair.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_scr):
+    di = pl.program_id(3)
+    nd = pl.num_programs(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(di == nd - 1)
+    def _finish():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def expert_matmul(buf: jnp.ndarray, w: jnp.ndarray,
+                  block_c: int = 128, block_f: int = 128,
+                  block_d: int = 128, interpret: bool = False) -> jnp.ndarray:
+    E, C, D = buf.shape
+    F = w.shape[2]
+    block_c, block_f, block_d = (min(block_c, C), min(block_f, F),
+                                 min(block_d, D))
+    assert C % block_c == 0 and F % block_f == 0 and D % block_d == 0
+    grid = (E, C // block_c, F // block_f, D // block_d)
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_c, block_d),
+                         lambda e, ci, fi, di: (e, ci, di)),
+            pl.BlockSpec((None, block_d, block_f),
+                         lambda e, ci, fi, di: (e, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((None, block_c, block_f),
+                               lambda e, ci, fi, di: (e, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), buf.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(buf, w)

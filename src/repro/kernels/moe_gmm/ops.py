@@ -1,0 +1,14 @@
+"""Jit'd wrapper for the expert matmul kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import expert_matmul
+from .ref import expert_matmul_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def expert_matmul_op(buf, w, interpret: bool = False):
+    return expert_matmul(buf, w, interpret=interpret)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the batched expert matmul (capacity-buffer MoE)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def expert_matmul_ref(buf: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """buf: (E, C, D); w: (E, D, F) -> (E, C, F), fp32 accumulation."""
+    out = jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return out.astype(buf.dtype)

@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init, and the dry-run needs 512 placeholder host devices
+# to build the production meshes.  (Do NOT set this in conftest/pyproject:
+# smoke tests and benches must see 1 device.)
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import (SHAPES, get_config, list_configs, resolve_for_tp,
+                           shape_applicable)
+from repro.distributed import sharding as shd
+from repro.launch.hlo_analysis import analyze_compiled
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.train.loop import make_train_step
+
+TP = 16
+
+
+def _dp_size(mesh) -> int:
+    s = 1
+    for a in dp_axes(mesh):
+        s *= mesh.shape[a]
+    return s
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               mode: str = "unroll", remat: str = "full",
+               fsdp: bool = True, donate: bool = True, accum: int = 1):
+    """Lower + compile one (arch x shape x mesh) cell; return result dict."""
+    from repro.models import attention as attn_mod
+    # NOTE (§Perf prefill iteration): statically-unrolled attention chunks
+    # with causal block skipping cut prefill dot-FLOPs ~31% (phi3: 8.25e13
+    # -> 5.69e13/dev) but all chunks' intermediates stay live until the
+    # final stack (peak 5.5 -> 21 GiB) -- net refuted on the XLA path; the
+    # Pallas flash kernel provides the skip without the blowup on TPU.
+    attn_mod.UNROLL_CHUNKS = (mode == "unroll")
+
+    shape = SHAPES[shape_name]
+    cfg = resolve_for_tp(get_config(arch), TP)
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "full-attention arch: long_500k inapplicable"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    model = build_model(cfg)
+    dp = dp_axes(mesh)
+    dp_total = _dp_size(mesh)
+    B = shape.global_batch
+    shardable = B % dp_total == 0
+    dp_spec = dp if shardable else None
+
+    t0 = time.time()
+    pshape = model.param_specs()
+    pspecs = shd.param_specs(cfg, pshape, TP, fsdp=fsdp and shape.is_train)
+    in_specs = model.input_specs(shape)
+    bspecs = shd.batch_specs(in_specs, dp_spec)
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            opt = AdamW(lr=3e-4)
+            oshape = jax.eval_shape(opt.init, pshape)
+            ospecs = shd.opt_specs(cfg, oshape, pspecs)
+            step = make_train_step(model, opt, mode=mode,
+                                   remat=remat != "none", accum=accum)
+            jitted = jax.jit(step,
+                             in_shardings=(pspecs, ospecs, bspecs),
+                             out_shardings=(pspecs, ospecs, None),
+                             donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(pshape, oshape, in_specs)
+        elif shape.kind == "prefill":
+            cshape = model.cache_specs(B, shape.seq_len)
+            cspecs = shd.cache_specs(cfg, cshape, dp_spec, TP, shardable)
+
+            def prefill_step(params, batch, cache):
+                return model.prefill(params, batch, cache, mode=mode)
+
+            jitted = jax.jit(prefill_step,
+                             in_shardings=(pspecs, bspecs, cspecs),
+                             out_shardings=(None, cspecs),
+                             donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(pshape, in_specs, cshape)
+        else:  # decode
+            # serving layout: per-layer (unstacked) cache buffers, unrolled
+            # execution -- in-place donated updates instead of whole-stack
+            # copies (EXPERIMENTS §Perf decode iteration)
+            cshape = model.cache_specs(B, shape.seq_len, stacked=False)
+            cspecs = shd.cache_specs(cfg, cshape, dp_spec, TP, shardable)
+
+            def decode_step(params, cache, tokens):
+                return model.decode_step(params, cache, tokens,
+                                         mode="unroll")
+
+            jitted = jax.jit(decode_step,
+                             in_shardings=(pspecs, cspecs, bspecs["tokens"]),
+                             out_shardings=(None, cspecs),
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(pshape, cshape, in_specs["tokens"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = analyze_compiled(compiled, n_dev)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": n_dev, "mode": mode, "remat": remat, "fsdp": fsdp,
+        "accum": accum,
+        "batch_shardable": shardable,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_est": ma.argument_size_in_bytes
+            + ma.temp_size_in_bytes + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        "cost_analysis": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+        "hlo": hlo,
+    }
+    print(f"[dryrun] {arch} x {shape_name} x "
+          f"{'multi' if multi_pod else 'single'}: "
+          f"compile {t_compile:.1f}s, "
+          f"peak/dev {result['memory']['peak_bytes_est']/2**30:.2f} GiB, "
+          f"flops/dev {result['cost_analysis']['flops']:.3e}, "
+          f"dot_flops/dev {hlo['dot_flops']:.3e}, "
+          f"coll/dev {hlo['total_collective_bytes']/2**20:.1f} MiB")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--mode", default="unroll", choices=["unroll", "scan"])
+    ap.add_argument("--remat", default="full", choices=["full", "none"])
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_configs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            tag = f"__{args.tag}" if args.tag else ""
+            fn = outdir / f"{args.mesh}__{arch}__{shape}{tag}.json"
+            if fn.exists() and not args.force:
+                print(f"[dryrun] skip existing {fn}")
+                continue
+            try:
+                res = lower_cell(arch, shape, args.mesh == "multi",
+                                 args.mode, args.remat,
+                                 fsdp=not args.no_fsdp,
+                                 donate=not args.no_donate,
+                                 accum=args.accum)
+                fn.write_text(json.dumps(res, indent=1))
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((arch, shape, str(e)[-300:]))
+    if failures:
+        print(f"[dryrun] FAILURES: {len(failures)}")
+        for f in failures:
+            print("  ", f[0], f[1], f[2][:160])
+        raise SystemExit(1)
+    print("[dryrun] all requested cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,278 @@
+"""Optimized-HLO text analysis: collective bytes + dot FLOPs, trip-count aware.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE (verified
+empirically, DESIGN §5.3), and collective traffic is not in cost_analysis
+at all.  This module parses ``compiled.as_text()`` (post-SPMD partitioning:
+per-device shapes, explicit collective ops) and:
+
+  * tabulates per-device wire bytes of every all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, using ring-algorithm
+    cost factors and the op's replica-group size;
+  * computes dot FLOPs from shapes + contracting dims;
+  * multiplies anything inside a `while` body by its
+    backend_config.known_trip_count, recursively through call/fusion sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->")
+# op lines are `%name = <type> <op>(...)`; <type> may be a tuple containing
+# spaces, commas and /*index=N*/ comments, so locate the first ` op(` token
+# after the `=` instead of pattern-matching the type directly.
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+_OPNAME_RE = re.compile(r"(?:^|\s)([a-z][\w\-]*)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def parse_type_bytes(t: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(t):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(t: str) -> Optional[tuple]:
+    m = _SHAPE_RE.search(t)
+    if not m:
+        return None
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+@dataclasses.dataclass
+class OpRecord:
+    kind: str
+    bytes_wire: float = 0.0
+    flops: float = 0.0
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    collective_bytes: Dict[str, float]
+    collective_counts: Dict[str, int]
+    dot_flops: float
+    # (callee, multiplier) pairs: while bodies carry trip counts
+    calls: List[tuple]
+    is_entry: bool = False
+    # f32-shipped wire bytes: the CPU host backend promotes bf16 matmuls
+    # to f32, so collectives adjacent to them ship f32; on the real bf16
+    # TPU target those flows are half as wide.  Tracked separately so the
+    # roofline can report a bf16-normalized collective term.
+    f32_bytes: float = 0.0
+    # HBM-traffic estimate: sum of operand+result bytes at FUSION
+    # boundaries (XLA's memory-traffic unit) and unfused ops; fusion
+    # interiors are excluded.  Gives a trip-count-aware memory term from
+    # scan-mode compiles (cost_analysis counts loop bodies once).
+    mem_bytes: float = 0.0
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))           # [num_groups, group_size]
+    m = _GROUPS_EXPL.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _wire_bytes(kind: str, line: str, result_type: str,
+                operand_shapes: List[int], n: int) -> float:
+    """Per-device wire bytes under ring algorithms."""
+    out_b = parse_type_bytes(result_type)
+    in_b = sum(operand_shapes) if operand_shapes else out_b
+    if n <= 1:
+        return 0.0
+    f = (n - 1) / n
+    if kind == "all-gather":
+        return out_b * f                 # receives (n-1)/n of the output
+    if kind == "all-reduce":
+        return 2.0 * in_b * f            # reduce-scatter + all-gather
+    if kind == "reduce-scatter":
+        return in_b * f
+    if kind == "all-to-all":
+        return in_b * f
+    if kind == "collective-permute":
+        return in_b
+    return 0.0
+
+
+def parse_hlo(text: str, n_devices: int) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    shapes: Dict[str, str] = {}
+    pending_starts: Dict[str, tuple] = {}
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.endswith("{"):
+            cur = Computation(hdr.group(1), defaultdict(float),
+                              defaultdict(int), 0.0, [],
+                              is_entry=line.startswith("ENTRY"))
+            comps[cur.name] = cur
+            shapes = {}
+            # parameter shapes from the signature
+            for pm in re.finditer(r"%?([\w\.\-]+):\s*((?:\([^)]*\))|(?:[\w\[\],]+))",
+                                  hdr.group(2)):
+                shapes[pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        m = _ASSIGN_RE.match(line)
+        if not m:
+            continue
+        name, body = m.groups()
+        om = _OPNAME_RE.search(body)
+        if not om:
+            continue
+        rtype = body[: om.start()].strip()
+        op = om.group(1)
+        rest = body[om.end():]
+        # keep operand scanning away from metadata/backend_config noise
+        meta_at = rest.find("metadata=")
+        if meta_at >= 0:
+            rest = rest[:meta_at]
+        shapes[name] = rtype
+        if op in ("while",):
+            trip = 1
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trip = int(tm.group(1))
+            bm = _BODY_RE.search(line)
+            cm = _COND_RE.search(line)
+            if bm:
+                cur.calls.append((bm.group(1), trip, "while"))
+            if cm:
+                cur.calls.append((cm.group(1), trip + 1, "while"))
+            continue
+        if op in ("fusion", "call", "custom-call", "reduce", "sort", "map",
+                  "conditional", "scatter", "select-and-scatter",
+                  "reduce-window", "async-start"):
+            kind = "call" if op in ("call", "conditional") else "fusion"
+            for cm in _CALLS_RE.finditer(line):
+                cur.calls.append((cm.group(1), 1, kind))
+        # HBM traffic at this op boundary (skip pure control/layout ops)
+        if op not in ("tuple", "get-tuple-element", "parameter", "bitcast",
+                      "constant", "after-all"):
+            b = parse_type_bytes(rtype)
+            for om in re.finditer(r"%([\w\.\-]+)", rest):
+                t = shapes.get(om.group(1))
+                if t:
+                    b += parse_type_bytes(t)
+            cur.mem_bytes += b
+        base = op.replace("-start", "").replace("-done", "")
+        if base in COLLECTIVES and not op.endswith("-done"):
+            operand_bytes = []
+            for om in re.finditer(r"%([\w\.\-]+)", rest):
+                t = shapes.get(om.group(1))
+                if t:
+                    operand_bytes.append(parse_type_bytes(t))
+            n = _group_size(line, n_devices)
+            wire = _wire_bytes(base, line, rtype, operand_bytes, n)
+            cur.collective_bytes[base] += wire
+            cur.collective_counts[base] += 1
+            if "f32[" in rtype:
+                cur.f32_bytes += wire
+        elif op == "dot":
+            out_dims = _shape_dims(rtype) or ()
+            lhs = re.search(r"%([\w\.\-]+)", rest)
+            cdim = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            k = 1
+            if lhs and cdim and shapes.get(lhs.group(1)):
+                ldims = _shape_dims(shapes[lhs.group(1)]) or ()
+                for ci in cdim.group(1).split(","):
+                    if ci and int(ci) < len(ldims):
+                        k *= ldims[int(ci)]
+            flops = 2.0 * k
+            for d in out_dims:
+                flops *= d
+            cur.dot_flops += flops
+    return comps
+
+
+def aggregate(comps: Dict[str, Computation], entry: Optional[str] = None):
+    """Roll up from the entry computation with while-trip multipliers."""
+    if entry is None:
+        marked = [n for n, c in comps.items() if c.is_entry]
+        if marked:
+            entry = marked[0]
+        else:   # fallback: a computation nobody calls
+            called = {c for comp in comps.values() for c, _ in comp.calls}
+            roots = [n for n in comps if n not in called]
+            entry = roots[0] if roots else next(iter(comps))
+
+    memo: Dict[str, tuple] = {}
+
+    def visit(name: str, depth=0) -> tuple:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None or depth > 50:
+            return {}, {}, 0.0, 0.0, 0.0
+        coll = dict(comp.collective_bytes)
+        counts = dict(comp.collective_counts)
+        flops = comp.dot_flops
+        f32b = comp.f32_bytes
+        memb = comp.mem_bytes
+        for call in comp.calls:
+            callee, mult = call[0], call[1]
+            kind = call[2] if len(call) > 2 else "call"
+            c2, n2, f2, fb2, mb2 = visit(callee, depth + 1)
+            for k, v in c2.items():
+                coll[k] = coll.get(k, 0.0) + mult * v
+            for k, v in n2.items():
+                counts[k] = counts.get(k, 0) + mult * v
+            flops += mult * f2
+            f32b += mult * fb2
+            if kind != "fusion":      # fusion interiors are not HBM traffic
+                memb += mult * mb2
+        memo[name] = (coll, counts, flops, f32b, memb)
+        return memo[name]
+
+    coll, counts, flops, f32b, memb = visit(entry)
+    total = float(sum(coll.values()))
+    return {"collective_bytes": coll, "collective_counts": counts,
+            "dot_flops": flops, "entry": entry,
+            "f32_collective_bytes": f32b,
+            # bf16-normalized: f32 flows halve on the bf16 TPU target
+            "collective_bytes_bf16norm": total - 0.5 * f32b,
+            "mem_bytes": memb}
+
+
+def analyze_compiled(compiled, n_devices: int) -> dict:
+    text = compiled.as_text()
+    comps = parse_hlo(text, n_devices)
+    agg = aggregate(comps)
+    agg["total_collective_bytes"] = float(
+        sum(agg["collective_bytes"].values()))
+    return agg

@@ -1,0 +1,4 @@
+"""Model zoo: layers, families, and the registry facade."""
+from .registry import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,338 @@
+"""Attention variants: GQA (full / sliding-window / local) and MLA.
+
+Three compute paths share one interface:
+  * direct   -- materialized scores; short sequences / decode.
+  * chunked  -- online-softmax over query chunks (jnp flash reference);
+               bounds live memory at long context.  This is also the oracle
+               for the Pallas flash kernel (kernels/flash_attention).
+  * pallas   -- TPU kernel (selected by ops-level flag; not used on CPU).
+
+Decode uses explicit caches: full attention keeps (B, S_max, kvH, hd) with a
+write cursor; SWA/local keep a ring buffer of the window; MLA caches the
+shared latent + rope key (absorbed-matmul decode path).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, apply_rope, causal_mask, dense_init, rmsnorm
+
+CHUNK_Q = 1024     # query chunk for the flash reference path
+DIRECT_MAX_S = 2048
+# Dry-run sets this so chunk loops unroll into the HLO (exact cost
+# accounting); production keeps the lax.map rolled form.
+UNROLL_CHUNKS = False
+
+
+# ---------------------------------------------------------------------------
+# core softmax-attention on (possibly grouped) heads
+# ---------------------------------------------------------------------------
+
+def _scores_mask(bias_mask: jnp.ndarray, scores: jnp.ndarray) -> jnp.ndarray:
+    neg = jnp.finfo(scores.dtype).min
+    return jnp.where(bias_mask, scores, neg)
+
+
+def grouped_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      mask: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """q: (B,Sq,Hq,dq)  k: (B,Sk,Hkv,dq)  v: (B,Sk,Hkv,dv); GQA grouping.
+
+    mask: broadcastable to (B, Hkv, g, Sq, Sk) from (Sq, Sk).
+    """
+    B, Sq, Hq, dq = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, dq)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = _scores_mask(mask, scores * scale)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return ctx.reshape(B, Sq, Hq, v.shape[-1])
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      scale: float, q_offset: int = 0,
+                      window: int = 0, chunk: int = CHUNK_Q,
+                      causal: bool = True) -> jnp.ndarray:
+    """Flash-style online softmax over query chunks (pure jnp).
+
+    Causal (+ optional sliding window) masking; memory O(chunk * Sk).
+    """
+    B, Sq, Hq, dq = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    chunk = min(chunk, Sq)
+    pad = (-Sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = q.shape[1] // chunk
+    qc = q.reshape(B, nq, chunk, Hkv, g, dq).transpose(1, 0, 2, 3, 4, 5)
+
+    k_pos = jnp.arange(Sk)
+
+    def one_chunk(ci, qi, k_blk=None, v_blk=None, k_lo=0):
+        k_blk = k if k_blk is None else k_blk
+        v_blk = v if v_blk is None else v_blk
+        kp = k_lo + jnp.arange(k_blk.shape[1])
+        q_pos = ci * chunk + jnp.arange(chunk) + q_offset
+        if causal:
+            mask = kp[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= kp[None, :] > q_pos[:, None] - window
+        else:
+            mask = jnp.ones((chunk, k_blk.shape[1]), bool)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qi,
+                            k_blk).astype(jnp.float32)
+        scores = _scores_mask(mask, scores * scale)
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        m = jnp.maximum(m, -1e30)
+        p = jnp.exp(scores - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        ctx = jnp.einsum("bkgst,btkd->bskgd",
+                         (p / jnp.maximum(l, 1e-30)).astype(v_blk.dtype),
+                         v_blk)
+        return ctx
+
+    if UNROLL_CHUNKS:
+        # STATIC causal block skipping: q-chunk ci only attends k-chunks
+        # whose positions can be <= its own (and within the window) -- the
+        # per-chunk k slice bounds are Python ints, so the wasted
+        # upper-triangle (and out-of-window prefix) work is never emitted
+        # into the HLO.  Matches the Pallas kernel's skip on the XLA path
+        # (EXPERIMENTS §Perf prefill iteration).
+        outs = []
+        for ci in range(nq):
+            if causal:
+                hi = min(Sk, (ci + 1) * chunk + q_offset)
+                lo = 0
+                if window > 0:
+                    lo = max(0, (ci * chunk + q_offset - window + 1)
+                             // chunk * chunk)
+            else:
+                lo, hi = 0, Sk
+            outs.append(one_chunk(ci, qc[ci], k[:, lo:hi], v[:, lo:hi], lo))
+        ctx = jnp.stack(outs)
+    else:
+        ctx = jax.lax.map(lambda args: one_chunk(*args),
+                          (jnp.arange(nq), qc))
+    ctx = ctx.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * chunk, Hq,
+                                                  v.shape[-1])
+    return ctx[:, :Sq]
+
+
+def attention_ctx(q, k, v, scale, q_offset=0, window=0, force_direct=False):
+    """Dispatch direct vs chunked on sequence length."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    if force_direct or max(Sq, Sk) <= DIRECT_MAX_S:
+        mask = causal_mask(Sq, Sk, q_offset, window)
+        return grouped_attention(q, k, v, mask, scale)
+    return chunked_attention(q, k, v, scale, q_offset, window)
+
+
+# ---------------------------------------------------------------------------
+# GQA projection block (full / swa / local)
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg) -> Params:
+    import numpy as np
+    dt = jnp.dtype(cfg.dtype)
+    H, Hkv, hd, D = cfg.heads, cfg.kv_heads, cfg.hd, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], D, H * hd, dt),
+         "wk": dense_init(ks[1], D, Hkv * hd, dt),
+         "wv": dense_init(ks[2], D, Hkv * hd, dt),
+         "wo": dense_init(ks[3], H * hd, D, dt)}
+    if getattr(cfg, "qk_norm", False) or cfg.name.startswith("qwen3"):
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    return p
+
+
+def _project_qkv(p: Params, cfg, x: jnp.ndarray, positions):
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.heads, cfg.kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, hd)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, hd)
+    if "q_norm" in p:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(p: Params, cfg, x: jnp.ndarray,
+                window: int = 0) -> jnp.ndarray:
+    """Training / prefill-without-cache forward."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    ctx = attention_ctx(q, k, v, cfg.hd ** -0.5, window=window)
+    return ctx.reshape(B, S, -1) @ p["wo"]
+
+
+def gqa_cache_init(cfg, batch: int, s_max: int, window: int, dtype) -> Params:
+    Hkv, hd = cfg.kv_heads, cfg.hd
+    s_buf = min(window, s_max) if window else s_max
+    shape = (batch, s_buf, Hkv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_prefill(p: Params, cfg, x: jnp.ndarray, cache: Params,
+                window: int = 0):
+    """Prefill: forward + populate the cache; returns (out, cache)."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    ctx = attention_ctx(q, k, v, cfg.hd ** -0.5, window=window)
+    s_buf = cache["k"].shape[1]
+    if S >= s_buf:       # keep last s_buf entries (ring semantics)
+        cache = {"k": k[:, -s_buf:], "v": v[:, -s_buf:]}
+    else:
+        cache = {"k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
+                 "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1)}
+    return ctx.reshape(B, S, -1) @ p["wo"], cache
+
+
+def gqa_decode(p: Params, cfg, x: jnp.ndarray, cache: Params,
+               pos: jnp.ndarray, window: int = 0):
+    """One-token decode with KV cache. x: (B, 1, D); pos: scalar int32."""
+    B = x.shape[0]
+    positions = pos[None, None]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    s_buf = cache["k"].shape[1]
+    slot = jnp.mod(pos, s_buf) if window else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+    # positions of cache entries: ring for window, prefix for full
+    idx = jnp.arange(s_buf)
+    if window:
+        entry_pos = jnp.where(idx <= slot, pos - slot + idx,
+                              pos - slot + idx - s_buf)
+        valid = entry_pos >= jnp.maximum(0, pos - window + 1)
+        valid &= entry_pos >= 0
+    else:
+        valid = idx <= pos
+    Hkv, hd = cfg.kv_heads, cfg.hd
+    H = cfg.heads
+    g = H // Hkv
+    qg = q.reshape(B, 1, Hkv, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, ck).astype(jnp.float32)
+    scores = _scores_mask(valid[None, None, None, None, :],
+                          scores * cfg.hd ** -0.5)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, cv).reshape(B, 1, H * hd)
+    return ctx @ p["wo"], {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    D, H = cfg.d_model, cfg.heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], D, qr, dt),
+        "q_norm": jnp.zeros((qr,), dt),
+        "wq_b": dense_init(ks[1], qr, H * (dn + dr), dt),
+        "wkv_a": dense_init(ks[2], D, kvr + dr, dt),
+        "kv_norm": jnp.zeros((kvr,), dt),
+        "wk_b": dense_init(ks[3], kvr, H * dn, dt),   # latent -> k_nope
+        "wv_b": dense_init(ks[4], kvr, H * dv, dt),   # latent -> v
+        "wo": dense_init(ks[5], H * dv, D, dt),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = rmsnorm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, cfg, x, positions):
+    B, S, _ = x.shape
+    kvr, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kv = x @ p["wkv_a"]
+    latent = rmsnorm(kv[..., :kvr], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., kvr:].reshape(B, S, 1, dr), positions,
+                        cfg.rope_theta)
+    return latent, k_rope
+
+
+def mla_forward(p: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    """Train/prefill: expand per-head K/V from the latent (standard form)."""
+    B, S, _ = x.shape
+    H, dn, dr, dv = cfg.heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    positions = jnp.arange(S)[None, :]
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    latent, k_rope = _mla_latent(p, cfg, x, positions)
+    k_nope = (latent @ p["wk_b"]).reshape(B, S, H, dn)
+    v = (latent @ p["wv_b"]).reshape(B, S, H, dv)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], -1)
+    ctx = attention_ctx(q, k, v, (dn + dr) ** -0.5)
+    return ctx.reshape(B, S, -1) @ p["wo"]
+
+
+def mla_cache_init(cfg, batch: int, s_max: int, dtype) -> Params:
+    return {"latent": jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, s_max, cfg.qk_rope_dim), dtype)}
+
+
+def mla_prefill(p: Params, cfg, x: jnp.ndarray, cache: Params):
+    B, S, _ = x.shape
+    out = mla_forward(p, cfg, x)
+    positions = jnp.arange(S)[None, :]
+    latent, k_rope = _mla_latent(p, cfg, x, positions)
+    cache = {"latent": jax.lax.dynamic_update_slice_in_dim(
+                 cache["latent"], latent, 0, 1),
+             "k_rope": jax.lax.dynamic_update_slice_in_dim(
+                 cache["k_rope"], k_rope[:, :, 0, :], 0, 1)}
+    return out, cache
+
+
+def mla_decode(p: Params, cfg, x: jnp.ndarray, cache: Params,
+               pos: jnp.ndarray):
+    """Absorbed decode: scores/context computed in latent space.
+
+    cache: latent (B, S, kvr), k_rope (B, S, dr).
+    """
+    B = x.shape[0]
+    H, dn, dr, dv = cfg.heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    positions = pos[None, None]
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)       # (B,1,H,dn),(B,1,H,dr)
+    latent_new, k_rope_new = _mla_latent(p, cfg, x, positions)
+    cache = {"latent": jax.lax.dynamic_update_slice_in_dim(
+                 cache["latent"], latent_new, pos, 1),
+             "k_rope": jax.lax.dynamic_update_slice_in_dim(
+                 cache["k_rope"], k_rope_new[:, :, 0, :], pos, 1)}
+    latent, k_rope = cache["latent"], cache["k_rope"]
+    S = latent.shape[1]
+    # absorb wk_b into q:  q_eff (B,H,kvr)
+    wk = p["wk_b"].reshape(kvr, H, dn)
+    q_eff = jnp.einsum("bhd,khd->bhk", q_nope[:, 0], wk)
+    scores = (jnp.einsum("bhk,bsk->bhs", q_eff, latent) +
+              jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], k_rope)
+              ).astype(jnp.float32)
+    scores *= (dn + dr) ** -0.5
+    valid = jnp.arange(S)[None, None, :] <= pos
+    scores = jnp.where(valid, scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(latent.dtype)
+    ctx_latent = jnp.einsum("bhs,bsk->bhk", probs, latent)   # (B,H,kvr)
+    wv = p["wv_b"].reshape(kvr, H, dv)
+    ctx = jnp.einsum("bhk,khd->bhd", ctx_latent, wv)
+    out = ctx.reshape(B, 1, H * dv) @ p["wo"]
+    return out, cache

@@ -1,0 +1,152 @@
+"""Shared model building blocks (pure-functional, dict-of-arrays params)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+Params = Dict[str, Any]
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype,
+               scale: float | None = None) -> jnp.ndarray:
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6
+            ) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+              eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * (1.0 + gamma.astype(jnp.float32)) + beta.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi_gate": dense_init(k1, d_model, d_ff, dtype),
+            "wi_up": dense_init(k2, d_model, d_ff, dtype),
+            "wo": dense_init(k3, d_ff, d_model, dtype)}
+
+
+def swiglu(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    gate = jax.nn.silu(x @ p["wi_gate"])
+    return (gate * (x @ p["wi_up"])) @ p["wo"]
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"wi": dense_init(k1, d_model, d_ff, dtype),
+            "wo": dense_init(k2, d_ff, d_model, dtype)}
+
+
+def gelu_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x @ p["wi"]) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 weights: jnp.ndarray | None = None,
+                 z_loss: float = 0.0) -> jnp.ndarray:
+    """Mean cross entropy in fp32; optional z-loss regularizer.
+
+    The label log-prob is extracted with a one-hot contraction rather than
+    take_along_axis: a gather along a vocab-sharded logits axis would force
+    GSPMD to all-gather the full logits; the contraction keeps the vocab
+    axis sharded and reduces with a cheap psum.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    ll = jnp.sum(logits * onehot, axis=-1)
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse ** 2
+    if weights is None:
+        return jnp.mean(loss)
+    w = weights.astype(jnp.float32)
+    return jnp.sum(loss * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers
+# ---------------------------------------------------------------------------
+
+def tree_index(tree, i):
+    """Select index i along the leading (stacked-layer) axis of every leaf."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def tree_stack_shape(tree):
+    return jax.tree.map(lambda x: x.shape, tree)
+
+
+def causal_mask(s_q: int, s_k: int, q_offset: int = 0,
+                window: int = 0) -> jnp.ndarray:
+    """(s_q, s_k) boolean mask. window>0 => sliding window attention."""
+    q_pos = jnp.arange(s_q)[:, None] + q_offset
+    k_pos = jnp.arange(s_k)[None, :]
+    mask = k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    return mask

@@ -1,0 +1,282 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-bounded dispatch.
+
+Dispatch is sort-based (production JAX style): tokens' (token, expert)
+pairs are bucketed into per-expert capacity slots via a stable sort +
+within-expert ranking, scattered into an (E, C, D) buffer, processed by a
+batched expert matmul (einsum 'ecd,edf->ecf'), and combined back weighted
+by router probabilities.  Per-expert compute therefore equals
+active-tokens x capacity_factor -- the honest MoE cost (no dense-E
+overcompute).  Under expert parallelism, the scatter/gather across the
+token-sharded -> expert-sharded boundary is where GSPMD inserts the
+all-to-all (visible in the dry-run HLO; see EXPERIMENTS §Roofline).
+
+The Pallas grouped-matmul kernel (kernels/moe_gmm) covers the
+sorted-ragged path on TPU; this module is its semantic reference at the
+model level.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name as _ckpt_name
+
+from .common import Params, dense_init
+
+
+# Dispatch implementation: 'auto' picks the shard_map all-to-all EP path
+# under a multi-device mesh (train/prefill), falling back to the global
+# scatter path (decode / single device).  The perf harness pins 'scatter'
+# to measure the baseline (EXPERIMENTS §Perf).
+MOE_IMPL = "auto"
+
+
+def moe_init(key, cfg) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    import numpy as np
+    scale = 1.0 / np.sqrt(D)
+    return {
+        "router": dense_init(ks[0], D, E, jnp.float32),
+        "wi_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32)
+                    * scale).astype(dt),
+        "wi_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32)
+                  * scale).astype(dt),
+        "wo": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+               * (1.0 / np.sqrt(F))).astype(dt),
+    }
+
+
+def _capacity(n_tokens: int, cfg) -> int:
+    c = int(n_tokens * cfg.experts_per_token * cfg.capacity_factor
+            / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)   # round up to 8
+
+
+def moe_apply(p: Params, cfg, x: jnp.ndarray):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    Dispatches to the shard_map expert-parallel path when profitable.
+    """
+    if MOE_IMPL != "scatter":
+        try:
+            mesh = jax.sharding.get_abstract_mesh()
+        except Exception:
+            mesh = None
+        if (mesh is not None and not mesh.empty
+                and "model" in mesh.axis_names
+                and dict(mesh.shape)["model"] > 1
+                and x.shape[1] % dict(mesh.shape)["model"] == 0
+                and x.shape[1] > 1):
+            return moe_apply_a2a(p, cfg, x, mesh)
+    return moe_apply_scatter(p, cfg, x)
+
+
+def moe_apply_scatter(p: Params, cfg, x: jnp.ndarray):
+    """Global sort + scatter dispatch (baseline; also the decode path)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    C = _capacity(T, cfg)
+    xf = x.reshape(T, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                   # (T, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                             # (E,)
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # --- slotting: rank of each (token, k) within its expert --------------
+    flat_e = top_e.reshape(-1)                               # (T*K,)
+    order = jnp.argsort(flat_e, stable=True)                 # sorted by expert
+    # rank within expert for the sorted order
+    sorted_e = flat_e[order]
+    seg_starts = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32),
+         jnp.cumsum(jnp.bincount(sorted_e, length=E).astype(jnp.int32))[:-1]])
+    ranks_sorted = jnp.arange(T * K, dtype=jnp.int32) - seg_starts[sorted_e]
+    ranks = jnp.zeros(T * K, jnp.int32).at[order].set(ranks_sorted)
+    keep = ranks < C                                         # overflow drops
+    slot = jnp.where(keep, flat_e * C + ranks, E * C)        # E*C = trash row
+
+    # --- dispatch ----------------------------------------------------------
+    from repro.distributed.sharding import BATCH_AXES, maybe_shard
+    ep = "model"                 # expert-parallel axis when E divides
+    src = jnp.repeat(xf, K, axis=0)                          # (T*K, D)
+    src = maybe_shard(src, BATCH_AXES, None)
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].add(src)
+    buf = buf[: E * C].reshape(E, C, D)
+    # expert-major buffer: E over 'model' (EP) when divisible, else TP stays
+    # inside each expert's FFN dims; capacity over the batch axes.
+    buf = maybe_shard(buf, ep, BATCH_AXES, None)
+
+    # --- expert FFN (SwiGLU), batched over experts -------------------------
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"]))
+    up = jnp.einsum("ecd,edf->ecf", buf, p["wi_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", gate * up, p["wo"])
+    out_buf = maybe_shard(out_buf, ep, BATCH_AXES, None)
+
+    # --- combine -----------------------------------------------------------
+    out_flat = out_buf.reshape(E * C, D)
+    gathered = jnp.where(keep[:, None],
+                         out_flat[jnp.minimum(slot, E * C - 1)], 0.0)
+    weighted = gathered * top_p.reshape(-1, 1).astype(x.dtype)
+    out = weighted.reshape(T, K, D).sum(axis=1)
+    return out.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# shard_map expert-parallel dispatch (production path)
+# ---------------------------------------------------------------------------
+
+def _local_rank_in_expert(flat_e: jnp.ndarray, E: int):
+    """Rank of each (token,k) entry within its expert, computed locally."""
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_starts = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32),
+         jnp.cumsum(jnp.bincount(sorted_e, length=E).astype(jnp.int32))[:-1]])
+    ranks_sorted = jnp.arange(n, dtype=jnp.int32) - seg_starts[sorted_e]
+    return jnp.zeros(n, jnp.int32).at[order].set(ranks_sorted)
+
+
+def moe_apply_a2a(p: Params, cfg, x: jnp.ndarray, mesh):
+    """Expert parallelism over 'model' via shard_map + all_to_all.
+
+    Tokens stay on their (pod, data, model-seq) shard; each device routes
+    its local tokens, packs per-expert send buffers with LOCAL capacity,
+    exchanges them with one all_to_all over the model axis (each model
+    rank owns E/tp experts, padded to divisibility with -inf-routed dummy
+    experts), runs the expert FFN with FSDP-gathered weights, and reverses
+    the exchange.  This replaces the GSPMD-inferred resharding of the
+    scatter path with the minimal collective pattern (EXPERIMENTS §Perf).
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+    from repro.distributed.sharding import BATCH_AXES
+
+    sizes = dict(mesh.shape)
+    tp = sizes["model"]
+    dpb = tuple(a for a in BATCH_AXES if a in sizes and sizes[a] > 1) or None
+    all_axes = tuple(a for a in ("pod", "data", "model") if a in sizes)
+    E, K, D = cfg.n_experts, cfg.experts_per_token, cfg.d_model
+    E_pad = -(-E // tp) * tp
+    E_loc = E_pad // tp
+    ep = E % tp == 0           # expert weights sharded over model?
+    wspec_i = P("model", "data", None) if ep else P(None, "data", "model")
+    wspec_o = P("model", None, "data") if ep else P(None, "model", "data")
+    batch_ok = dpb is not None and x.shape[0] % math_prod(
+        [sizes[a] for a in (dpb if isinstance(dpb, tuple) else (dpb,))]) == 0
+    xspec = P(dpb if batch_ok else None, "model", None)
+
+    def local(x_loc, router, wi_g, wi_u, wo):
+        b, s, _ = x_loc.shape
+        t = b * s
+        xf = x_loc.reshape(t, D)
+        logits = xf.astype(jnp.float32) @ router          # (t, E)
+        if E_pad > E:
+            logits = jnp.pad(logits, ((0, 0), (0, E_pad - E)),
+                             constant_values=-1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, K)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+        # globally-exact load-balance loss: average the per-expert vectors
+        # across shards BEFORE the product (== the unsharded computation)
+        me = jax.lax.pmean(jnp.mean(probs[:, :E], axis=0), all_axes)
+        ce = jax.lax.pmean(
+            jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), 0),
+            all_axes)
+        aux = E * jnp.sum(me * ce)
+
+        c_send = max(4, -(-int(t * K * cfg.capacity_factor / E_pad) // 4) * 4)
+        flat_e = top_e.reshape(-1)
+        ranks = _local_rank_in_expert(flat_e, E_pad)
+        keep = ranks < c_send
+        slot = jnp.where(keep, flat_e * c_send + ranks, E_pad * c_send)
+        src = jnp.repeat(xf, K, axis=0)
+        send = jnp.zeros((E_pad * c_send + 1, D), x.dtype).at[slot].add(src)
+        send = send[:-1].reshape(tp, E_loc * c_send, D)
+        recv = jax.lax.all_to_all(send, "model", split_axis=0,
+                                  concat_axis=0, tiled=False)
+        # recv[j] = my experts' tokens from model-peer j
+        buf = recv.reshape(tp, E_loc, c_send, D).transpose(1, 0, 2, 3)
+        buf = buf.reshape(E_loc, tp * c_send, D)
+        buf = _ckpt_name(buf, "moe_buf")
+        # FSDP gather of this rank's expert weights over 'data'
+        wg = jax.lax.all_gather(wi_g, "data", axis=1, tiled=True)
+        wu = jax.lax.all_gather(wi_u, "data", axis=1, tiled=True)
+        wod = jax.lax.all_gather(wo, "data", axis=2, tiled=True)
+        if not ep:
+            # E not divisible by tp: weights arrive with F sharded over
+            # 'model'; gather F, pad E -> E_pad with zero (dummy) experts,
+            # then slice this rank's E_loc experts by axis index.
+            m_idx = jax.lax.axis_index("model")
+            wg = jax.lax.all_gather(wg, "model", axis=2, tiled=True)
+            wu = jax.lax.all_gather(wu, "model", axis=2, tiled=True)
+            wod = jax.lax.all_gather(wod, "model", axis=1, tiled=True)
+            padE = E_pad - E
+            wg = jnp.pad(wg, ((0, padE), (0, 0), (0, 0)))
+            wu = jnp.pad(wu, ((0, padE), (0, 0), (0, 0)))
+            wod = jnp.pad(wod, ((0, padE), (0, 0), (0, 0)))
+            wg = jax.lax.dynamic_slice_in_dim(wg, m_idx * E_loc, E_loc, 0)
+            wu = jax.lax.dynamic_slice_in_dim(wu, m_idx * E_loc, E_loc, 0)
+            wod = jax.lax.dynamic_slice_in_dim(wod, m_idx * E_loc, E_loc, 0)
+        gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg))
+        up = jnp.einsum("ecd,edf->ecf", buf, wu)
+        out_buf = jnp.einsum("ecf,efd->ecd", gate * up, wod)
+        out_buf = _ckpt_name(out_buf, "moe_out")
+        back = out_buf.reshape(E_loc, tp, c_send, D).transpose(1, 0, 2, 3)
+        back = back.reshape(tp, E_loc * c_send, D)
+        out_send = jax.lax.all_to_all(back, "model", split_axis=0,
+                                      concat_axis=0, tiled=False)
+        out_flat = out_send.reshape(E_pad * c_send, D)
+        gathered = jnp.where(keep[:, None],
+                             out_flat[jnp.minimum(slot, E_pad * c_send - 1)],
+                             0.0)
+        weighted = gathered * top_p.reshape(-1, 1).astype(x.dtype)
+        out = weighted.reshape(t, K, D).sum(axis=1)
+        return out.reshape(b, s, D), aux
+
+    router = p["router"]
+    out, aux = shard_map(
+        local, mesh=mesh,
+        in_specs=(xspec, P(None, None), wspec_i, wspec_i, wspec_o),
+        out_specs=(xspec, P()),
+        check_vma=False,
+    )(x, router, p["wi_gate"], p["wi_up"], p["wo"])
+    return out, aux
+
+
+def math_prod(xs):
+    out = 1
+    for v in xs:
+        out *= v
+    return out
+
+
+def moe_apply_dense_ref(p: Params, cfg, x: jnp.ndarray):
+    """O(E * T) reference: every expert processes every token, masked.
+
+    Used only in tests to validate the dispatch path (no capacity drops
+    when capacity_factor is large enough).
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    xf = x.reshape(-1, D)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    gate = jax.nn.silu(jnp.einsum("td,edf->tef", xf, p["wi_gate"]))
+    up = jnp.einsum("td,edf->tef", xf, p["wi_up"])
+    every = jnp.einsum("tef,efd->ted", gate * up, p["wo"])   # (T, E, D)
+    mask = jnp.zeros((xf.shape[0], E), jnp.float32)
+    mask = jax.vmap(lambda m, e, pr: m.at[e].add(pr))(mask, top_e, top_p)
+    out = jnp.einsum("ted,te->td", every, mask.astype(x.dtype))
+    return out.reshape(B, S, D)

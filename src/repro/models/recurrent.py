@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Temporal mixing:  y = W_out( GeLU(W_gate x) * RGLRU(conv1d(W_in x)) )
+RG-LRU cell:      r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+                  a_t = exp(-c * softplus(Lambda) * r_t)          (c = 8)
+                  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The linear recurrence runs as a jax.lax.associative_scan (log-depth on
+TPU); the Pallas chunked kernel (kernels/linear_scan) implements the same
+a/b recurrence for the hot path and is validated against this module.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Params, dense_init
+
+RGLRU_C = 8.0
+
+
+def rglru_init(key, cfg) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    D, R, W = cfg.d_model, cfg.lru_width, cfg.conv_width
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a in [0.9, 0.999] at r=1 (Griffin appendix)
+    u = jax.random.uniform(ks[0], (R,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * RGLRU_C)))   # softplus^-1
+    return {
+        "w_in": dense_init(ks[1], D, R, dt),
+        "w_gate": dense_init(ks[2], D, R, dt),
+        "conv_w": (jax.random.normal(ks[3], (W, R), jnp.float32)
+                   / np.sqrt(W)).astype(dt),
+        "w_a": dense_init(ks[4], R, R, dt),
+        "w_x": dense_init(ks[5], R, R, dt),
+        "lambda": lam,                       # (R,) fp32
+        "w_out": dense_init(jax.random.fold_in(key, 7), R, D, dt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv over time. x: (B,S,R), w: (W,R).
+
+    state: (B, W-1, R) previous inputs for decode; returns (y, new_state).
+    """
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)             # (B, S+W-1, R)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else jnp.zeros_like(pad)
+    return y, new_state
+
+
+def _rglru_coeffs(p: Params, cfg, u: jnp.ndarray):
+    """u: conv output (B,S,R) -> per-step (a, b) of h = a*h + b."""
+    r = jax.nn.sigmoid((u @ p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ p["w_x"]).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lambda"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def linear_recurrence(a: jnp.ndarray, b: jnp.ndarray,
+                      h0: jnp.ndarray | None = None) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + b_t along axis 1 via associative scan (fp32)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_forward(p: Params, cfg, x: jnp.ndarray,
+                  use_kernel: bool = False) -> jnp.ndarray:
+    """Full temporal-mix branch for train/prefill. x: (B, S, D)."""
+    u = x @ p["w_in"]
+    u, _ = _causal_conv(u, p["conv_w"])
+    a, b = _rglru_coeffs(p, cfg, u)
+    if use_kernel:
+        from repro.kernels.linear_scan import ops as ls_ops
+        h = ls_ops.linear_scan(a, b)
+    else:
+        h = linear_recurrence(a, b)
+    h = h.astype(x.dtype)
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    return (gate * h) @ p["w_out"]
+
+
+def rglru_cache_init(cfg, batch: int, dtype) -> Params:
+    R, W = cfg.lru_width, cfg.conv_width
+    return {"h": jnp.zeros((batch, R), jnp.float32),
+            "conv": jnp.zeros((batch, W - 1, R), dtype)}
+
+
+def rglru_decode(p: Params, cfg, x: jnp.ndarray, cache: Params):
+    """Single-step decode. x: (B, 1, D)."""
+    u = x @ p["w_in"]
+    u, conv_state = _causal_conv(u, p["conv_w"], cache["conv"])
+    a, b = _rglru_coeffs(p, cfg, u)                     # (B,1,R)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    out = (gate * h[:, None].astype(x.dtype)) @ p["w_out"]
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,101 @@
+"""Model facade: uniform init / loss / prefill / decode across families.
+
+``input_specs`` produces ShapeDtypeStruct stand-ins for every model input
+of an (arch x shape) cell -- weak-type-correct, shardable, no device
+allocation -- consumed by the multi-pod dry-run and the benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import encdec as encdec_mod
+from . import transformer as tf_mod
+
+# decoder prefix length used when prefilling an encoder-decoder model
+ENCDEC_PREFILL_TGT = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- parameters ---------------------------------------------------------
+
+    def init(self, key) -> Any:
+        if self.cfg.family == "encdec":
+            return encdec_mod.init_encdec_params(self.cfg, key)
+        return tf_mod.init_lm_params(self.cfg, key)
+
+    def param_specs(self) -> Any:
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+    # -- train --------------------------------------------------------------
+
+    def loss(self, params, batch, mode: str = "scan", remat: bool = False):
+        if self.cfg.family == "encdec":
+            return encdec_mod.encdec_loss(params, self.cfg, batch, mode, remat)
+        return tf_mod.lm_loss(params, self.cfg, batch, mode, remat)
+
+    # -- serve ---------------------------------------------------------------
+
+    def init_cache(self, batch: int, s_max: int, stacked: bool = True):
+        if self.cfg.family == "encdec":
+            return encdec_mod.encdec_cache_init(self.cfg, batch, s_max)
+        return tf_mod.init_cache(self.cfg, batch, s_max, stacked)
+
+    def cache_specs(self, batch: int, s_max: int, stacked: bool = True):
+        return jax.eval_shape(lambda: self.init_cache(batch, s_max, stacked))
+
+    def prefill(self, params, batch, cache, mode: str = "unroll"):
+        if self.cfg.family == "encdec":
+            return encdec_mod.encdec_prefill(params, self.cfg, batch, cache,
+                                             mode)
+        return tf_mod.lm_prefill(params, self.cfg, batch, cache, mode)
+
+    def decode_step(self, params, cache, tokens, mode: str = "unroll"):
+        if self.cfg.family == "encdec":
+            return encdec_mod.encdec_decode_step(params, self.cfg, cache,
+                                                 tokens, mode)
+        return tf_mod.lm_decode_step(params, self.cfg, cache, tokens, mode)
+
+    # -- dry-run input specs --------------------------------------------------
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+        emb = functools.partial(jax.ShapeDtypeStruct,
+                                dtype=jnp.dtype(cfg.dtype))
+        if cfg.family == "encdec":
+            if shape.kind == "train":
+                s = S // 2
+                return {"frame_embeds": emb((B, s, cfg.d_model)),
+                        "tokens": i32((B, s)), "labels": i32((B, s))}
+            if shape.kind == "prefill":
+                return {"frame_embeds": emb((B, S, cfg.d_model)),
+                        "tokens": i32((B, ENCDEC_PREFILL_TGT))}
+            return {"tokens": i32((B, 1))}
+        if cfg.frontend == "vision":
+            F = cfg.n_frontend_tokens
+            if shape.kind == "train":
+                return {"tokens": i32((B, S - F)), "labels": i32((B, S - F)),
+                        "image_embeds": emb((B, F, cfg.d_model))}
+            if shape.kind == "prefill":
+                return {"tokens": i32((B, S - F)),
+                        "image_embeds": emb((B, F, cfg.d_model))}
+            return {"tokens": i32((B, 1))}
+        if shape.kind == "train":
+            return {"tokens": i32((B, S)), "labels": i32((B, S))}
+        if shape.kind == "prefill":
+            return {"tokens": i32((B, S))}
+        return {"tokens": i32((B, 1))}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,455 @@
+"""Decoder-LM assembly for all LM-family architectures.
+
+Layers are grouped into repeating "periods" (the block pattern of hybrid
+archs; period 1 for homogeneous stacks).  Parameters are stored as
+  params["body"] = {"b<i>": block-params stacked over n_periods}   (scanned)
+  params["tail"] = {"t<i>": block-params}                          (unrolled)
+so the SAME pytree serves both execution modes:
+  * mode="scan"   -- lax.scan over periods (production: fast compiles,
+                     remat-friendly);
+  * mode="unroll" -- Python loop (dry-run: exact per-op cost accounting,
+                     cf. DESIGN §5.3).
+Caches for prefill/decode mirror the same layout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import recurrent as rec_mod
+from . import xlstm as xlstm_mod
+from .common import (Params, dense_init, embed_init, rmsnorm, softmax_xent,
+                     swiglu, swiglu_init, tree_index)
+
+
+# ---------------------------------------------------------------------------
+# layer plan
+# ---------------------------------------------------------------------------
+
+def layer_plan(cfg):
+    kinds = cfg.layer_kinds()
+    if cfg.block_pattern:
+        p = len(cfg.block_pattern)
+    elif cfg.slstm_every:
+        p = cfg.slstm_every
+    else:
+        p = 1
+    full = cfg.n_layers // p
+    tail = kinds[full * p:]
+    return kinds[:p], full, tail
+
+
+# ---------------------------------------------------------------------------
+# block init / apply by kind
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg, kind: str) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    D = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind == "attn":
+        p = {"ln1": jnp.zeros((D,), dt), "attn": attn.gqa_init(k1, cfg),
+             "ln2": jnp.zeros((D,), dt)}
+        p["mlp"] = (moe_mod.moe_init(k2, cfg) if cfg.is_moe
+                    else swiglu_init(k2, D, cfg.d_ff, dt))
+        return p
+    if kind == "mla":
+        return {"ln1": jnp.zeros((D,), dt), "attn": attn.mla_init(k1, cfg),
+                "ln2": jnp.zeros((D,), dt),
+                "mlp": swiglu_init(k2, D, cfg.d_ff, dt)}
+    if kind == "rec":
+        return {"ln1": jnp.zeros((D,), dt), "rec": rec_mod.rglru_init(k1, cfg),
+                "ln2": jnp.zeros((D,), dt),
+                "mlp": swiglu_init(k2, D, cfg.d_ff, dt)}
+    if kind == "mlstm":
+        return {"ln": jnp.zeros((D,), dt), "cell": xlstm_mod.mlstm_init(k1, cfg)}
+    if kind == "slstm":
+        return {"ln": jnp.zeros((D,), dt), "cell": xlstm_mod.slstm_init(k1, cfg)}
+    raise ValueError(kind)
+
+
+def _resolve_kind(cfg, kind: str) -> str:
+    if kind == "attn" and cfg.attn_kind == "mla":
+        return "mla"
+    return kind
+
+
+def _sp_gather(x):
+    """Megatron-SP boundary: gather the sequence axis on the bf16 normed
+    activation right before temporal mixing (attention / recurrence).
+    Placing the constraint HERE (post-norm, model dtype) keeps the
+    all-gather at bf16 width instead of GSPMD hoisting it into the norm's
+    f32 interior (EXPERIMENTS §Perf internvl2 iteration 1)."""
+    from repro.distributed.sharding import BATCH_AXES, maybe_shard
+    return maybe_shard(x, BATCH_AXES, None, None)
+
+
+def _sp_scatter(y):
+    """Re-shard the temporal-mix output back to sequence-parallel: the o-proj
+    partial sums become a reduce-scatter instead of a full all-reduce."""
+    from repro.distributed.sharding import shard_residual
+    return shard_residual(y)
+
+
+def _block_fwd(p: Params, cfg, kind: str, h: jnp.ndarray, aux: jnp.ndarray):
+    """Training / no-cache forward of one block.
+
+    The residual stream h stays sequence-sharded (SP); only the temporal
+    mix gathers.  The MLP is position-wise and runs entirely seq-local.
+    """
+    if kind in ("attn", "mla"):
+        window = cfg.window if cfg.attn_kind == "swa" or cfg.block_pattern \
+            else 0
+        x = _sp_gather(rmsnorm(h, p["ln1"], cfg.norm_eps))
+        if kind == "mla":
+            y = attn.mla_forward(p["attn"], cfg, x)
+        else:
+            y = attn.gqa_forward(p["attn"], cfg, x, window=window)
+        h = h + _sp_scatter(y)
+        x = rmsnorm(h, p["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, a = moe_mod.moe_apply(p["mlp"], cfg, x)
+            aux = aux + a
+        else:
+            y = swiglu(p["mlp"], x)
+        return h + _sp_scatter(y), aux
+    if kind == "rec":
+        x = _sp_gather(rmsnorm(h, p["ln1"], cfg.norm_eps))
+        h = h + _sp_scatter(rec_mod.rglru_forward(p["rec"], cfg, x))
+        y = swiglu(p["mlp"], rmsnorm(h, p["ln2"], cfg.norm_eps))
+        return h + _sp_scatter(y), aux
+    if kind == "mlstm":
+        x = _sp_gather(rmsnorm(h, p["ln"], cfg.norm_eps))
+        return h + _sp_scatter(
+            xlstm_mod.mlstm_forward(p["cell"], cfg, x)), aux
+    if kind == "slstm":
+        x = _sp_gather(rmsnorm(h, p["ln"], cfg.norm_eps))
+        return h + _sp_scatter(
+            xlstm_mod.slstm_forward(p["cell"], cfg, x)), aux
+    raise ValueError(kind)
+
+
+# -- cache-aware paths -------------------------------------------------------
+
+def _block_cache_init(cfg, kind: str, batch: int, s_max: int, dtype):
+    if kind == "attn":
+        window = cfg.window if cfg.attn_kind == "swa" or cfg.block_pattern \
+            else 0
+        return attn.gqa_cache_init(cfg, batch, s_max, window, dtype)
+    if kind == "mla":
+        return attn.mla_cache_init(cfg, batch, s_max, dtype)
+    if kind == "rec":
+        return rec_mod.rglru_cache_init(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_cache_init(cfg, batch, dtype)
+    if kind == "slstm":
+        return xlstm_mod.slstm_cache_init(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def _block_prefill(p, cfg, kind, h, cache, aux):
+    if kind in ("attn", "mla"):
+        window = cfg.window if cfg.attn_kind == "swa" or cfg.block_pattern \
+            else 0
+        x = rmsnorm(h, p["ln1"], cfg.norm_eps)
+        if kind == "mla":
+            y, cache = attn.mla_prefill(p["attn"], cfg, x, cache)
+        else:
+            y, cache = attn.gqa_prefill(p["attn"], cfg, x, cache, window)
+        h = h + y
+        x = rmsnorm(h, p["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, a = moe_mod.moe_apply(p["mlp"], cfg, x)
+            aux = aux + a
+        else:
+            y = swiglu(p["mlp"], x)
+        return h + y, cache, aux
+    if kind == "rec":
+        x = rmsnorm(h, p["ln1"], cfg.norm_eps)
+        # prefill == forward + exact final-state capture
+        u_in = x @ p["rec"]["w_in"]
+        u, _ = rec_mod._causal_conv(u_in, p["rec"]["conv_w"])
+        a, b = rec_mod._rglru_coeffs(p["rec"], cfg, u)
+        hseq = rec_mod.linear_recurrence(a, b)
+        gate = jax.nn.gelu(x @ p["rec"]["w_gate"])
+        y = (gate * hseq.astype(x.dtype)) @ p["rec"]["w_out"]
+        W = cfg.conv_width
+        S = u_in.shape[1]
+        conv_state = (u_in[:, -(W - 1):] if S >= W - 1 else
+                      jnp.pad(u_in, ((0, 0), (W - 1 - S, 0), (0, 0))))
+        cache = {"h": hseq[:, -1], "conv": conv_state}
+        h = h + y
+        return (h + swiglu(p["mlp"], rmsnorm(h, p["ln2"], cfg.norm_eps)),
+                cache, aux)
+    if kind in ("mlstm", "slstm"):
+        x = rmsnorm(h, p["ln"], cfg.norm_eps)
+        fwd = (xlstm_mod.mlstm_forward if kind == "mlstm"
+               else xlstm_mod.slstm_forward)
+        y, state = fwd(p["cell"], cfg, x, return_state=True)
+        return h + y, state, aux
+    raise ValueError(kind)
+
+
+def _block_decode(p, cfg, kind, h, cache, pos):
+    if kind in ("attn", "mla"):
+        window = cfg.window if cfg.attn_kind == "swa" or cfg.block_pattern \
+            else 0
+        x = rmsnorm(h, p["ln1"], cfg.norm_eps)
+        if kind == "mla":
+            y, cache = attn.mla_decode(p["attn"], cfg, x, cache, pos)
+        else:
+            y, cache = attn.gqa_decode(p["attn"], cfg, x, cache, pos, window)
+        h = h + y
+        x = rmsnorm(h, p["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = moe_mod.moe_apply(p["mlp"], cfg, x)
+        else:
+            y = swiglu(p["mlp"], x)
+        return h + y, cache
+    if kind == "rec":
+        x = rmsnorm(h, p["ln1"], cfg.norm_eps)
+        y, cache = rec_mod.rglru_decode(p["rec"], cfg, x, cache)
+        h = h + y
+        return h + swiglu(p["mlp"], rmsnorm(h, p["ln2"], cfg.norm_eps)), cache
+    if kind == "mlstm":
+        x = rmsnorm(h, p["ln"], cfg.norm_eps)
+        y, cache = xlstm_mod.mlstm_decode(p["cell"], cfg, x, cache)
+        return h + y, cache
+    if kind == "slstm":
+        x = rmsnorm(h, p["ln"], cfg.norm_eps)
+        y, cache = xlstm_mod.slstm_decode(p["cell"], cfg, x, cache)
+        return h + y, cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# full-model init
+# ---------------------------------------------------------------------------
+
+def init_lm_params(cfg, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    period, full, tail = layer_plan(cfg)
+    keys = jax.random.split(key, 4 + len(period) * full + len(tail))
+    params: Params = {
+        "embed": embed_init(keys[0], cfg.vocab_padded, cfg.d_model, dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "lm_head": dense_init(keys[1], cfg.d_model, cfg.vocab_padded, dt),
+    }
+    if cfg.frontend == "vision":
+        params["vis_proj"] = dense_init(keys[2], cfg.d_model, cfg.d_model, dt)
+    kidx = 4
+    body = {}
+    for i, kind in enumerate(period):
+        rkind = _resolve_kind(cfg, kind)
+        stack = []
+        for j in range(full):
+            stack.append(_block_init(keys[kidx], cfg, rkind))
+            kidx += 1
+        body[f"b{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *stack) \
+            if full > 1 else jax.tree.map(lambda x: x[None], stack[0])
+    params["body"] = body
+    tail_p = {}
+    for i, kind in enumerate(tail):
+        tail_p[f"t{i}"] = _block_init(keys[kidx], cfg, _resolve_kind(cfg, kind))
+        kidx += 1
+    params["tail"] = tail_p
+    return params
+
+
+def init_cache(cfg, batch: int, s_max: int, stacked: bool = True) -> Params:
+    """stacked=True: per-kind caches stacked over layers (scan execution).
+    stacked=False: one SEPARATE buffer per layer (list) -- the serving
+    layout: each decode step updates small per-layer tensors in place and
+    donation aliases them, instead of re-materializing the whole
+    (n_layers, ...) stack every step."""
+    dt = jnp.dtype(cfg.dtype)
+    period, full, tail = layer_plan(cfg)
+    body = {}
+    for i, kind in enumerate(period):
+        rkind = _resolve_kind(cfg, kind)
+        one = _block_cache_init(cfg, rkind, batch, s_max, dt)
+        if stacked:
+            body[f"b{i}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None],
+                                           (full, *x.shape)).copy(), one)
+        else:
+            body[f"b{i}"] = [jax.tree.map(jnp.copy, one)
+                             for _ in range(full)]
+    tail_c = {}
+    for i, kind in enumerate(tail):
+        tail_c[f"t{i}"] = _block_cache_init(cfg, _resolve_kind(cfg, kind),
+                                            batch, s_max, dt)
+    return {"body": body, "tail": tail_c, "pos": jnp.zeros((), jnp.int32)}
+
+
+def _body_cache_slices(cache_body, full: int):
+    """Per-layer cache views for unrolled execution (stacked or list)."""
+    sample = next(iter(cache_body.values()))
+    if isinstance(sample, list):
+        return [{k: cache_body[k][j] for k in cache_body}
+                for j in range(full)], False
+    return [jax.tree.map(lambda x: x[j], cache_body)
+            for j in range(full)], True
+
+
+def _rebuild_body_cache(outs, was_stacked: bool, keys):
+    if was_stacked:
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *outs) \
+            if len(outs) > 1 else jax.tree.map(lambda x: x[None], outs[0])
+    return {k: [o[k] for o in outs] for k in keys}
+
+
+# ---------------------------------------------------------------------------
+# stack execution
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(params, cfg, batch) -> jnp.ndarray:
+    from repro.distributed.sharding import shard_activations
+    h = params["embed"][batch["tokens"]]
+    if cfg.frontend == "vision" and "image_embeds" in batch:
+        vis = batch["image_embeds"].astype(h.dtype) @ params["vis_proj"]
+        h = jnp.concatenate([vis, h], axis=1)
+    return shard_activations(h)
+
+
+def forward_hidden(params, cfg, h, mode: str = "scan",
+                   remat: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Runs the full block stack; returns (h, moe_aux)."""
+    period, full, tail = layer_plan(cfg)
+    rkinds = [_resolve_kind(cfg, k) for k in period]
+    aux = jnp.zeros((), jnp.float32)
+
+    from repro.distributed.sharding import shard_residual
+
+    def superblock(carry, pslice):
+        h, aux = carry
+        h = shard_residual(h)
+        for i, rk in enumerate(rkinds):
+            h, aux = _block_fwd(pslice[f"b{i}"], cfg, rk, h, aux)
+        return (shard_residual(h), aux), None
+
+    # NOTE (EXPERIMENTS §Perf qwen3 it4): saving the tagged MoE capacity
+    # buffers (policy save_only_these_names("moe_buf","moe_out")) removes
+    # the remat re-gather + re-all-to-all (-37% collective bytes) but the
+    # top-8 capacity buffers are ~8x the token count, so peak memory blew
+    # 14.1 -> 44.8 GiB: net refuted at this batch size; full remat stays.
+    sb = jax.checkpoint(superblock) if remat else superblock
+    if mode == "scan":
+        (h, aux), _ = jax.lax.scan(sb, (h, aux), params["body"])
+    else:
+        for j in range(full):
+            pslice = jax.tree.map(lambda x: x[j], params["body"])
+            (h, aux), _ = sb((h, aux), pslice)
+    for i, kind in enumerate(tail):
+        h, aux = _block_fwd(params["tail"][f"t{i}"], cfg,
+                            _resolve_kind(cfg, kind), h, aux)
+    return h, aux
+
+
+def _mask_padded_vocab(cfg, logits):
+    if cfg.vocab_padded == cfg.vocab_size:
+        return logits
+    mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+    return jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+
+
+def lm_loss(params, cfg, batch, mode: str = "scan", remat: bool = False,
+            aux_weight: float = 0.01):
+    h = _embed_tokens(params, cfg, batch)
+    h, aux = forward_hidden(params, cfg, h, mode, remat)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.frontend == "vision" and "image_embeds" in batch:
+        h = h[:, batch["image_embeds"].shape[1]:]     # loss on text positions
+    logits = _mask_padded_vocab(cfg, h @ params["lm_head"])
+    loss = softmax_xent(logits, batch["labels"])
+    if cfg.is_moe:
+        loss = loss + aux_weight * aux
+    return loss, {"xent": loss, "moe_aux": aux}
+
+
+def lm_prefill(params, cfg, batch, cache, mode: str = "unroll"):
+    """Prefill: returns (last-position logits, populated cache)."""
+    h = _embed_tokens(params, cfg, batch)
+    period, full, tail = layer_plan(cfg)
+    rkinds = [_resolve_kind(cfg, k) for k in period]
+    aux = jnp.zeros((), jnp.float32)
+
+    def superblock(carry, xs):
+        h, aux = carry
+        pslice, cslice = xs
+        new_c = {}
+        for i, rk in enumerate(rkinds):
+            h, c, aux = _block_prefill(pslice[f"b{i}"], cfg, rk, h,
+                                       cslice[f"b{i}"], aux)
+            new_c[f"b{i}"] = c
+        return (h, aux), new_c
+
+    if mode == "scan":
+        (h, aux), body_c = jax.lax.scan(superblock, (h, aux),
+                                        (params["body"], cache["body"]))
+    else:
+        cache_layers, was_stacked = _body_cache_slices(cache["body"], full)
+        outs = []
+        for j in range(full):
+            pslice = jax.tree.map(lambda x: x[j], params["body"])
+            (h, aux), nc = superblock((h, aux), (pslice, cache_layers[j]))
+            outs.append(nc)
+        body_c = _rebuild_body_cache(outs, was_stacked,
+                                     list(cache["body"].keys()))
+    tail_c = {}
+    for i, kind in enumerate(tail):
+        h, c, aux = _block_prefill(params["tail"][f"t{i}"], cfg,
+                                   _resolve_kind(cfg, kind), h,
+                                   cache["tail"][f"t{i}"], aux)
+        tail_c[f"t{i}"] = c
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = _mask_padded_vocab(cfg, h[:, -1:] @ params["lm_head"])
+    new_cache = {"body": body_c, "tail": tail_c,
+                 "pos": jnp.asarray(h.shape[1], jnp.int32)}
+    return logits, new_cache
+
+
+def lm_decode_step(params, cfg, cache, tokens, mode: str = "unroll"):
+    """One-token decode. tokens: (B, 1). Returns (logits, cache)."""
+    pos = cache["pos"]
+    from repro.distributed.sharding import shard_activations
+    h = shard_activations(params["embed"][tokens])
+    period, full, tail = layer_plan(cfg)
+    rkinds = [_resolve_kind(cfg, k) for k in period]
+
+    def superblock(h, xs):
+        pslice, cslice = xs
+        new_c = {}
+        for i, rk in enumerate(rkinds):
+            h, c = _block_decode(pslice[f"b{i}"], cfg, rk, h,
+                                 cslice[f"b{i}"], pos)
+            new_c[f"b{i}"] = c
+        return h, new_c
+
+    if mode == "scan":
+        h, body_c = jax.lax.scan(superblock, h,
+                                 (params["body"], cache["body"]))
+    else:
+        cache_layers, was_stacked = _body_cache_slices(cache["body"], full)
+        outs = []
+        for j in range(full):
+            pslice = jax.tree.map(lambda x: x[j], params["body"])
+            h, nc = superblock(h, (pslice, cache_layers[j]))
+            outs.append(nc)
+        body_c = _rebuild_body_cache(outs, was_stacked,
+                                     list(cache["body"].keys()))
+    tail_c = {}
+    for i, kind in enumerate(tail):
+        h, c = _block_decode(params["tail"][f"t{i}"], cfg,
+                             _resolve_kind(cfg, kind), h,
+                             cache["tail"][f"t{i}"], pos)
+        tail_c[f"t{i}"] = c
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = _mask_padded_vocab(cfg, h @ params["lm_head"])
+    new_cache = {"body": body_c, "tail": tail_c, "pos": pos + 1}
+    return logits, new_cache

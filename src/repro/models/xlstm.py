@@ -1,0 +1,300 @@
+"""xLSTM blocks (arXiv:2405.04517): chunkwise-parallel mLSTM + sequential sLSTM.
+
+mLSTM (matrix memory):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        (per head, dh x dh memory)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))
+with exponential input gates stabilized by the running log-max m_t.  We
+implement the CHUNKWISE form: quadratic within a chunk (like attention
+with a decay mask), linear recurrence on (C, n, m) across chunks -- the
+TPU-efficient formulation (MXU-friendly within-chunk matmuls).
+
+sLSTM (scalar memory, block-diagonal recurrence R per head): strictly
+sequential lax.scan over time with exponential-gate stabilization.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Params, dense_init
+from .recurrent import _causal_conv
+
+MLSTM_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    D = cfg.d_model
+    Din = int(cfg.proj_factor_mlstm * D)
+    H = cfg.heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], D, 2 * Din, dt),       # path + output gate z
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, Din), jnp.float32)
+                   / np.sqrt(cfg.conv_width)).astype(dt),
+        "wq": dense_init(ks[2], Din, Din, dt),
+        "wk": dense_init(ks[3], Din, Din, dt),
+        "wv": dense_init(ks[4], Din, Din, dt),
+        "w_if": dense_init(ks[5], Din, 2 * H, jnp.float32),  # i,f gates/head
+        "skip_scale": jnp.ones((Din,), dt),
+        "w_down": dense_init(ks[6], Din, D, dt),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_i, log_f):
+    """Chunkwise-parallel mLSTM core.
+
+    q,k,v: (B, H, S, dh); log_i/log_f: (B, H, S) fp32.
+    Returns h: (B, H, S, dh).
+    """
+    B, H, S, dh = q.shape
+    L = min(MLSTM_CHUNK, S)
+    assert S % L == 0, "sequence must be a multiple of the mLSTM chunk"
+    nc = S // L
+    shape_c = (B, H, nc, L)
+    qc = q.reshape(B, H, nc, L, dh)
+    kc = k.reshape(B, H, nc, L, dh)
+    vc = v.reshape(B, H, nc, L, dh)
+    li = log_i.reshape(shape_c)
+    lf = log_f.reshape(shape_c)
+    csum_f = jnp.cumsum(lf, axis=-1)                      # within-chunk
+    total_f = csum_f[..., -1]                             # (B,H,nc)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def step(carry, xs):
+        C, n, m = carry                                   # (B,H,dh,dh),(B,H,dh),(B,H)
+        qi, ki, vi, lii, lfi, csf, totf = xs
+        qi = qi.astype(jnp.float32)                       # keep xs in model
+        ki = ki.astype(jnp.float32)                       # dtype; upcast and
+        vi = vi.astype(jnp.float32)                       # build the decay
+        # matrix INSIDE the step so only one chunk's (L, L) lives at a time
+        # (materializing (B,H,nc,L,L) f32 outside the scan dominated the
+        # training peak memory -- EXPERIMENTS §Perf xlstm iteration 1)
+        dm = (csf[..., :, None] - csf[..., None, :]) + lii[..., None, :]
+        dm = jnp.where(tri, dm, -jnp.inf)
+        # decay from carry-in state to each position s: g[s] = csum_f[s]
+        g = csf                                           # (B,H,L)
+        m_intra = jnp.max(dm, axis=-1)                    # (B,H,L)
+        m_new = jnp.maximum(g + m[..., None], m_intra)    # (B,H,L)
+        # inter-chunk contribution
+        scale_in = jnp.exp(g + m[..., None] - m_new)      # (B,H,L)
+        h_inter = jnp.einsum("bhld,bhde->bhle", qi, C) * scale_in[..., None]
+        n_inter = jnp.einsum("bhld,bhd->bhl", qi, n) * scale_in
+        # intra-chunk contribution
+        w = jnp.exp(dm - m_new[..., None])                # (B,H,L,L)
+        scores = jnp.einsum("bhld,bhtd->bhlt", qi, ki) * (dh ** -0.5)
+        aw = w * scores
+        h_intra = jnp.einsum("bhlt,bhtd->bhld", aw.astype(vi.dtype), vi)
+        n_intra = jnp.sum(aw, axis=-1)
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra),
+                            jnp.exp(-m_new)) + 1e-6
+        h = (h_inter + h_intra) / denom[..., None]
+        # state update to end of chunk: position t contributes with decay
+        # sum_{u=t+1..L} lf[u] + li[t] = (totf - csf[t]) + li[t]
+        decay_to_end = totf[..., None] - csf + lii        # (B,H,L)
+        m_next = jnp.maximum(totf + m, jnp.max(decay_to_end, axis=-1))
+        sc_old = jnp.exp(totf + m - m_next)               # (B,H)
+        sc_new = jnp.exp(decay_to_end - m_next[..., None])  # (B,H,L)
+        kw = ki * sc_new[..., None].astype(ki.dtype)
+        C2 = C * sc_old[..., None, None] + jnp.einsum("bhld,bhle->bhde",
+                                                      kw, vi) * (dh ** -0.5)
+        n2 = n * sc_old[..., None] + jnp.sum(kw, axis=2) * (dh ** -0.5)
+        return (C2, n2, m_next), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    from repro.distributed.sharding import BATCH_AXES, maybe_shard
+
+    def shard_x(t):      # keep heads on 'model' through the scan stack
+        spec = (None, BATCH_AXES, "model") + (None,) * (t.ndim - 3)
+        return maybe_shard(t, *spec)
+
+    xs = (shard_x(qc.transpose(2, 0, 1, 3, 4)),
+          shard_x(kc.transpose(2, 0, 1, 3, 4)),
+          shard_x(vc.transpose(2, 0, 1, 3, 4)),
+          shard_x(li.transpose(2, 0, 1, 3)),
+          shard_x(lf.transpose(2, 0, 1, 3)),
+          shard_x(csum_f.transpose(2, 0, 1, 3)),
+          shard_x(total_f.transpose(2, 0, 1)))
+    # checkpoint the chunk body: the scan's VJP otherwise stacks every
+    # chunk's (L, L) decay/attention intermediates across the sequence
+    # (EXPERIMENTS §Perf xlstm iteration 3)
+    final_state, hs = jax.lax.scan(jax.checkpoint(step), (C0, n0, m0), xs)
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dh)
+    return h, final_state
+
+
+def mlstm_forward(p: Params, cfg, x: jnp.ndarray,
+                  return_state: bool = False):
+    B, S, D = x.shape
+    H = cfg.heads
+    Din = p["wq"].shape[0]
+    dh = Din // H
+    up = x @ p["w_up"]
+    path, z = jnp.split(up, 2, axis=-1)
+    path, _ = _causal_conv(path, p["conv_w"])
+    path_act = jax.nn.silu(path)
+    q = (path_act @ p["wq"]).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    k = (path_act @ p["wk"]).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    v = (path @ p["wv"]).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    gates = (path_act @ p["w_if"]).astype(jnp.float32)    # (B,S,2H)
+    log_i, f_pre = jnp.split(gates.transpose(0, 2, 1).reshape(B, 2, H, S),
+                             2, axis=1)
+    log_i = log_i[:, 0]
+    log_f = jax.nn.log_sigmoid(f_pre[:, 0])
+    h, (Cf, nf, mf) = _mlstm_chunk_scan(q, k, v, log_i, log_f)  # (B,H,S,dh)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, Din).astype(x.dtype)
+    h = h + path_act * p["skip_scale"]
+    out = (h * jax.nn.silu(z)) @ p["w_down"]
+    if return_state:
+        W = p["conv_w"].shape[0]
+        path_pre = x @ p["w_up"][:, :Din]
+        conv_state = path_pre[:, -(W - 1):] if S >= W - 1 else jnp.pad(
+            path_pre, ((0, 0), (W - 1 - S, 0), (0, 0)))
+        return out, {"C": Cf, "n": nf, "m": mf, "conv": conv_state}
+    return out
+
+
+def mlstm_cache_init(cfg, batch: int, dtype) -> Params:
+    H = cfg.heads
+    Din = int(cfg.proj_factor_mlstm * cfg.d_model)
+    dh = Din // H
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, Din), dtype)}
+
+
+def mlstm_decode(p: Params, cfg, x: jnp.ndarray, cache: Params):
+    """Single-token recurrent update. x: (B, 1, D)."""
+    B = x.shape[0]
+    H = cfg.heads
+    Din = p["wq"].shape[0]
+    dh = Din // H
+    up = x @ p["w_up"]
+    path, z = jnp.split(up, 2, axis=-1)
+    path, conv_state = _causal_conv(path, p["conv_w"], cache["conv"])
+    path_act = jax.nn.silu(path)
+    q = (path_act @ p["wq"]).reshape(B, H, dh).astype(jnp.float32)
+    k = (path_act @ p["wk"]).reshape(B, H, dh).astype(jnp.float32)
+    v = (path @ p["wv"]).reshape(B, H, dh).astype(jnp.float32)
+    gates = (path_act @ p["w_if"]).astype(jnp.float32)[:, 0]   # (B,2H)
+    log_i, f_pre = gates[:, :H], gates[:, H:]
+    log_f = jax.nn.log_sigmoid(f_pre)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(log_f + m, log_i)
+    sc_old = jnp.exp(log_f + m - m_new)
+    sc_new = jnp.exp(log_i - m_new)
+    kw = k * sc_new[..., None] * (dh ** -0.5)
+    C2 = C * sc_old[..., None, None] + kw[..., :, None] * v[..., None, :]
+    n2 = n * sc_old[..., None] + kw
+    num = jnp.einsum("bhd,bhde->bhe", q, C2)
+    den = jnp.maximum(jnp.abs(jnp.sum(q * n2, -1)), jnp.exp(-m_new)) + 1e-6
+    h = (num / den[..., None]).reshape(B, 1, Din).astype(x.dtype)
+    h = h + path_act * p["skip_scale"]
+    out = (h * jax.nn.silu(z)) @ p["w_down"]
+    return out, {"C": C2, "n": n2, "m": m_new, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    D, H = cfg.d_model, cfg.heads
+    dh = D // H
+    ks = jax.random.split(key, 4)
+    # round the FFN width to a TP-friendly multiple of 64
+    Dff = -(-int(cfg.proj_factor_slstm * D) // 64) * 64
+    # HEAD-MAJOR layouts throughout: the pre-activation projection emits
+    # (..., H, 4, dh) so the TP shard boundary of the flattened output dim
+    # lands exactly on head boundaries -- otherwise GSPMD reshards every
+    # time step of the recurrence (EXPERIMENTS §Perf xlstm iteration 2).
+    r = (jax.random.normal(ks[1], (H, 4, dh, dh), jnp.float32)
+         / np.sqrt(dh)).astype(jnp.float32)
+    return {
+        "w": dense_init(ks[0], D, 4 * D, jnp.float32),    # -> (H, 4, dh)
+        "r": r,                                           # recurrent (block-diag)
+        "b": jnp.zeros((H, 4, dh), jnp.float32),
+        "w_up": dense_init(ks[2], D, 2 * Dff, dt),        # GLU-style FFN
+        "w_down": dense_init(ks[3], Dff, D, dt),
+    }
+
+
+def _slstm_cell(p, cfg, x_pre, state):
+    """One time step. x_pre: (B, H, 4, dh) pre-activations from input."""
+    c, n, h, m = state
+    H = cfg.heads
+    # recurrent contribution: per-gate block-diag matmul on h (head-local)
+    rec = jnp.einsum("bhd,hgde->bhge", h, p["r"])         # (B,H,4,dh)
+    pre = x_pre + rec + p["b"][None]
+    i_pre, f_pre, z_pre, o_pre = (pre[:, :, 0], pre[:, :, 1],
+                                  pre[:, :, 2], pre[:, :, 3])
+    log_i = i_pre
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m2 = jnp.maximum(log_f + m, log_i)
+    i_g = jnp.exp(log_i - m2)
+    f_g = jnp.exp(log_f + m - m2)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c2 = f_g * c + i_g * z
+    n2 = f_g * n + i_g
+    h2 = o * c2 / jnp.maximum(n2, 1e-6)
+    return (c2, n2, h2, m2)
+
+
+def slstm_forward(p: Params, cfg, x: jnp.ndarray,
+                  return_state: bool = False):
+    """Sequential scan over time. x: (B, S, D)."""
+    B, S, D = x.shape
+    H = cfg.heads
+    dh = D // H
+    x_pre = (x @ p["w"].astype(x.dtype)).astype(jnp.float32)
+    x_pre = x_pre.reshape(B, S, H, 4, dh)
+
+    def step(state, xp):
+        s2 = _slstm_cell(p, cfg, xp, state)
+        return s2, s2[2]
+
+    z = jnp.zeros((B, H, dh), jnp.float32)
+    state0 = (z, z, z, jnp.full((B, H, dh), -1e30, jnp.float32))
+    final, hs = jax.lax.scan(step, state0, x_pre.transpose(1, 0, 2, 3, 4))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    up = h @ p["w_up"]
+    a, b = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(a) * b) @ p["w_down"]
+    if return_state:
+        c, n, hh, m = final
+        return out, {"c": c, "n": n, "h": hh, "m": m}
+    return out
+
+
+def slstm_cache_init(cfg, batch: int, dtype) -> Params:
+    H = cfg.heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z,
+            "m": jnp.full((batch, H, dh), -1e30, jnp.float32)}
+
+
+def slstm_decode(p: Params, cfg, x: jnp.ndarray, cache: Params):
+    B = x.shape[0]
+    H = cfg.heads
+    dh = cfg.d_model // H
+    x_pre = (x[:, 0] @ p["w"].astype(x.dtype)).astype(jnp.float32)
+    x_pre = x_pre.reshape(B, H, 4, dh)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c2, n2, h2, m2 = _slstm_cell(p, cfg, x_pre, state)
+    h = h2.reshape(B, 1, cfg.d_model).astype(x.dtype)
+    up = h @ p["w_up"]
+    a, b = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(a) * b) @ p["w_down"]
+    return out, {"c": c2, "n": n2, "h": h2, "m": m2}

@@ -1,0 +1,4 @@
+from .adamw import AdamW, AdamWState
+from .schedules import constant, warmup_cosine
+
+__all__ = ["AdamW", "AdamWState", "constant", "warmup_cosine"]

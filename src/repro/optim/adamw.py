@@ -1,0 +1,65 @@
+"""AdamW from scratch (no optax): bf16 params + fp32 master/moments.
+
+State layout mirrors the param tree leaf-for-leaf so the sharding specs of
+parameters apply verbatim to every optimizer-state copy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray          # ()
+    mu: Any                    # fp32, like params
+    nu: Any                    # fp32, like params
+    master: Any                # fp32 master weights
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        f32 = lambda t: jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), t)
+        master = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=f32(params), nu=f32(params), master=master)
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip:
+            gnorm = jnp.sqrt(sum(jnp.sum(g * g)
+                                 for g in jax.tree.leaves(g32)) + 1e-12)
+            scale = jnp.minimum(1.0, self.grad_clip / gnorm)
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          state.nu, g32)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(w, m, v):
+            u = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            u = u + self.weight_decay * w
+            return w - lr * u
+
+        master = jax.tree.map(upd, state.master, mu, nu)
+        new_params = jax.tree.map(
+            lambda w, p: w.astype(p.dtype), master, params)
+        return new_params, AdamWState(step, mu, nu, master)

@@ -1,0 +1,5 @@
+from .loop import fit, make_grad_step, make_train_step
+from .serve import greedy_generate, make_decode_step, make_prefill_step
+
+__all__ = ["fit", "make_grad_step", "make_train_step",
+           "greedy_generate", "make_decode_step", "make_prefill_step"]

@@ -1,0 +1,88 @@
+"""Training step factory + host-side fit loop.
+
+``make_train_step`` builds the jit-able pure step (loss -> grads -> AdamW),
+used both by the real CPU training examples and by the multi-pod dry-run
+(lowered with ShapeDtypeStructs).  Gradient compression and the
+heterogeneity-aware microbatch schedule plug in around this step
+(distributed/hetsched.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamW
+
+
+def make_train_step(model, opt: AdamW, mode: str = "scan",
+                    remat: bool = True, accum: int = 1) -> Callable:
+    """accum > 1: gradient accumulation over microbatches (lax.scan).
+
+    The global batch is split on its leading axis; activations live for
+    one microbatch at a time (peak activation memory / accum) while the
+    numerics match the full-batch step (grads are mean-accumulated in
+    f32).  The per-microbatch boundary is also where work-exchange
+    reassignment slots in on a heterogeneous fleet (DESIGN §3).
+    """
+    def grad_of(params, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch, mode=mode, remat=remat)
+            return loss, metrics
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = grad_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum,
+                                    *x.shape[1:]), batch)
+
+            def body(acc, mb):
+                (loss, metrics), g = grad_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / accum, acc, g)
+                return acc, (loss, metrics)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, metrics) = jax.lax.scan(body, zeros, micro)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metrics)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        out_metrics = dict(metrics)
+        out_metrics.update(loss=loss, grad_norm=gnorm)
+        return new_params, new_state, out_metrics
+
+    return train_step
+
+
+def make_grad_step(model, mode: str = "scan", remat: bool = False):
+    """Per-microbatch gradient (no update) -- the work-exchange unit op."""
+    def grad_step(params, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, mode=mode, remat=remat)[0]
+        return jax.value_and_grad(loss_fn)(params)
+    return grad_step
+
+
+def fit(model, params, opt: AdamW, batches, mode: str = "scan",
+        remat: bool = False, log_every: int = 10,
+        callback: Optional[Callable] = None):
+    """Simple synchronous host loop (CPU examples / tests)."""
+    step_fn = jax.jit(make_train_step(model, opt, mode, remat))
+    opt_state = opt.init(params)
+    history = []
+    for i, batch in enumerate(batches):
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or callback:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i, **m})
+            if callback:
+                callback(i, m)
+    return params, opt_state, history

@@ -1,0 +1,34 @@
+"""Serving step factories: prefill and decode (one token, KV cache)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(model, mode: str = "unroll") -> Callable:
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache, mode=mode)
+    return prefill_step
+
+
+def make_decode_step(model, mode: str = "unroll") -> Callable:
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens, mode=mode)
+    return decode_step
+
+
+def greedy_generate(model, params, prompt_batch, cache, steps: int,
+                    mode: str = "unroll"):
+    """Greedy generation for the examples; returns (tokens, cache)."""
+    prefill = jax.jit(make_prefill_step(model, mode))
+    decode = jax.jit(make_decode_step(model, mode), donate_argnums=(1,))
+    logits, cache = prefill(params, prompt_batch, cache)
+    tok = jnp.argmax(logits[:, -1], -1, keepdims=True).astype(jnp.int32)
+    out = [tok]
+    for _ in range(steps - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], -1, keepdims=True).astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1), cache

@@ -1,0 +1,86 @@
+"""Validation of the paper's math layer: Theorem 1, eqs. 4-5, Section 3."""
+import numpy as np
+import pytest
+
+from repro.core import erlang, mds, oracle, simulator
+from repro.core.types import ExchangeConfig, HetSpec
+
+
+RNG = lambda s=0: np.random.default_rng(s)
+
+
+class TestOracle:
+    def test_theorem1_closed_form(self):
+        het = HetSpec(np.array([1.0, 3.0, 6.0]))
+        assert oracle.oracle_mean_time(het, 200) == pytest.approx(20.0)
+
+    def test_theorem1_vs_enumeration(self):
+        """Eqs. (8)-(12) telescoping: enumerated sum == N/lambda_sum."""
+        het = HetSpec(np.array([0.7, 2.3, 1.1]))
+        for N in (1, 2, 5):
+            exact = oracle.oracle_mean_time_enumerated(het, N)
+            assert exact == pytest.approx(N / het.lambda_sum, rel=1e-12)
+
+    def test_theorem1_vs_mc(self):
+        het = HetSpec(np.array([1.0, 4.0, 2.5, 0.5]))
+        N = 500
+        samples = oracle.oracle_time_samples(het, N, 20000, RNG(1))
+        assert samples.mean() == pytest.approx(N / het.lambda_sum, rel=0.01)
+
+    def test_corollary2(self):
+        het = HetSpec(np.array([1.0, 3.0, 6.0]))
+        np.testing.assert_allclose(oracle.oracle_expected_done(het, 200),
+                                   [20.0, 60.0, 120.0])
+
+
+class TestErlang:
+    @pytest.mark.parametrize("ell", [1, 2, 3])
+    def test_recursion_vs_mc(self, ell):
+        het = HetSpec(np.array([1.0, 2.0, 3.5]))
+        m = 6
+        exact = erlang.erlang_order_stat_mean(het, m, ell)
+        mc = erlang.erlang_order_stat_mean_mc(het, m, ell, 200_000, RNG(2))
+        assert exact == pytest.approx(mc, rel=0.02)
+
+    def test_homogeneous_max_known_identity(self):
+        """K homogeneous Exp(lam) (m=1): E[max] = H_K / lam."""
+        K, lam = 4, 2.0
+        het = HetSpec(np.full(K, lam))
+        exact = erlang.erlang_order_stat_mean(het, 1, K)
+        harmonic = sum(1.0 / i for i in range(1, K + 1)) / lam
+        assert exact == pytest.approx(harmonic, rel=1e-9)
+
+    def test_min_of_exponentials(self):
+        """m=1, ell=1: E[min] = 1/lambda_sum."""
+        het = HetSpec(np.array([1.0, 2.0, 3.0, 4.0]))
+        exact = erlang.erlang_order_stat_mean(het, 1, 1)
+        assert exact == pytest.approx(1.0 / het.lambda_sum, rel=1e-9)
+
+
+class TestMDS:
+    def test_exact_vs_mc(self):
+        het = HetSpec(np.array([1.0, 2.0, 4.0]))
+        N, L = 12, 2
+        exact = mds.mds_mean_time_exact(het, N, L)
+        mc = simulator.mds_mean_time(het, N, L, 300_000, RNG(3))
+        assert exact == pytest.approx(mc, rel=0.02)
+
+    def test_paper_example_figure1(self):
+        """Intro example: (3,2) MDS on rates (1,3,6)/100-row units -> 33.3s;
+        het-aware split -> 20s.  In paper units: A has 200 rows, worker rates
+        d,3d,6d ops/s == 1,3,6 rows/s."""
+        het = HetSpec(np.array([1.0, 3.0, 6.0]))
+        # deterministic version of the example (paper uses deterministic rates):
+        # MDS (L=2): each worker gets 100 rows; finish times 100, 33.3, 16.7
+        # -> 2nd fastest = 33.33
+        t_mds = np.sort(100.0 / het.lambdas)[1]
+        assert t_mds == pytest.approx(33.333, rel=1e-3)
+        # het-aware: 20/60/120 rows -> all finish at 20s = oracle
+        assert oracle.oracle_mean_time(het, 200) == pytest.approx(20.0)
+
+    def test_optimize_picks_K_when_homogeneous_large_N(self):
+        """Paper: for sigma^2=0, L=K is optimal (no redundancy needed)."""
+        K = 8
+        het = HetSpec(np.full(K, 5.0))
+        L, _ = simulator.mds_optimize(het, 4000, 300, RNG(4))
+        assert L >= K - 1   # MC noise tolerance: optimum is at/near K

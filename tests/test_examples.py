@@ -1,0 +1,45 @@
+"""Examples and launchers stay runnable (subprocess smoke tests)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+
+
+def _run(args, timeout=420):
+    out = subprocess.run([sys.executable] + args, capture_output=True,
+                         text=True, timeout=timeout, cwd=REPO, env=ENV)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_quickstart():
+    out = _run(["examples/quickstart.py"])
+    assert "oracle lower bound" in out
+    assert "work exchange" in out
+
+
+def test_train_launcher_and_resume(tmp_path):
+    ck = str(tmp_path / "ck")
+    out = _run(["-m", "repro.launch.train", "--steps", "3",
+                "--units", "8", "--ckpt", ck, "--save-every", "2"])
+    assert "step 2" in out
+    out2 = _run(["-m", "repro.launch.train", "--steps", "4",
+                 "--units", "8", "--ckpt", ck, "--save-every", "2"])
+    assert "resumed" in out2 and "step 3" in out2
+
+
+def test_serve_launcher():
+    out = _run(["-m", "repro.launch.serve", "--arch", "xlstm-350m",
+                "--steps", "4", "--batch", "2"])
+    assert "tok/s" in out
+
+
+def test_paper_figures_quick(tmp_path):
+    out = _run(["examples/paper_figures.py", "--quick",
+                "--out", str(tmp_path)])
+    assert "fig5_completion_time.csv" in out
+    assert (tmp_path / "fig7_threshold.csv").exists()

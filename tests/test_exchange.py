@@ -1,0 +1,214 @@
+"""Work-exchange protocol tests: simulator, scheduler, estimators, coding."""
+import numpy as np
+import pytest
+
+from repro.core import simulator
+from repro.core.assignment import (capped_proportional_assignment,
+                                   largest_remainder_round,
+                                   proportional_assignment)
+from repro.core.coded import GradientCoding, MDSCodedMatmul
+from repro.core.estimator import (CumulativeRateEstimator, EMARateEstimator,
+                                  GammaPosteriorEstimator)
+from repro.core.exchange import MasterScheduler
+from repro.core.types import ExchangeConfig, HetSpec
+
+
+RNG = lambda s=0: np.random.default_rng(s)
+
+
+class TestAssignment:
+    def test_largest_remainder_sums(self):
+        for total in (0, 1, 7, 100, 999):
+            out = largest_remainder_round(np.array([0.2, 3.0, 1.7]), total)
+            assert out.sum() == total and (out >= 0).all()
+
+    def test_proportional_matches_corollary2(self):
+        lam = np.array([1.0, 3.0, 6.0])
+        np.testing.assert_array_equal(proportional_assignment(lam, 200),
+                                      [20, 60, 120])
+
+    def test_cap_respected_and_waterfilled(self):
+        lam = np.array([1.0, 1.0, 10.0])
+        out = capped_proportional_assignment(lam, 100, cap=30)
+        assert out.sum() <= 100 and (out <= 30).all()
+        assert out[2] == 30                 # fast worker capped
+        assert out.sum() == 90              # 30+30+30: all capped, 10 carried
+
+
+class TestSimulator:
+    def test_work_exchange_close_to_oracle_known(self):
+        het = HetSpec.uniform_random(20, mu=10.0, sigma2=10.0**2 / 6, rng=RNG(5))
+        N = 20_000
+        cfg = ExchangeConfig(known_heterogeneity=True)
+        mc = simulator.work_exchange_mc(het, N, cfg, trials=40, rng=RNG(6))
+        oracle_t = N / het.lambda_sum
+        assert mc.t_comp == pytest.approx(oracle_t, rel=0.03)
+
+    def test_work_exchange_close_to_oracle_unknown(self):
+        het = HetSpec.uniform_random(20, mu=10.0, sigma2=10.0**2 / 6, rng=RNG(7))
+        N = 20_000
+        cfg = ExchangeConfig(known_heterogeneity=False)
+        mc = simulator.work_exchange_mc(het, N, cfg, trials=40, rng=RNG(8))
+        oracle_t = N / het.lambda_sum
+        assert mc.t_comp == pytest.approx(oracle_t, rel=0.06)
+
+    def test_no_scheme_beats_oracle(self):
+        het = HetSpec.uniform_random(10, mu=5.0, sigma2=5.0**2 / 6, rng=RNG(9))
+        N = 5_000
+        oracle_t = N / het.lambda_sum
+        cfg = ExchangeConfig(known_heterogeneity=True)
+        mc = simulator.work_exchange_mc(het, N, cfg, trials=60, rng=RNG(10))
+        assert mc.t_comp >= oracle_t * 0.999
+        fixed = simulator.fixed_mean_time(het, N, 200, RNG(11))
+        assert fixed >= oracle_t
+        _, mds_t = simulator.mds_optimize(het, N, 200, RNG(12))
+        assert mds_t >= oracle_t * 0.999
+
+    def test_known_het_near_zero_comm(self):
+        """Paper Fig 6a: with heterogeneity knowledge, N_comm ~ 0."""
+        het = HetSpec.uniform_random(20, mu=10.0, sigma2=10.0, rng=RNG(13))
+        N = 50_000
+        cfg = ExchangeConfig(known_heterogeneity=True)
+        mc = simulator.work_exchange_mc(het, N, cfg, trials=20, rng=RNG(14))
+        assert mc.n_comm / N < 0.02
+
+    def test_unknown_het_comm_grows_with_variance(self):
+        """Paper Fig 6a: without knowledge, N_comm grows with sigma^2."""
+        N, K = 30_000, 20
+        cfg = ExchangeConfig(known_heterogeneity=False)
+        comms = []
+        for sig2 in (0.0, 16.0, 33.0):
+            het = HetSpec.uniform_random(K, mu=10.0, sigma2=sig2, rng=RNG(15))
+            mc = simulator.work_exchange_mc(het, N, cfg, trials=20, rng=RNG(16))
+            comms.append(mc.n_comm / N)
+        # eq. (19) predicts 0 at sigma^2=0 from TRUE rates; the realized
+        # protocol keeps a small residual from lambda-hat sampling noise.
+        assert comms[0] < 0.03
+        assert comms[2] > 2 * comms[0]
+
+    def test_homogeneous_mds_optimal_L_is_K(self):
+        """Paper: sigma^2=0 => optimized MDS == oracle (L=K, no redundancy)."""
+        K = 10
+        het = HetSpec(np.full(K, 4.0))
+        N = 10_000
+        L, t = simulator.mds_optimize(het, N, 400, RNG(17))
+        assert L == K
+        # equality with the oracle is asymptotic: the L=K completion time is a
+        # max of K Erlangs, oracle + O(1/sqrt(N/K)) fluctuation (~5% here)
+        assert t == pytest.approx(N / het.lambda_sum, rel=0.08)
+
+    def test_mds_suboptimal_at_high_variance(self):
+        """Paper Fig 5: MDS degrades vs oracle at high sigma^2; WE does not."""
+        het = HetSpec.uniform_random(20, mu=10.0, sigma2=10.0**2 / 6,
+                                     rng=RNG(18))
+        N = 20_000
+        _, t_mds = simulator.mds_optimize(het, N, 200, RNG(19))
+        cfg = ExchangeConfig(known_heterogeneity=True)
+        t_we = simulator.work_exchange_mc(het, N, cfg, 40, RNG(20)).t_comp
+        oracle_t = N / het.lambda_sum
+        assert t_mds > 1.05 * oracle_t      # visible MDS gap
+        assert t_we < 1.03 * oracle_t       # WE hugs the bound
+
+    def test_threshold_tradeoff(self):
+        """Paper Fig 7: larger cutting threshold => fewer iterations."""
+        het = HetSpec.uniform_random(20, mu=10.0, sigma2=12.0, rng=RNG(21))
+        N = 20_000
+        iters = []
+        for frac in (0.001, 0.01, 0.3):
+            cfg = ExchangeConfig(known_heterogeneity=False, threshold_frac=frac)
+            iters.append(simulator.work_exchange_mc(het, N, cfg, 20,
+                                                    RNG(22)).iterations)
+        assert iters[0] >= iters[1] >= iters[2]
+
+
+class TestMasterScheduler:
+    def _drive(self, sched, rates, seed=0):
+        """Run scheduler against a virtual pool until done; return stats."""
+        from repro.core.runtime import VirtualWorkerPool
+        pool = VirtualWorkerPool(rates, seed=seed)
+        while not sched.finished:
+            a = sched.next_assignment()
+            if a is None:
+                break
+            elapsed, done = pool.run_epoch(a)
+            sched.report(done, elapsed)
+        return sched
+
+    def test_every_unit_done_exactly_once(self):
+        rates = np.array([1.0, 5.0, 2.0, 9.0])
+        sched = MasterScheduler(range(1000), K=4, rates=rates)
+        self._drive(sched, rates)
+        assert sorted(sched.done_ids) == list(range(1000))
+
+    def test_unknown_het_learns(self):
+        rates = np.array([1.0, 10.0])
+        sched = MasterScheduler(range(4000), K=2, rates=None,
+                                threshold_frac=0.005)
+        self._drive(sched, rates, seed=3)
+        est = sched.estimated_rates()
+        assert est[1] / est[0] == pytest.approx(10.0, rel=0.35)
+
+    def test_failure_reassigns(self):
+        from repro.core.runtime import VirtualWorkerPool
+        rates = np.array([2.0, 2.0, 2.0])
+        sched = MasterScheduler(range(300), K=3, rates=rates)
+        pool = VirtualWorkerPool(rates, seed=1)
+        first = True
+        while not sched.finished:
+            a = sched.next_assignment()
+            if a is None:
+                break
+            dead = np.array([False, False, first])   # worker 2 dies at epoch 0
+            elapsed, done = pool.run_epoch(a, dead=dead)
+            sched.report(done, elapsed)
+            if first:
+                sched.mark_failed(2)
+                first = False
+        assert sorted(sched.done_ids) == list(range(300))
+        assert all(l.done_counts[2] == 0 for l in sched.logs[1:])
+
+
+class TestEstimators:
+    def test_cumulative_matches_paper_eq23(self):
+        est = CumulativeRateEstimator(2)
+        est.update(np.array([10, 40]), 5.0)
+        est.update(np.array([20, 60]), 10.0)
+        np.testing.assert_allclose(est.rates(), [2.0, 100 / 15.0])
+
+    def test_ema_tracks_drift(self):
+        est = EMARateEstimator(1, alpha=0.5)
+        for _ in range(20):
+            est.update(np.array([10.0]), 1.0)
+        assert est.rates()[0] == pytest.approx(10.0, rel=1e-6)
+        for _ in range(20):
+            est.update(np.array([2.0]), 1.0)
+        assert est.rates()[0] == pytest.approx(2.0, rel=1e-3)
+
+    def test_bayes_shrinks_to_truth(self):
+        est = GammaPosteriorEstimator(1, prior_rate=1.0)
+        est.update(np.array([500.0]), 100.0)
+        assert est.rates()[0] == pytest.approx(5.0, rel=0.02)
+
+
+class TestCoded:
+    def test_mds_matmul_decodes_from_any_L(self):
+        rng = RNG(30)
+        A = rng.normal(size=(20, 7))
+        x = rng.normal(size=(7,))
+        code = MDSCodedMatmul(K=5, L=3)
+        chunks = code.encode(A)
+        replies = {k: chunks[k] @ x for k in (0, 2, 4)}   # arbitrary 3 of 5
+        np.testing.assert_allclose(code.decode(replies), A @ x, rtol=1e-8)
+
+    def test_gradient_coding_tolerates_stragglers(self):
+        rng = RNG(31)
+        n_units, K, s = 12, 6, 1
+        unit_grads = [rng.normal(size=4) for _ in range(n_units)]
+        gc = GradientCoding(K=K, s=s)
+        owners = gc.assignment(n_units)
+        # workers 1 and 4 straggle (s=1 per group is tolerated here since the
+        # two replica groups each lose one worker but jointly cover all units)
+        replies = {w: {u: unit_grads[u] for u in owners[w]}
+                   for w in range(K) if w not in (1,)}
+        out = gc.decode(n_units, replies)
+        np.testing.assert_allclose(out, np.sum(unit_grads, axis=0), rtol=1e-9)

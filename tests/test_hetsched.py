@@ -1,0 +1,166 @@
+"""End-to-end heterogeneous training: policy equivalence, fault tolerance,
+checkpoint/elasticity, compression, and paper-claim assertions on the
+integrated system (not just the simulator)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_checkpoint, reshard_rates,
+                              restore_checkpoint, save_checkpoint)
+from repro.configs import get_config, smoke_config
+from repro.data import UnitStore
+from repro.distributed.compression import Int8Compressor, TopKCompressor
+from repro.distributed.hetsched import HetTrainer, POLICIES
+from repro.models import build_model
+from repro.optim import AdamW
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(smoke_config(get_config("phi3-mini-3.8b")),
+                              dtype="float32", n_layers=2, d_model=32,
+                              n_heads=2, head_dim=16, n_kv_heads=2, d_ff=64,
+                              vocab_size=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    store = UnitStore(unit_batch=2, seq_len=16, vocab=cfg.vocab_size, seed=3)
+    return cfg, model, params, store
+
+
+RATES = np.array([1.0, 4.0, 2.0, 8.0])
+
+
+def _run(setup, policy, steps=3, **kw):
+    cfg, model, params, store = setup
+    opt = AdamW(lr=1e-2, weight_decay=0.0)
+    trainer = HetTrainer(model, opt, RATES, store, policy=policy,
+                         units_per_step=16, seed=7, **kw)
+    return trainer.train(params, steps)
+
+
+class TestPolicyEquivalence:
+    def test_all_policies_same_trajectory(self, setup):
+        """Work conservation => identical parameters for every policy."""
+        ref = None
+        for policy in POLICIES:
+            p, _, hist = _run(setup, policy)
+            leaves = jax.tree.leaves(p)
+            if ref is None:
+                ref = leaves
+            else:
+                for a, b in zip(ref, leaves):
+                    np.testing.assert_allclose(
+                        np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5,
+                        err_msg=f"{policy} diverged from equal_static")
+
+    def test_loss_decreases(self, setup):
+        cfg, model, params, store = setup
+        store = dataclasses.replace(store, structured=True)
+        opt = AdamW(lr=5e-3, weight_decay=0.0)
+        trainer = HetTrainer(model, opt, RATES, store,
+                             policy="work_exchange_online", units_per_step=8)
+        _, _, hist = trainer.train(params, 12)
+        first = np.mean([h.loss for h in hist[:3]])
+        last = np.mean([h.loss for h in hist[-3:]])
+        assert last < first, (first, last)
+
+
+class TestVirtualTimeOrdering:
+    def test_work_exchange_beats_equal_static(self, setup):
+        """Paper Fig 5 on the integrated system: WE < naive equal split."""
+        t = {}
+        for policy in ("equal_static", "work_exchange",
+                       "work_exchange_online"):
+            _, _, hist = _run(setup, policy, steps=6)
+            t[policy] = np.mean([h.t_virtual for h in hist])
+        assert t["work_exchange"] < t["equal_static"]
+        assert t["work_exchange_online"] < t["equal_static"]
+
+    def test_oracle_bound_holds(self, setup):
+        _, _, hist = _run(setup, "work_exchange", steps=6)
+        oracle = 16 / RATES.sum()   # units_per_step / lambda_sum
+        for h in hist:
+            assert h.t_virtual >= 0.6 * oracle   # stochastic, but bounded
+
+    def test_het_static_beats_equal_static(self, setup):
+        te = np.mean([h.t_virtual
+                      for h in _run(setup, "equal_static", steps=6)[2]])
+        th = np.mean([h.t_virtual
+                      for h in _run(setup, "het_static", steps=6)[2]])
+        assert th < te
+
+
+class TestFaultTolerance:
+    def test_worker_failure_mid_training(self, setup):
+        """A dead worker's units get reassigned; learning is unaffected."""
+        cfg, model, params, store = setup
+        opt = AdamW(lr=1e-2, weight_decay=0.0)
+        t_ok = HetTrainer(model, opt, RATES, store, policy="work_exchange",
+                          units_per_step=16, seed=7)
+        p_ok, _, _ = t_ok.train(params, 2)
+        t_fail = HetTrainer(model, opt, RATES, store, policy="work_exchange",
+                            units_per_step=16, seed=7)
+        p_fail, _, hist = t_fail.train(params, 2, failures={1: [3]})
+        for a, b in zip(jax.tree.leaves(p_ok), jax.tree.leaves(p_fail)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-5)
+
+    def test_coded_tolerates_straggler_without_exchange(self, setup):
+        _, _, hist = _run(setup, "gradient_coded", steps=2,
+                          coded_stragglers=1)
+        assert all(h.iterations == 1 for h in hist)   # no coordination
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_retention(self, setup, tmp_path):
+        cfg, model, params, store = setup
+        opt = AdamW(lr=1e-2)
+        state = opt.init(params)
+        for s in (1, 2, 3, 4):
+            save_checkpoint(tmp_path, s, (params, state), extra={"s": s},
+                            keep=2)
+        assert latest_checkpoint(tmp_path).name == "step_00000004"
+        ckpts = sorted(p.name for p in tmp_path.iterdir())
+        assert ckpts == ["step_00000003", "step_00000004"]
+        (p2, s2), extra = restore_checkpoint(latest_checkpoint(tmp_path),
+                                             (params, state))
+        assert extra == {"s": 4}
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_elastic_rate_reshard(self):
+        rates = np.array([2.0, 4.0, 6.0])
+        grown = reshard_rates(rates, 5)
+        assert grown.shape == (5,)
+        np.testing.assert_allclose(grown[3:], 4.0)    # mean prior
+        shrunk = reshard_rates(rates, 2)
+        np.testing.assert_allclose(shrunk, [2.0, 4.0])
+
+
+class TestCompression:
+    def test_int8_saves_bytes_and_converges(self, setup):
+        cfg, model, params, store = setup
+        opt = AdamW(lr=1e-2, weight_decay=0.0)
+        dense = HetTrainer(model, opt, RATES, store, policy="work_exchange",
+                           units_per_step=8, seed=7)
+        _, _, h_dense = dense.train(params, 2)
+        comp = HetTrainer(model, opt, RATES, store, policy="work_exchange",
+                          units_per_step=8, seed=7,
+                          compressor=Int8Compressor())
+        p_c, _, h_comp = comp.train(params, 2)
+        assert h_comp[0].grad_bytes < 0.3 * h_dense[0].grad_bytes
+        assert all(np.isfinite(h.loss) for h in h_comp)
+
+    def test_topk_error_feedback_recovers_mass(self, setup):
+        cfg, model, params, store = setup
+        comp = TopKCompressor(frac=0.25)
+        g = jax.tree.map(lambda x: jnp.ones_like(x, jnp.float32), params)
+        out1, _ = comp.roundtrip(g, 0)
+        out2, _ = comp.roundtrip(g, 0)
+        # second round ships accumulated residual: more mass than round 1
+        m1 = sum(float(jnp.sum(x)) for x in jax.tree.leaves(out1))
+        m2 = sum(float(jnp.sum(x)) for x in jax.tree.leaves(out2))
+        assert m2 >= m1

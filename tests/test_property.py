@@ -1,0 +1,162 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import oracle, simulator
+from repro.core.assignment import (capped_proportional_assignment,
+                                   largest_remainder_round,
+                                   proportional_assignment)
+from repro.core.coded import GradientCoding, MDSCodedMatmul
+from repro.core.exchange import MasterScheduler
+from repro.core.runtime import VirtualWorkerPool
+from repro.core.types import ExchangeConfig, HetSpec
+
+SETTINGS = dict(deadline=None, max_examples=40,
+                suppress_health_check=[HealthCheck.too_slow])
+
+rates_strategy = st.lists(st.floats(0.05, 50.0), min_size=2, max_size=12)
+
+
+class TestAssignmentProperties:
+    @given(shares=st.lists(st.floats(0.0, 100.0), min_size=1, max_size=20),
+           total=st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_largest_remainder_exact_total(self, shares, total):
+        out = largest_remainder_round(np.array(shares), total)
+        assert out.sum() == total
+        assert (out >= 0).all()
+
+    @given(rates=rates_strategy, n=st.integers(1, 5000),
+           cap_frac=st.floats(0.3, 3.0))
+    @settings(**SETTINGS)
+    def test_capped_never_exceeds_cap_or_total(self, rates, n, cap_frac):
+        K = len(rates)
+        cap = max(1, int(cap_frac * n / K))
+        out = capped_proportional_assignment(np.array(rates), n, cap)
+        assert (out <= cap).all()
+        assert out.sum() <= n
+
+    @given(rates=rates_strategy, n=st.integers(1, 100_000))
+    @settings(**SETTINGS)
+    def test_proportional_monotone_in_rate(self, rates, n):
+        out = proportional_assignment(np.array(rates), n)
+        order = np.argsort(rates)
+        assigned = out[order]
+        # monotone up to rounding by 1 unit
+        assert all(assigned[i] <= assigned[i + 1] + 1
+                   for i in range(len(rates) - 1))
+
+
+class TestSchedulerProperties:
+    @given(rates=rates_strategy, n=st.integers(1, 400),
+           seed=st.integers(0, 2**31 - 1),
+           known=st.booleans())
+    @settings(**SETTINGS)
+    def test_work_conservation_every_unit_once(self, rates, n, seed, known):
+        K = len(rates)
+        sched = MasterScheduler(range(n), K,
+                                rates=np.array(rates) if known else None)
+        pool = VirtualWorkerPool(rates, seed=seed)
+        guard = 0
+        while not sched.finished and guard < 500:
+            a = sched.next_assignment()
+            if a is None:
+                break
+            elapsed, done = pool.run_epoch(a)
+            sched.report(done, elapsed)
+            guard += 1
+        assert sorted(sched.done_ids) == list(range(n))
+
+    @given(rates=rates_strategy, n=st.integers(10, 400),
+           seed=st.integers(0, 2**31 - 1),
+           fail_worker=st.integers(0, 11))
+    @settings(**SETTINGS)
+    def test_work_conservation_under_failure(self, rates, n, seed,
+                                             fail_worker):
+        K = len(rates)
+        if K < 2:
+            return
+        fail_worker %= K
+        sched = MasterScheduler(range(n), K, rates=np.array(rates))
+        pool = VirtualWorkerPool(rates, seed=seed)
+        dead = np.zeros(K, bool)
+        epoch = 0
+        while not sched.finished and epoch < 500:
+            a = sched.next_assignment()
+            if a is None:
+                break
+            if epoch == 1:
+                dead[fail_worker] = True
+            elapsed, done = pool.run_epoch(a, dead)
+            sched.report(done, elapsed)
+            if epoch == 1:
+                sched.mark_failed(fail_worker)
+            epoch += 1
+        assert sorted(sched.done_ids) == list(range(n))
+
+
+class TestStochasticModelProperties:
+    @given(rates=rates_strategy, n=st.integers(1, 2000),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(**SETTINGS)
+    def test_no_policy_beats_oracle_in_expectation(self, rates, n, seed):
+        het = HetSpec(np.array(rates))
+        rng = np.random.default_rng(seed)
+        cfg = ExchangeConfig(known_heterogeneity=True)
+        mc = simulator.work_exchange_mc(het, n, cfg, trials=8, rng=rng)
+        # allow MC noise: 8 trials of a >= bound quantity
+        assert mc.t_comp > 0.5 * n / het.lambda_sum
+
+    @given(rates=rates_strategy, n=st.integers(1, 500),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(**SETTINGS)
+    def test_simulated_run_conserves_work(self, rates, n, seed):
+        het = HetSpec(np.array(rates))
+        rng = np.random.default_rng(seed)
+        stats = simulator.simulate_work_exchange(
+            het, n, ExchangeConfig(known_heterogeneity=False), rng)
+        stats.check_work_conserved(n)    # raises on violation
+        assert stats.t_comp >= 0
+        assert stats.n_comm >= 0
+
+
+class TestCodedProperties:
+    @given(rows=st.integers(2, 40), d=st.integers(1, 8),
+           K=st.integers(2, 7), seed=st.integers(0, 1000))
+    @settings(**SETTINGS)
+    def test_mds_decode_from_any_L_subset(self, rows, d, K, seed):
+        rng = np.random.default_rng(seed)
+        L = rng.integers(1, K + 1)
+        A = rng.normal(size=(rows, d))
+        x = rng.normal(size=(d,))
+        code = MDSCodedMatmul(K=K, L=int(L))
+        chunks = code.encode(A)
+        workers = rng.choice(K, size=int(L), replace=False)
+        replies = {int(w): chunks[int(w)] @ x for w in workers}
+        np.testing.assert_allclose(code.decode(replies), A @ x,
+                                   rtol=1e-6, atol=1e-6)
+
+    @given(n_units=st.integers(1, 30), seed=st.integers(0, 1000))
+    @settings(**SETTINGS)
+    def test_gradient_coding_covers_with_any_group_survivor(self, n_units,
+                                                            seed):
+        rng = np.random.default_rng(seed)
+        K, s = 6, 2
+        gc = GradientCoding(K=K, s=s)
+        owners = gc.assignment(n_units)
+        grads = [rng.normal(size=3) for _ in range(n_units)]
+        # drop one whole replica group except one worker per... the FR code
+        # guarantees recovery when, per replica group, the survivors still
+        # cover the partition: drop any s workers
+        drop = set(rng.choice(K, size=s, replace=False).tolist())
+        replies = {w: {u: grads[u] for u in owners[w]}
+                   for w in range(K) if w not in drop}
+        try:
+            out = gc.decode(n_units, replies)
+            np.testing.assert_allclose(out, np.sum(grads, axis=0), rtol=1e-9)
+        except ValueError:
+            # dropping s workers in the same group CAN uncover units only if
+            # they constitute a full cover of some unit -- with s+1=3 groups
+            # and s=2 drops, every unit still has >= 1 replica: must decode
+            raise
