@@ -1,8 +1,11 @@
 """Shared benchmark configuration (paper Section 7 settings)."""
 from __future__ import annotations
 
+from typing import Dict
+
 import numpy as np
 
+from repro.core.schemes import Scheme, get_scheme
 from repro.core.types import ExchangeConfig, HetSpec
 
 # paper: N = 1e6 points, K = 50 workers, threshold 0.01 * N/K
@@ -24,3 +27,14 @@ def we_cfg(known: bool, threshold_frac: float = THRESHOLD_FRAC
            ) -> ExchangeConfig:
     return ExchangeConfig(known_heterogeneity=known,
                           threshold_frac=threshold_frac)
+
+
+# registry-resolved scheme panel shared by the figure drivers; extend this
+# tuple (or register a new scheme) and it shows up in fig5 + the BENCH json
+FIG_SCHEMES = ("mds", "fixed", "work_exchange", "work_exchange_unknown",
+               "het_mds")
+
+
+def scheme_panel() -> Dict[str, Scheme]:
+    """name -> configured Scheme instance for the figure sweeps."""
+    return {name: get_scheme(name) for name in FIG_SCHEMES}

@@ -1,32 +1,38 @@
 """Paper Figures 6a/6b: extra communication N_comm/N and reassignment
 iterations I versus heterogeneity variance sigma^2, for work exchange
-with and without heterogeneity knowledge (mu = 50, K = 50, N = 1e6)."""
+with and without heterogeneity knowledge (mu = 50, K = 50, N = 1e6).
+
+Both variants are resolved through the scheme registry; the vectorized
+MC engine makes the trials dimension free."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import simulator
-from .common import HET_DRAWS, N_PAPER, TRIALS, make_het, we_cfg
+from repro.core.schemes import get_scheme
+from .common import HET_DRAWS, N_PAPER, THRESHOLD_FRAC, make_het
 
 MU = 50.0
 SIGMA2S = (0.0, 166.0, 333.0, 500.0, 666.0, 833.0)   # up to mu^2/3
+
+VARIANTS = (("known", "work_exchange"), ("unknown", "work_exchange_unknown"))
 
 
 def run(n: int = N_PAPER, draws: int = HET_DRAWS, trials: int = 4,
         quick: bool = False):
     rows = []
     sigma2s = SIGMA2S[::2] if quick else SIGMA2S
+    schemes = {label: get_scheme(name, threshold_frac=THRESHOLD_FRAC)
+               for label, name in VARIANTS}
     for sigma2 in sigma2s:
-        acc = {("known", "comm"): [], ("known", "iters"): [],
-               ("unknown", "comm"): [], ("unknown", "iters"): []}
+        acc = {(lbl, met): [] for lbl, _ in VARIANTS
+               for met in ("comm", "iters")}
         for d in range(draws if not quick else max(4, draws // 4)):
             het = make_het(MU, sigma2, seed=1000 + d)
             rng = np.random.default_rng(d)
-            for label, known in (("known", True), ("unknown", False)):
-                mc = simulator.work_exchange_mc(het, n, we_cfg(known),
-                                                trials, rng)
-                acc[(label, "comm")].append(mc.n_comm / n)
-                acc[(label, "iters")].append(mc.iterations)
+            for label, scheme in schemes.items():
+                rep = scheme.mc(het, n, trials=trials, rng=rng)
+                acc[(label, "comm")].append(rep.n_comm / n)
+                acc[(label, "iters")].append(rep.iterations)
         rows.append({
             "sigma2": sigma2,
             "comm_known": float(np.mean(acc[("known", "comm")])),

@@ -1,12 +1,15 @@
 """Paper Figure 7: reassignment iterations I versus the cutting threshold
 N_rem^th for the unknown-heterogeneity work exchange (mu = 50), and the
-companion claim that T_comp stays near-oracle at the default threshold."""
+companion claim that T_comp stays near-oracle at the default threshold.
+
+The threshold is a Scheme constructor parameter, so the sweep is just
+``get_scheme("work_exchange_unknown", threshold_frac=frac)``."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import simulator
-from .common import K_PAPER, N_PAPER, make_het, we_cfg
+from repro.core.schemes import get_scheme
+from .common import N_PAPER, make_het
 
 MU = 50.0
 SIGMA2S = (0.0, 277.0, 833.0)
@@ -23,11 +26,11 @@ def run(n: int = N_PAPER, trials: int = 8, quick: bool = False):
         oracle_t = n / het.lambda_sum
         for frac in fracs:
             rng = np.random.default_rng(int(frac * 1e6))
-            mc = simulator.work_exchange_mc(het, n, we_cfg(False, frac),
-                                            trials, rng)
+            scheme = get_scheme("work_exchange_unknown", threshold_frac=frac)
+            rep = scheme.mc(het, n, trials=trials, rng=rng)
             rows.append({"sigma2": sigma2, "threshold_frac": frac,
-                         "iters": mc.iterations,
-                         "t_comp_over_oracle": mc.t_comp / oracle_t})
+                         "iters": rep.iterations,
+                         "t_comp_over_oracle": rep.t_comp / oracle_t})
     return rows
 
 

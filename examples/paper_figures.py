@@ -1,5 +1,9 @@
 """Regenerate every paper figure's data to CSV under results/figures/.
 
+The figure modules resolve every policy through the scheme registry
+(``repro.core.schemes``); a newly registered scheme shows up in the fig5
+CSV automatically via ``benchmarks.common.FIG_SCHEMES``.
+
 Run:  PYTHONPATH=src python examples/paper_figures.py [--quick]
 """
 import argparse
@@ -31,8 +35,6 @@ def main():
     dump(fig5.run(quick=args.quick), out / "fig5_completion_time.csv")
     dump(fig6.run(quick=args.quick), out / "fig6_comm_and_iters.csv")
     dump(fig7.run(quick=args.quick), out / "fig7_threshold.csv")
-    for mod, rows_fn in (("fig5", fig5), ("fig6", fig6), ("fig7", fig7)):
-        pass
     print("done")
 
 

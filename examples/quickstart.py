@@ -1,9 +1,16 @@
 """Quickstart: the paper in 60 seconds.
 
 1. Builds a heterogeneous 50-worker cluster (rates ~ Uniform).
-2. Compares oracle bound / optimized-MDS / fixed / work-exchange times.
+2. Compares every registered scheduling scheme through the unified
+   registry API -- three lines per scheme:
+
+       het = HetSpec.uniform_random(K, mu, sigma2, rng)
+       report = get_scheme("work_exchange").mc(het, N, trials, rng)
+       print(report.t_comp, report.iterations, report.n_comm)
+
 3. Runs a REAL tiny-transformer training step under the work-exchange
-   scheduler (virtual clocks, real gradients).
+   scheduler (virtual clocks, real gradients) -- the same registry
+   resolves the training policy.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,8 +20,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.core import simulator
-from repro.core.types import ExchangeConfig, HetSpec
+from repro.core import HetSpec, get_scheme, list_schemes
 from repro.data import UnitStore
 from repro.distributed.hetsched import HetTrainer
 from repro.models import build_model
@@ -22,30 +28,27 @@ from repro.optim import AdamW
 
 
 def main():
-    # --- 1. the paper's setting -------------------------------------------
+    # --- 1. the paper's setting, one registry call per scheme --------------
     N, K = 100_000, 50
     rng = np.random.default_rng(0)
     het = HetSpec.uniform_random(K, mu=50.0, sigma2=50.0 ** 2 / 6, rng=rng)
     oracle = N / het.lambda_sum
     print(f"cluster: K={K}, lambda_sum={het.lambda_sum:.1f}")
-    print(f"oracle lower bound (Thm 1):      {oracle:.3f} s")
+    print(f"registered schemes: {', '.join(list_schemes())}")
+    print(f"oracle lower bound (Thm 1):       {oracle:.3f} s")
 
-    L, t_mds = simulator.mds_optimize(het, N, trials=50, rng=rng)
-    print(f"optimized (K,L)-MDS  (L*={L:2d}):   {t_mds:.3f} s "
-          f"(+{100 * (t_mds / oracle - 1):.1f}%)")
-    t_fix = simulator.fixed_mean_time(het, N, 200, rng)
-    print(f"het-aware fixed assignment:      {t_fix:.3f} s "
-          f"(+{100 * (t_fix / oracle - 1):.1f}%)")
-    for known in (True, False):
-        mc = simulator.work_exchange_mc(
-            het, N, ExchangeConfig(known_heterogeneity=known), 30, rng)
-        lbl = "known" if known else "unknown"
-        print(f"work exchange ({lbl:7s} rates):  {mc.t_comp:.3f} s "
-              f"(+{100 * (mc.t_comp / oracle - 1):.1f}%), "
-              f"I={mc.iterations:.1f}, N_comm/N={mc.n_comm / N:.4f}")
+    panel = ("mds", "fixed", "work_exchange", "work_exchange_unknown",
+             "het_mds")
+    for name in panel:
+        rep = get_scheme(name).mc(het, N, trials=30, rng=rng)
+        extra = "".join(f" {k}={v:g}" for k, v in rep.extra.items())
+        print(f"{name:22s} {rep.t_comp:9.3f} s "
+              f"(+{100 * (rep.t_comp / oracle - 1):5.1f}%)  "
+              f"I={rep.iterations:5.1f}  N_comm/N={rep.n_comm / N:.4f}"
+              f"{extra}")
 
-    # --- 2. real training under the scheduler ------------------------------
-    print("\nwork-exchange training (real gradients, virtual clocks):")
+    # --- 2. real training under the work exchange scheduler ----------------
+    print("\nwork exchange training (real gradients, virtual clocks):")
     cfg = dataclasses.replace(smoke_config(get_config("phi3-mini-3.8b")),
                               dtype="float32")
     model = build_model(cfg)

@@ -5,17 +5,39 @@ Layout
   oracle       -- Theorem 1 lower bound + Corollary 2 (+ enumerated check)
   erlang       -- exact non-iid Erlang order statistics (eqs. 4-5)
   mds          -- optimized (K, L) MDS baseline (eq. 6), exact + Monte Carlo
-  assignment   -- proportional / capped / uniform allocation rules
+  assignment   -- proportional / capped / uniform allocation rules, scalar
+                  and trial-batched (largest-remainder, water-filling)
   estimator    -- online rate estimation (paper eq. 23 + EMA + Bayesian)
   exchange     -- unit-id-level master protocol (Algorithms 1 & 3)
-  simulator    -- exact vectorized Monte-Carlo engine (paper figures)
+  schemes      -- THE policy surface: Scheme protocol + SCHEME_REGISTRY +
+                  trial-vectorized Monte-Carlo engine.  All five paper
+                  schemes (fixed, uniform, oracle, mds/mds_opt, work
+                  exchange known/unknown) plus scenario schemes (het_mds,
+                  trace_replay, gradient_coded) live here; figures,
+                  examples, and the training driver resolve policies via
+                  get_scheme(name).
+  simulator    -- DEPRECATED free-function shims over ``schemes``
   coded        -- executable MDS matmul + gradient coding baselines
   runtime      -- real-JAX-gradients / virtual-clock heterogeneous runtime
+                  (``VirtualWorkerPool`` incl. measured-trace replay)
+
+Three-line API:
+
+    >>> from repro.core import HetSpec, get_scheme
+    >>> het = HetSpec.uniform_random(50, 50.0, 50.0**2 / 6, rng)
+    >>> report = get_scheme("work_exchange").mc(het, N=1_000_000,
+    ...                                         trials=100, rng=rng)
 """
-from . import assignment, coded, erlang, estimator, exchange, mds, oracle, simulator
+from . import (assignment, coded, erlang, estimator, exchange, mds, oracle,
+               schemes, simulator)
+from .schemes import (MCReport, Scheme, SCHEME_REGISTRY, get_scheme,
+                      list_schemes, register_scheme)
 from .types import ExchangeConfig, HetSpec, RunStats
 
 __all__ = [
     "assignment", "coded", "erlang", "estimator", "exchange", "mds",
-    "oracle", "simulator", "ExchangeConfig", "HetSpec", "RunStats",
+    "oracle", "schemes", "simulator",
+    "MCReport", "Scheme", "SCHEME_REGISTRY", "get_scheme", "list_schemes",
+    "register_scheme",
+    "ExchangeConfig", "HetSpec", "RunStats",
 ]

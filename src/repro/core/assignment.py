@@ -10,7 +10,12 @@ import numpy as np
 
 
 def largest_remainder_round(shares: np.ndarray, total: int) -> np.ndarray:
-    """Round non-negative real shares (summing ~ total) to ints summing to total."""
+    """Round non-negative real shares (summing ~ total) to ints summing to total.
+
+    The trial-batched variant (`largest_remainder_round_batch`) applies the
+    same sort routine per row, so both paths break remainder ties
+    identically and produce bit-identical assignments from the same inputs.
+    """
     shares = np.asarray(shares, dtype=np.float64)
     if total == 0:
         return np.zeros_like(shares, dtype=np.int64)
@@ -22,6 +27,34 @@ def largest_remainder_round(shares: np.ndarray, total: int) -> np.ndarray:
     if short > 0:
         order = np.argsort(-(scaled - floor))  # biggest remainders first
         floor[order[:short]] += 1
+    return floor
+
+
+def largest_remainder_round_batch(shares: np.ndarray,
+                                  totals: np.ndarray) -> np.ndarray:
+    """Row-wise ``largest_remainder_round``: shares (T, K), totals (T,).
+
+    Each row i is rounded exactly as ``largest_remainder_round(shares[i],
+    totals[i])`` would round it (same ones-fallback for degenerate rows, same
+    stable tie-break), but in O(T K log K) vectorized work with no Python
+    loop over trials.
+    """
+    shares = np.asarray(shares, dtype=np.float64)
+    totals = np.asarray(totals, dtype=np.int64)
+    T, K = shares.shape
+    row_sum = shares.sum(axis=1)
+    if (row_sum <= 0).any():
+        shares = np.where((row_sum <= 0)[:, None], 1.0, shares)
+        row_sum = shares.sum(axis=1)
+    scaled = shares * (totals / row_sum)[:, None]
+    floor = scaled.astype(np.int64)        # scaled >= 0, so trunc == floor
+    short = totals - floor.sum(axis=1)
+    order = np.argsort(floor - scaled, axis=1)
+    rank = np.empty_like(order)
+    np.put_along_axis(rank, order, np.broadcast_to(np.arange(K), (T, K)), 1)
+    floor += rank < short[:, None]
+    if (totals == 0).any():
+        floor = np.where((totals == 0)[:, None], 0, floor)
     return floor
 
 
@@ -59,6 +92,39 @@ def capped_proportional_assignment(lambdas: np.ndarray, n_rem: int,
         newly_capped = assign >= cap
         if not (newly_capped & active).any():
             break
+        active &= ~newly_capped
+    return assign
+
+
+def capped_proportional_assignment_batch(lambdas: np.ndarray,
+                                         n_rem: np.ndarray,
+                                         cap: int) -> np.ndarray:
+    """Row-wise ``capped_proportional_assignment``: lambdas (T, K), n_rem (T,).
+
+    Replays the scalar water-filling rounds for every trial at once; trials
+    exit the round loop independently (same break conditions as the scalar
+    code), so row i equals ``capped_proportional_assignment(lambdas[i],
+    n_rem[i], cap)`` exactly.
+    """
+    lam = np.asarray(lambdas, dtype=np.float64)
+    T, K = lam.shape
+    assign = np.zeros((T, K), dtype=np.int64)
+    remaining = np.asarray(n_rem, dtype=np.int64).copy()
+    active = np.ones((T, K), dtype=bool)
+    looping = np.ones(T, dtype=bool)
+    for _ in range(K):
+        looping &= (remaining > 0) & active.any(axis=1)
+        if not looping.any():
+            break
+        share = largest_remainder_round_batch(np.where(active, lam, 0.0),
+                                              np.where(looping, remaining, 0))
+        room = cap - assign
+        take = np.minimum(share, np.maximum(room, 0))
+        take = np.where(looping[:, None], take, 0)
+        assign += take
+        remaining -= take.sum(axis=1)
+        newly_capped = assign >= cap
+        looping &= (newly_capped & active).any(axis=1)
         active &= ~newly_capped
     return assign
 

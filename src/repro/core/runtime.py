@@ -29,20 +29,46 @@ class FailureEvent:
 
 
 class VirtualWorkerPool:
-    """K workers with true rates; executes one epoch of an Assignment."""
+    """K workers with true rates; executes one epoch of an Assignment.
+
+    ``traces`` (optional, shape (K, E)) replays measured per-epoch service
+    rates instead of the stationary ``rates``: epoch e runs at column
+    ``e % E``, so a finite trace wraps around.  ``rates`` still names the
+    nominal speeds the scheduler may be told about.
+    """
 
     def __init__(self, rates: Sequence[float], seed: int = 0,
-                 unit_cost: float = 1.0):
+                 unit_cost: float = 1.0,
+                 traces: Optional[np.ndarray] = None,
+                 rng: Optional[np.random.Generator] = None):
         self.rates = np.asarray(rates, dtype=np.float64)
         self.K = self.rates.size
-        self.rng = np.random.default_rng(seed)
+        self.rng = rng if rng is not None else np.random.default_rng(seed)
         self.unit_cost = float(unit_cost)   # scales service times uniformly
+        self.traces = None
+        if traces is not None:
+            traces = np.asarray(traces, dtype=np.float64)
+            if traces.ndim != 2 or traces.shape[0] != self.K:
+                raise ValueError(f"traces must be (K={self.K}, E); "
+                                 f"got {traces.shape}")
+            if np.any(traces <= 0) or not np.all(np.isfinite(traces)):
+                raise ValueError("trace rates must be finite and positive")
+            self.traces = traces
+        self.epoch = 0
+
+    def rates_at(self, epoch: int) -> np.ndarray:
+        """True service rates in effect during ``epoch``."""
+        if self.traces is None:
+            return self.rates
+        return self.traces[:, epoch % self.traces.shape[1]]
 
     def run_epoch(self, assignment: Assignment,
                   dead: Optional[np.ndarray] = None
                   ) -> tuple[float, np.ndarray]:
         """Returns (elapsed, done_counts).  wait_all => run to completion;
         otherwise stop at the first completion flag (work-exchange epoch)."""
+        rates = self.rates_at(self.epoch)
+        self.epoch += 1
         sizes = assignment.sizes
         dead = np.zeros(self.K, bool) if dead is None else dead
         t_k = np.full(self.K, np.inf)
@@ -50,7 +76,7 @@ class VirtualWorkerPool:
         if not busy.any():
             return 0.0, np.zeros(self.K, dtype=np.int64)
         t_k[busy] = self.rng.gamma(shape=sizes[busy],
-                                   scale=self.unit_cost / self.rates[busy])
+                                   scale=self.unit_cost / rates[busy])
         done = np.zeros(self.K, dtype=np.int64)
         if assignment.wait_all:
             done[busy] = sizes[busy]

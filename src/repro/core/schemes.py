@@ -1,0 +1,843 @@
+"""Unified ``Scheme`` API: one registry-driven policy surface.
+
+Every scheduling policy in the repo -- the paper's five (fixed, oracle,
+MDS / optimized MDS, work exchange with known/unknown heterogeneity) and
+the beyond-paper scenario schemes (heterogeneous-coded ``het_mds``,
+``trace_replay``, ``gradient_coded``) -- implements the same three-method
+surface:
+
+    plan(het, N)                -> Assignment   (id-level initial queues)
+    simulate(het, N, rng)       -> RunStats     (one exact trial)
+    mc(het, N, trials, rng)     -> MCReport     (uniform mean/std report)
+
+Schemes are string-keyed in ``SCHEME_REGISTRY`` (the same pattern as
+``repro.configs.ARCHS``): ``@register_scheme`` / ``get_scheme`` /
+``list_schemes``.  Adding a scheme here makes it reachable from every
+figure driver (``benchmarks/fig5|6|7``), the examples, and the training
+driver (``distributed/hetsched.py``) with no further wiring:
+
+    >>> rng = np.random.default_rng(0)
+    >>> het = HetSpec.uniform_random(50, mu=50.0, sigma2=50**2/6, rng=rng)
+    >>> get_scheme("work_exchange").mc(het, N=1_000_000, trials=100, rng=rng)
+
+The work-exchange Monte Carlo is fully vectorized across trials (batched
+Gamma/argmin/Binomial under a per-trial active mask); the scalar
+single-trial path is kept both as the per-trial reference the batched
+engine is validated against seed-for-seed (``engine="loop"``) and as the
+``simulate`` implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Literal, Optional, Sequence, Tuple, Type
+
+import numpy as np
+
+from .assignment import (capped_proportional_assignment,
+                         capped_proportional_assignment_batch,
+                         largest_remainder_round,
+                         largest_remainder_round_batch,
+                         proportional_assignment, uniform_assignment)
+from .exchange import Assignment, MasterScheduler
+from .types import ExchangeConfig, HetSpec, RunStats
+
+
+# ---------------------------------------------------------------------------
+# uniform Monte-Carlo report
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MCReport:
+    """What every scheme's ``mc`` returns: same shape for all policies.
+
+    Means/stds are over trials.  Per-trial arrays are attached only when
+    ``mc(..., keep_trials=True)`` -- the report stays cheap by default.
+    ``extra`` carries scheme-specific derived values (e.g. the optimized
+    MDS ``L``); the uniform fields never move there.
+    """
+
+    scheme: str
+    trials: int
+    t_comp: float               # mean completion time
+    t_comp_std: float
+    iterations: float           # mean reassignment epochs I
+    iterations_std: float
+    n_comm: float               # mean extra communication (units, eq. 2)
+    n_comm_std: float
+    extra: Dict[str, float] = dataclasses.field(default_factory=dict)
+    t_comp_trials: Optional[np.ndarray] = None
+    iterations_trials: Optional[np.ndarray] = None
+    n_comm_trials: Optional[np.ndarray] = None
+
+    # legacy ExchangeMC field names (pre-registry callers)
+    @property
+    def t_std(self) -> float:
+        return self.t_comp_std
+
+    @property
+    def i_std(self) -> float:
+        return self.iterations_std
+
+    @property
+    def c_std(self) -> float:
+        return self.n_comm_std
+
+
+def _report(scheme: str, ts: np.ndarray, its: np.ndarray, cs: np.ndarray,
+            keep_trials: bool = False,
+            extra: Optional[Dict[str, float]] = None) -> MCReport:
+    ts, its, cs = (np.asarray(a, dtype=np.float64) for a in (ts, its, cs))
+    return MCReport(
+        scheme=scheme, trials=int(ts.size),
+        t_comp=float(ts.mean()), t_comp_std=float(ts.std()),
+        iterations=float(its.mean()), iterations_std=float(its.std()),
+        n_comm=float(cs.mean()), n_comm_std=float(cs.std()),
+        extra=dict(extra or {}),
+        t_comp_trials=ts if keep_trials else None,
+        iterations_trials=its if keep_trials else None,
+        n_comm_trials=cs if keep_trials else None)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+SCHEME_REGISTRY: Dict[str, Type["Scheme"]] = {}
+_ALIASES: Dict[str, str] = {}
+
+
+def register_scheme(name: str, *, aliases: Sequence[str] = ()):
+    """Class decorator: key a Scheme subclass under ``name`` (+ aliases)."""
+    def deco(cls: Type["Scheme"]) -> Type["Scheme"]:
+        for key in (name, *aliases):
+            if key in SCHEME_REGISTRY or key in _ALIASES:
+                raise ValueError(f"scheme name {key!r} already registered")
+        cls.name = name
+        SCHEME_REGISTRY[name] = cls
+        for a in aliases:
+            _ALIASES[a] = name
+        return cls
+    return deco
+
+
+def get_scheme(name: str, **params) -> "Scheme":
+    """Instantiate a registered scheme by canonical name or alias."""
+    canonical = _ALIASES.get(name, name)
+    if canonical not in SCHEME_REGISTRY:
+        raise KeyError(f"unknown scheme {name!r}; have {list_schemes()} "
+                       f"(aliases: {sorted(_ALIASES)})")
+    return SCHEME_REGISTRY[canonical](**params)
+
+
+def list_schemes(include_aliases: bool = False) -> List[str]:
+    names = sorted(SCHEME_REGISTRY)
+    if include_aliases:
+        names += sorted(_ALIASES)
+    return names
+
+
+# ---------------------------------------------------------------------------
+# base class
+# ---------------------------------------------------------------------------
+
+class Scheme:
+    """Common surface of every scheduling policy.
+
+    Subclasses implement ``initial_sizes`` + ``simulate`` and may override
+    ``mc`` with a trial-vectorized engine; the default ``mc`` loops
+    ``simulate``.  ``redundant`` marks schemes that ship more than N units
+    (coded redundancy), where exact unit-level conservation does not apply.
+    """
+
+    name: str = "abstract"
+    redundant: bool = False
+    plan_wait_all: bool = True    # static schemes wait for the max
+
+    # -- planning -----------------------------------------------------------
+
+    def initial_sizes(self, het: HetSpec, N: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def plan(self, het: HetSpec, N: int) -> Assignment:
+        """Initial id-level queues (contiguous unit ids per worker)."""
+        sizes = self.initial_sizes(het, N)
+        queues: List[List[int]] = []
+        nxt = 0
+        for s in sizes:
+            queues.append(list(range(nxt, nxt + int(s))))
+            nxt += int(s)
+        return Assignment(queues=queues, wait_all=self.plan_wait_all)
+
+    # -- simulation ---------------------------------------------------------
+
+    def simulate(self, het: HetSpec, N: int,
+                 rng: np.random.Generator) -> RunStats:
+        raise NotImplementedError
+
+    def mc(self, het: HetSpec, N: int, trials: int,
+           rng: np.random.Generator, keep_trials: bool = False) -> MCReport:
+        ts = np.empty(trials)
+        its = np.empty(trials)
+        cs = np.empty(trials)
+        for i in range(trials):
+            s = self.simulate(het, N, rng)
+            ts[i], its[i], cs[i] = s.t_comp, s.iterations, s.n_comm
+        return _report(self.name, ts, its, cs, keep_trials)
+
+    # -- executable protocol (training/serving runtimes) --------------------
+
+    def make_scheduler(self, unit_ids: Sequence[int],
+                       rates: Optional[np.ndarray] = None,
+                       estimator=None,
+                       threshold_frac: Optional[float] = None
+                       ) -> MasterScheduler:
+        raise NotImplementedError(
+            f"scheme {self.name!r} has no executable master protocol")
+
+
+# ---------------------------------------------------------------------------
+# scalar single-trial primitives (the reference path)
+# ---------------------------------------------------------------------------
+
+def _iteration_outcome(assign: np.ndarray, lambdas: np.ndarray,
+                       rng: np.random.Generator):
+    """One work-exchange iteration: returns (t_star, done) exactly.
+
+    Poisson-process conditioning: given worker k's n_k-th arrival at T_k,
+    the earlier n_k - 1 epochs are uniform order statistics on (0, T_k), so
+    N_done | T_k ~ Binomial(n_k - 1, T*/T_k) for non-finishing workers.
+    """
+    K = assign.size
+    t_k = np.full(K, np.inf)
+    busy = assign > 0
+    t_k[busy] = rng.gamma(shape=assign[busy], scale=1.0 / lambdas[busy])
+    finisher = int(np.argmin(t_k))
+    t_star = float(t_k[finisher])
+    done = np.zeros(K, dtype=np.int64)
+    done[finisher] = assign[finisher]
+    others = busy.copy()
+    others[finisher] = False
+    if others.any():
+        n = assign[others] - 1
+        p = np.clip(t_star / t_k[others], 0.0, 1.0)
+        done[others] = rng.binomial(np.maximum(n, 0), p)
+    return t_star, done
+
+
+def _final_phase(assign: np.ndarray, lambdas: np.ndarray,
+                 rng: np.random.Generator) -> float:
+    """Below the cutting threshold: assign and wait for ALL workers (max)."""
+    busy = assign > 0
+    if not busy.any():
+        return 0.0
+    t_k = rng.gamma(shape=assign[busy], scale=1.0 / lambdas[busy])
+    return float(t_k.max())
+
+
+def simulate_work_exchange_scalar(het: HetSpec, N: int, cfg: ExchangeConfig,
+                                  rng: np.random.Generator,
+                                  capped_mode: Literal["carry", "waterfill"]
+                                  = "carry") -> RunStats:
+    """Algorithms 1 (known het) and 3 (unknown het), single trial."""
+    lam = het.lambdas
+    K = het.K
+    threshold = cfg.threshold_frac * N / K
+    cap = (np.inf if cfg.storage_cap_frac is None or cfg.known_heterogeneity
+           else int(np.ceil(cfg.storage_cap_frac * N / K)))
+
+    # estimator state (paper eq. 23)
+    est_done = np.zeros(K, dtype=np.float64)
+    est_time = 0.0
+    lam_hat = np.ones(K, dtype=np.float64)
+
+    n_rem = N                       # unassigned + leftover units
+    n_left_prev = np.zeros(K, dtype=np.int64)   # leftover held by workers
+    n_done = np.zeros(K, dtype=np.int64)
+    t_comp = 0.0
+    n_comm = 0.0
+    iters = 0
+    t_iter = []
+
+    while n_rem > threshold and iters < cfg.max_iterations:
+        rates = lam if cfg.known_heterogeneity else lam_hat
+        if np.isinf(cap):
+            assign = proportional_assignment(rates, n_rem)
+        elif capped_mode == "waterfill":
+            assign = capped_proportional_assignment(rates, n_rem, cap)
+        else:  # paper-faithful: plain min(cap, share), carry the remainder
+            share = largest_remainder_round(rates, n_rem)
+            assign = np.minimum(share, cap).astype(np.int64)
+        carried = n_rem - int(assign.sum())    # Algorithm 3 carry-over
+        if assign.sum() == 0:   # degenerate rounding for tiny n_rem
+            break
+        # communication overhead, eq. (1): only units beyond the leftover
+        if iters > 0:
+            n_comm += float(np.maximum(assign - n_left_prev, 0).sum())
+        t_star, done = _iteration_outcome(assign, lam, rng)
+        iters += 1
+        t_iter.append(t_star)
+        t_comp += t_star
+        n_done += done
+        n_left_prev = assign - done
+        n_rem = carried + int(n_left_prev.sum())
+        # online estimate, eq. (23)
+        est_done += done
+        est_time += t_star
+        if est_time > 0:
+            lam_hat = np.where(est_done > 0, est_done / est_time, 1.0)
+
+    if n_rem > 0:
+        rates = lam if cfg.known_heterogeneity else lam_hat
+        assign = proportional_assignment(rates, n_rem)
+        if iters > 0:
+            n_comm += float(np.maximum(assign - n_left_prev, 0).sum())
+        t_comp += _final_phase(assign, lam, rng)
+        n_done += assign
+        iters += 1
+        t_iter.append(t_iter[-1] if t_iter else t_comp)
+
+    stats = RunStats(t_comp=t_comp, iterations=iters, n_comm=n_comm,
+                     n_done=n_done, t_iter=np.asarray(t_iter))
+    stats.check_work_conserved(N)
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# trial-vectorized work-exchange Monte-Carlo engine
+# ---------------------------------------------------------------------------
+
+def work_exchange_mc_batched(het: HetSpec, N: int, cfg: ExchangeConfig,
+                             trials: int, rng: np.random.Generator,
+                             capped_mode: Literal["carry", "waterfill"]
+                             = "carry", keep_trials: bool = False,
+                             scheme_name: str = "work_exchange") -> MCReport:
+    """All ``trials`` work-exchange runs at once: batched Gamma / argmin /
+    Binomial under a per-trial active mask.
+
+    State is (T,) / (T, K) arrays; each outer loop step advances every trial
+    still above the cutting threshold by one reassignment iteration, so the
+    Python-level loop count is max-iterations-over-trials (~10) instead of
+    trials x iterations.  With a single trial the randomness is consumed in
+    exactly the order of ``simulate_work_exchange_scalar``, which the tests
+    exploit for seed-for-seed validation of the whole engine.
+    """
+    lam = het.lambdas
+    K = het.K
+    T = int(trials)
+    known = cfg.known_heterogeneity
+    threshold = cfg.threshold_frac * N / K
+    cap = (np.inf if cfg.storage_cap_frac is None or known
+           else int(np.ceil(cfg.storage_cap_frac * N / K)))
+    inv_lam = 1.0 / lam
+    lam_b = np.broadcast_to(lam, (T, K))
+
+    est_done = np.zeros((T, K))
+    est_time = np.zeros(T)
+    lam_hat = np.ones((T, K))
+    n_rem = np.full(T, N, dtype=np.int64)
+    n_left_prev = np.zeros((T, K), dtype=np.int64)
+    n_done = np.zeros((T, K), dtype=np.int64)
+    t_comp = np.zeros(T)
+    n_comm = np.zeros(T)
+    iters = np.zeros(T, dtype=np.int64)
+    in_loop = np.ones(T, dtype=bool)
+
+    while True:
+        # compact every pass to the trials still above the threshold; row
+        # order is ascending, so a lone trial draws in exactly the scalar
+        # order and the tail of long-running trials stays cheap
+        in_loop &= (n_rem > threshold) & (iters < cfg.max_iterations)
+        idx = np.flatnonzero(in_loop)
+        if idx.size == 0:
+            break
+        n = idx.size
+        rates = lam_b[:n] if known else lam_hat[idx]
+        rem = n_rem[idx]
+        if np.isinf(cap):
+            assign = largest_remainder_round_batch(rates, rem)
+        elif capped_mode == "waterfill":
+            assign = capped_proportional_assignment_batch(rates, rem, cap)
+        else:
+            assign = np.minimum(largest_remainder_round_batch(rates, rem),
+                                cap)
+        assigned = assign.sum(axis=1)
+        carried = rem - assigned
+        # degenerate rounding: that trial leaves the loop without drawing
+        live = assigned > 0
+        if not live.all():
+            in_loop[idx[~live]] = False
+            idx, assign, carried = idx[live], assign[live], carried[live]
+            n = idx.size
+            if n == 0:
+                break
+
+        started = iters[idx] > 0
+        comm_add = np.maximum(assign - n_left_prev[idx], 0).sum(axis=1)
+        n_comm[idx] += np.where(started, comm_add, 0.0)
+
+        # batched iteration outcome (same draw order as the scalar path)
+        busy = assign > 0
+        if busy.all():      # the common case: draw the full matrix directly
+            t_k = rng.gamma(shape=assign, scale=inv_lam)
+        else:
+            t_k = np.full((n, K), np.inf)
+            t_k[busy] = rng.gamma(shape=assign[busy],
+                                  scale=np.broadcast_to(inv_lam,
+                                                        (n, K))[busy])
+        finisher = np.argmin(t_k, axis=1)
+        rows = np.arange(n)
+        t_star = t_k[rows, finisher]
+        done = np.zeros((n, K), dtype=np.int64)
+        done[rows, finisher] = assign[rows, finisher]
+        others = busy.copy()
+        others[rows, finisher] = False
+        o_rows, o_cols = np.nonzero(others)      # C order == scalar draw order
+        if o_rows.size:
+            n_oth = np.maximum(assign[o_rows, o_cols] - 1, 0)
+            p_oth = np.clip(t_star[o_rows] / t_k[o_rows, o_cols], 0.0, 1.0)
+            done[o_rows, o_cols] = rng.binomial(n_oth, p_oth)
+
+        iters[idx] += 1
+        t_comp[idx] += t_star
+        n_done[idx] += done
+        leftover = assign - done
+        n_left_prev[idx] = leftover
+        n_rem[idx] = carried + leftover.sum(axis=1)
+        if not known:        # online estimate, eq. (23)
+            ed = est_done[idx] + done
+            et = est_time[idx] + t_star
+            est_done[idx] = ed
+            est_time[idx] = et
+            lam_hat[idx] = np.where(ed > 0,
+                                    ed / np.maximum(et, 1e-300)[:, None], 1.0)
+
+    # final phase below the threshold: assign the remainder, wait for all
+    idx = np.flatnonzero(n_rem > 0)
+    if idx.size:
+        n = idx.size
+        rates = lam_b[:n] if known else lam_hat[idx]
+        assign = largest_remainder_round_batch(rates, n_rem[idx])
+        comm_add = np.maximum(assign - n_left_prev[idx], 0).sum(axis=1)
+        n_comm[idx] += np.where(iters[idx] > 0, comm_add, 0.0)
+        busy = assign > 0
+        if busy.all():
+            t_k = rng.gamma(shape=assign, scale=inv_lam)
+        else:
+            t_k = np.zeros((n, K))
+            t_k[busy] = rng.gamma(shape=assign[busy],
+                                  scale=np.broadcast_to(inv_lam,
+                                                        (n, K))[busy])
+        t_comp[idx] += t_k.max(axis=1)
+        n_done[idx] += assign
+        iters[idx] += 1
+
+    totals = n_done.sum(axis=1)
+    if not (totals == N).all():
+        bad = int(np.flatnonzero(totals != N)[0])
+        raise AssertionError(f"work conservation violated in trial {bad}: "
+                             f"processed {int(totals[bad])} of {N}")
+    return _report(scheme_name, t_comp, iters, n_comm, keep_trials)
+
+
+# ---------------------------------------------------------------------------
+# paper schemes
+# ---------------------------------------------------------------------------
+
+@register_scheme("oracle", aliases=("work_conservation",))
+class OracleScheme(Scheme):
+    """Theorem 1 lower bound: merged process, T ~ Gamma(N, lambda_sum)."""
+
+    def initial_sizes(self, het: HetSpec, N: int) -> np.ndarray:
+        return proportional_assignment(het.lambdas, N)
+
+    def simulate(self, het: HetSpec, N: int,
+                 rng: np.random.Generator) -> RunStats:
+        t = float(rng.gamma(shape=N, scale=1.0 / het.lambda_sum))
+        return RunStats(t_comp=t, iterations=1, n_comm=0.0,
+                        n_done=self.initial_sizes(het, N))
+
+    def mc(self, het: HetSpec, N: int, trials: int,
+           rng: np.random.Generator, keep_trials: bool = False) -> MCReport:
+        ts = rng.gamma(shape=N, scale=1.0 / het.lambda_sum, size=trials)
+        return _report(self.name, ts, np.ones(trials), np.zeros(trials),
+                       keep_trials, extra={"exact_mean": N / het.lambda_sum})
+
+
+class _StaticScheme(Scheme):
+    """Assign once (``initial_sizes``) and wait for the max -- no exchange."""
+
+    def simulate(self, het: HetSpec, N: int,
+                 rng: np.random.Generator) -> RunStats:
+        assign = self.initial_sizes(het, N)
+        t = _final_phase(assign, het.lambdas, rng)
+        return RunStats(t_comp=t, iterations=1, n_comm=0.0, n_done=assign)
+
+    def mc(self, het: HetSpec, N: int, trials: int,
+           rng: np.random.Generator, keep_trials: bool = False) -> MCReport:
+        assign = self.initial_sizes(het, N)
+        busy = assign > 0
+        t = rng.gamma(shape=assign[busy], scale=1.0 / het.lambdas[busy],
+                      size=(trials, int(busy.sum())))
+        return _report(self.name, t.max(axis=1), np.ones(trials),
+                       np.zeros(trials), keep_trials)
+
+    def _scheduler_rates(self, rates: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def make_scheduler(self, unit_ids, rates=None, estimator=None,
+                       threshold_frac=None) -> MasterScheduler:
+        rates = self._scheduler_rates(np.asarray(rates, dtype=np.float64))
+        return MasterScheduler(unit_ids, rates.size, rates=rates,
+                               threshold_frac=1e9)
+
+
+@register_scheme("fixed", aliases=("het_static", "fixed_proportional"))
+class FixedScheme(_StaticScheme):
+    """Section 5.1: heterogeneity-aware fixed assignment; wait for the max."""
+
+    def initial_sizes(self, het: HetSpec, N: int) -> np.ndarray:
+        return proportional_assignment(het.lambdas, N)
+
+    def _scheduler_rates(self, rates: np.ndarray) -> np.ndarray:
+        return rates
+
+
+@register_scheme("uniform", aliases=("equal_static",))
+class UniformScheme(_StaticScheme):
+    """Naive baseline: N/K each, wait for the max (heterogeneity-blind)."""
+
+    def initial_sizes(self, het: HetSpec, N: int) -> np.ndarray:
+        return uniform_assignment(het.K, N)
+
+    def _scheduler_rates(self, rates: np.ndarray) -> np.ndarray:
+        return np.ones(rates.size)
+
+
+@register_scheme("mds", aliases=("mds_opt", "mds-opt"))
+class MDSScheme(Scheme):
+    """Section 3: (K, L) MDS-coded run; T = L-th order statistic of
+    Erlang(ceil(N/L), lambda_k).  ``L=None`` optimizes L by Monte Carlo
+    (eq. 6) inside ``mc``; ``opt_trials`` bounds that inner sweep."""
+
+    redundant = True    # K * ceil(N/L) coded units are shipped for N useful
+
+    def __init__(self, L: Optional[int] = None, opt_trials: int = 64):
+        self.L = L
+        self.opt_trials = int(opt_trials)
+
+    def _resolve_L(self, het: HetSpec, N: int,
+                   rng: np.random.Generator) -> int:
+        if self.L is not None:
+            if not 1 <= self.L <= het.K:
+                raise ValueError(f"L must be in [1, {het.K}]; got {self.L}")
+            return self.L
+        L, _ = mds_sweep(het, N, self.opt_trials, rng)[:2]
+        return L
+
+    def initial_sizes(self, het: HetSpec, N: int) -> np.ndarray:
+        L = self.L if self.L is not None else het.K
+        return np.full(het.K, int(np.ceil(N / L)), dtype=np.int64)
+
+    def simulate(self, het: HetSpec, N: int,
+                 rng: np.random.Generator) -> RunStats:
+        L = self._resolve_L(het, N, rng)
+        m = int(np.ceil(N / L))
+        t_k = rng.gamma(shape=m, scale=1.0 / het.lambdas)
+        order = np.argsort(t_k, kind="stable")
+        t = float(t_k[order[L - 1]])
+        n_done = np.zeros(het.K, dtype=np.int64)
+        n_done[order[:L]] = m      # the L earliest finishers are decoded
+        return RunStats(t_comp=t, iterations=1,
+                        n_comm=float(m * het.K - N), n_done=n_done)
+
+    def mc(self, het: HetSpec, N: int, trials: int,
+           rng: np.random.Generator, keep_trials: bool = False) -> MCReport:
+        if self.L is None:
+            L, _, ts = mds_sweep(het, N, trials, rng)
+        else:
+            L = self._resolve_L(het, N, rng)
+            ts = mds_time_samples(het, N, L, trials, rng)
+        m = int(np.ceil(N / L))
+        return _report(self.name, ts, np.ones(trials),
+                       np.full(trials, float(m * het.K - N)), keep_trials,
+                       extra={"L": L})
+
+
+def mds_time_samples(het: HetSpec, N: int, L: int, trials: int,
+                     rng: np.random.Generator) -> np.ndarray:
+    """Per-trial T^MDS(L): L-th order statistic of the worker Erlangs."""
+    m = int(np.ceil(N / L))
+    t = rng.gamma(shape=m, scale=1.0 / het.lambdas, size=(trials, het.K))
+    t.sort(axis=1)
+    return t[:, L - 1]
+
+
+def mds_sweep(het: HetSpec, N: int, trials: int, rng: np.random.Generator
+              ) -> Tuple[int, float, np.ndarray]:
+    """Eq. (6): optimize L over [1, K] by MC.  Returns (L*, E[T], samples)."""
+    best: Tuple[int, float, Optional[np.ndarray]] = (1, np.inf, None)
+    for L in range(1, het.K + 1):
+        ts = mds_time_samples(het, N, L, trials, rng)
+        mean_t = float(ts.mean())
+        if mean_t < best[1]:
+            best = (L, mean_t, ts)
+    return best  # type: ignore[return-value]
+
+
+class _WorkExchangeBase(Scheme):
+    """Shared machinery of the known/unknown work-exchange variants."""
+
+    known: bool = True
+    plan_wait_all = False
+
+    def __init__(self, threshold_frac: float = 0.01,
+                 storage_cap_frac: Optional[float] = 1.0,
+                 capped_mode: Literal["carry", "waterfill"] = "carry",
+                 max_iterations: int = 10_000,
+                 engine: Literal["vectorized", "loop"] = "vectorized"):
+        self.threshold_frac = float(threshold_frac)
+        self.storage_cap_frac = storage_cap_frac
+        self.capped_mode = capped_mode
+        self.max_iterations = int(max_iterations)
+        if engine not in ("vectorized", "loop"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self.engine = engine
+
+    def config(self) -> ExchangeConfig:
+        return ExchangeConfig(known_heterogeneity=self.known,
+                              threshold_frac=self.threshold_frac,
+                              storage_cap_frac=self.storage_cap_frac,
+                              max_iterations=self.max_iterations)
+
+    def initial_sizes(self, het: HetSpec, N: int) -> np.ndarray:
+        if self.known:
+            return proportional_assignment(het.lambdas, N)
+        # unknown rates start from the uniform prior (lambda_hat = 1)
+        sizes = uniform_assignment(het.K, N)
+        if self.storage_cap_frac is not None:
+            cap = int(np.ceil(self.storage_cap_frac * N / het.K))
+            sizes = np.minimum(sizes, cap)
+        return sizes
+
+    def simulate(self, het: HetSpec, N: int,
+                 rng: np.random.Generator) -> RunStats:
+        return simulate_work_exchange_scalar(het, N, self.config(), rng,
+                                             self.capped_mode)
+
+    def mc(self, het: HetSpec, N: int, trials: int,
+           rng: np.random.Generator, keep_trials: bool = False) -> MCReport:
+        if self.engine == "loop":
+            return super().mc(het, N, trials, rng, keep_trials)
+        return work_exchange_mc_batched(het, N, self.config(), trials, rng,
+                                        self.capped_mode, keep_trials,
+                                        scheme_name=self.name)
+
+    def make_scheduler(self, unit_ids, rates=None, estimator=None,
+                       threshold_frac=None) -> MasterScheduler:
+        thr = self.threshold_frac if threshold_frac is None else threshold_frac
+        if self.known:
+            rates = np.asarray(rates, dtype=np.float64)
+            return MasterScheduler(unit_ids, rates.size, rates=rates,
+                                   threshold_frac=thr,
+                                   storage_cap_frac=self.storage_cap_frac)
+        K = np.asarray(rates).size
+        return MasterScheduler(unit_ids, K, rates=None, estimator=estimator,
+                               threshold_frac=thr,
+                               storage_cap_frac=self.storage_cap_frac)
+
+
+@register_scheme("work_exchange", aliases=("work_exchange_known", "we_known"))
+class WorkExchangeScheme(_WorkExchangeBase):
+    """Algorithm 1: iterative proportional reassignment, rates known."""
+
+    known = True
+
+
+@register_scheme("work_exchange_unknown",
+                 aliases=("we_unknown", "work_exchange_online"))
+class WorkExchangeUnknownScheme(_WorkExchangeBase):
+    """Algorithm 3: rates estimated online (eq. 23), storage-capped."""
+
+    known = False
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper scenario schemes
+# ---------------------------------------------------------------------------
+
+@register_scheme("het_mds", aliases=("hcmm",))
+class HetMDSScheme(Scheme):
+    """Heterogeneous coded loads (Reisizadeh et al. HCMM / Kim et al.).
+
+    Instead of the paper's symmetric (K, L) code, each worker k gets a coded
+    load l_k proportional to its rate with aggregate redundancy r >= 1
+    (sum l_k = r N); the run completes at the earliest time the finished
+    workers' loads cover N.  At r = 1 with exact rates this is the
+    heterogeneity-aware fixed assignment; larger r trades completion time
+    (every load scales by ~r under light-tailed service) for tolerance of
+    stragglers and rate mismatch -- one draw per trial, no reassignment.
+    """
+
+    redundant = True
+
+    def __init__(self, redundancy: float = 1.25):
+        if redundancy < 1.0:
+            raise ValueError("redundancy must be >= 1")
+        self.redundancy = float(redundancy)
+
+    def initial_sizes(self, het: HetSpec, N: int) -> np.ndarray:
+        total = int(np.ceil(self.redundancy * N))
+        return largest_remainder_round(het.lambdas, total)
+
+    def _cover_times(self, het: HetSpec, N: int, trials: int,
+                     rng: np.random.Generator) -> np.ndarray:
+        loads = self.initial_sizes(het, N)
+        busy = loads > 0
+        t = np.full((trials, het.K), np.inf)
+        t[:, busy] = rng.gamma(shape=loads[busy],
+                               scale=1.0 / het.lambdas[busy],
+                               size=(trials, int(busy.sum())))
+        order = np.argsort(t, axis=1, kind="stable")
+        loads_sorted = loads[order]                      # (trials, K)
+        covered = np.cumsum(loads_sorted, axis=1) >= N
+        idx = np.argmax(covered, axis=1)                 # first covering rank
+        t_sorted = np.take_along_axis(t, order, axis=1)
+        return t_sorted[np.arange(trials), idx]
+
+    def simulate(self, het: HetSpec, N: int,
+                 rng: np.random.Generator) -> RunStats:
+        loads = self.initial_sizes(het, N)
+        t = float(self._cover_times(het, N, 1, rng)[0])
+        return RunStats(t_comp=t, iterations=1,
+                        n_comm=float(loads.sum() - N), n_done=loads)
+
+    def mc(self, het: HetSpec, N: int, trials: int,
+           rng: np.random.Generator, keep_trials: bool = False) -> MCReport:
+        loads = self.initial_sizes(het, N)
+        ts = self._cover_times(het, N, trials, rng)
+        return _report(self.name, ts, np.ones(trials),
+                       np.full(trials, float(loads.sum() - N)), keep_trials,
+                       extra={"redundancy": self.redundancy})
+
+
+@register_scheme("trace_replay")
+class TraceReplayScheme(Scheme):
+    """Replay measured per-epoch service-rate traces through the id-aware
+    master protocol (``MasterScheduler`` + ``VirtualWorkerPool``'s
+    measured-trace path).
+
+    ``traces`` is a (K, E) array of observed rates (wrapping after E
+    epochs).  Without one, a synthetic drift profile perturbs the HetSpec
+    rates by +-``drift`` over ``period`` epochs, phase-shifted per worker --
+    a stand-in for thermal throttling / co-tenancy traces.  The scheduler
+    sees only the *nominal* rates; realized epochs run at the trace rates.
+    """
+
+    plan_wait_all = False
+
+    def __init__(self, traces: Optional[np.ndarray] = None,
+                 drift: float = 0.3, period: int = 8,
+                 threshold_frac: float = 0.05):
+        self.traces = None if traces is None else np.asarray(traces, float)
+        self.drift = float(drift)
+        self.period = int(period)
+        self.threshold_frac = float(threshold_frac)
+
+    def _traces_for(self, het: HetSpec) -> np.ndarray:
+        if self.traces is not None:
+            if self.traces.shape[0] != het.K:
+                raise ValueError(f"traces have {self.traces.shape[0]} "
+                                 f"workers; het has {het.K}")
+            return self.traces
+        e = np.arange(self.period)
+        k = np.arange(het.K)[:, None]
+        profile = 1.0 + self.drift * np.sin(
+            2.0 * np.pi * (e[None, :] / self.period + k / het.K))
+        return np.maximum(het.lambdas[:, None] * profile, 1e-9)
+
+    def initial_sizes(self, het: HetSpec, N: int) -> np.ndarray:
+        return proportional_assignment(het.lambdas, N)
+
+    def simulate(self, het: HetSpec, N: int,
+                 rng: np.random.Generator) -> RunStats:
+        from .runtime import VirtualWorkerPool
+        sched = MasterScheduler(range(N), het.K, rates=het.lambdas,
+                                threshold_frac=self.threshold_frac)
+        pool = VirtualWorkerPool(het.lambdas, rng=rng,
+                                 traces=self._traces_for(het))
+        n_done = np.zeros(het.K, dtype=np.int64)
+        guard = 0
+        while not sched.finished and guard < 100_000:
+            a = sched.next_assignment()
+            if a is None:
+                break
+            elapsed, done = pool.run_epoch(a)
+            sched.report(done, elapsed)
+            n_done += done
+            guard += 1
+        return RunStats(t_comp=sched.t_comp, iterations=sched.iterations,
+                        n_comm=float(sched.n_comm), n_done=n_done)
+
+    def make_scheduler(self, unit_ids, rates=None, estimator=None,
+                       threshold_frac=None) -> MasterScheduler:
+        thr = self.threshold_frac if threshold_frac is None else threshold_frac
+        rates = np.asarray(rates, dtype=np.float64)
+        return MasterScheduler(unit_ids, rates.size, rates=rates,
+                               threshold_frac=thr)
+
+
+@register_scheme("gradient_coded")
+class GradientCodedScheme(Scheme):
+    """Fractional-repetition coding translated to the unit-count model:
+    each unit is replicated s+1 times; the run completes at the earliest
+    time the finished workers jointly cover all N units (no reassignment,
+    no coordination -- redundancy instead of exchange)."""
+
+    redundant = True
+
+    def __init__(self, s: int = 1):
+        self.s = int(s)
+
+    def _coding(self, het: HetSpec):
+        from .coded import GradientCoding
+        K = het.K - het.K % (self.s + 1)    # FR needs (s+1) | K; drop extras
+        if K < self.s + 1:
+            raise ValueError(f"need >= {self.s + 1} workers for s={self.s}")
+        return GradientCoding(K=K, s=self.s), K
+
+    def initial_sizes(self, het: HetSpec, N: int) -> np.ndarray:
+        gc, K = self._coding(het)
+        sizes = np.zeros(het.K, dtype=np.int64)
+        sizes[:K] = [len(o) for o in gc.assignment(N)]
+        return sizes
+
+    def simulate(self, het: HetSpec, N: int,
+                 rng: np.random.Generator) -> RunStats:
+        gc, K = self._coding(het)
+        owners = gc.assignment(N)
+        sizes = np.array([len(o) for o in owners], dtype=np.int64)
+        t_k = rng.gamma(shape=np.maximum(sizes, 1),
+                        scale=1.0 / het.lambdas[:K])
+        order = np.argsort(t_k, kind="stable")
+        covered: set = set()
+        n_done = np.zeros(het.K, dtype=np.int64)
+        t_done = float(t_k[order[-1]])
+        for w in order:
+            fresh = set(owners[w]) - covered
+            covered |= fresh
+            n_done[w] = len(fresh)          # credit first replica to finish
+            if len(covered) == N:
+                t_done = float(t_k[w])
+                break
+        return RunStats(t_comp=t_done, iterations=1,
+                        n_comm=float(sizes.sum() - N), n_done=n_done)
+
+
+__all__ = [
+    "MCReport", "Scheme", "SCHEME_REGISTRY", "register_scheme", "get_scheme",
+    "list_schemes", "simulate_work_exchange_scalar",
+    "work_exchange_mc_batched", "mds_sweep", "mds_time_samples",
+    "OracleScheme", "FixedScheme", "UniformScheme", "MDSScheme",
+    "WorkExchangeScheme", "WorkExchangeUnknownScheme", "HetMDSScheme",
+    "TraceReplayScheme", "GradientCodedScheme",
+]

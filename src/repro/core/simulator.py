@@ -1,215 +1,112 @@
-"""Exact, vectorized event-driven simulator of the paper's protocols.
+"""DEPRECATED free-function surface over the Monte-Carlo engine.
 
-No per-point loops: for an assignment of n_k units to worker k (service
-rate lambda_k), the completion time is T_k ~ Gamma(n_k, lambda_k).  The
-master stops everyone at T* = min_k T_k (first completion flag).  For a
-non-finishing worker, conditioned on its n_k-th arrival being at T_k, the
-earlier n_k - 1 arrival epochs are i.i.d. uniform order statistics on
-(0, T_k)  (Poisson-process conditioning), hence
+Everything here is a thin shim over ``repro.core.schemes`` -- the unified
+registry-driven Scheme API (``get_scheme(name).mc(het, N, trials, rng)``).
+New code should go through the registry; these wrappers keep the original
+per-scheme entry points importable and (for the scalar single-trial paths)
+numerically identical to the pre-registry implementations.
 
-    N_done_k | T_k  ~  Binomial(n_k - 1, T*/T_k)        [exact]
-
-This makes one work-exchange iteration O(K) per Monte-Carlo trial and the
-whole simulation exact in distribution -- the same trick is used for all
-schemes (fixed, MDS, oracle, work exchange known/unknown).
-
-All routines are vectorized across ``trials`` with numpy; the paper's
-N = 1e6, K = 50 configuration costs microseconds per trial.
+``work_exchange_mc`` now runs the trial-vectorized engine (batched
+Gamma/argmin/Binomial across trials) -- same distribution, ~100x faster at
+the paper's K=50 / trials=1000 scale; pass ``engine="loop"`` for the old
+per-trial loop.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Literal, Optional
+import warnings
+from typing import Literal
 
 import numpy as np
 
-from .assignment import (capped_proportional_assignment, largest_remainder_round,
-                         proportional_assignment, uniform_assignment)
-from .types import ExchangeConfig, HetSpec, RunStats
+from . import schemes
+from .schemes import MCReport as ExchangeMC    # legacy name; same fields +
+from .types import ExchangeConfig, HetSpec, RunStats   # t_std/i_std/c_std
+
+
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"repro.core.simulator.{name} is deprecated; use "
+        f"repro.core.schemes.get_scheme(...) instead",
+        DeprecationWarning, stacklevel=3)
 
 
 # ---------------------------------------------------------------------------
-# single-trial primitives
-# ---------------------------------------------------------------------------
-
-def _iteration_outcome(assign: np.ndarray, lambdas: np.ndarray,
-                       rng: np.random.Generator):
-    """One work-exchange iteration: returns (t_star, done) exactly."""
-    K = assign.size
-    t_k = np.full(K, np.inf)
-    busy = assign > 0
-    t_k[busy] = rng.gamma(shape=assign[busy], scale=1.0 / lambdas[busy])
-    finisher = int(np.argmin(t_k))
-    t_star = float(t_k[finisher])
-    done = np.zeros(K, dtype=np.int64)
-    done[finisher] = assign[finisher]
-    others = busy.copy()
-    others[finisher] = False
-    if others.any():
-        n = assign[others] - 1
-        p = np.clip(t_star / t_k[others], 0.0, 1.0)
-        done[others] = rng.binomial(np.maximum(n, 0), p)
-    return t_star, done
-
-
-def _final_phase(assign: np.ndarray, lambdas: np.ndarray,
-                 rng: np.random.Generator) -> float:
-    """Below the cutting threshold: assign and wait for ALL workers (max)."""
-    busy = assign > 0
-    if not busy.any():
-        return 0.0
-    t_k = rng.gamma(shape=assign[busy], scale=1.0 / lambdas[busy])
-    return float(t_k.max())
-
-
-# ---------------------------------------------------------------------------
-# schemes
+# single-trial paths (exact pre-registry numerics at fixed seed)
 # ---------------------------------------------------------------------------
 
 def simulate_fixed(het: HetSpec, N: int, rng: np.random.Generator) -> RunStats:
-    """Section 5.1: heterogeneity-aware fixed assignment; wait for the max."""
-    assign = proportional_assignment(het.lambdas, N)
-    t = _final_phase(assign, het.lambdas, rng)
-    return RunStats(t_comp=t, iterations=1, n_comm=0.0, n_done=assign)
+    """Section 5.1 fixed assignment, one trial.  Use get_scheme("fixed")."""
+    _deprecated("simulate_fixed")
+    return schemes.FixedScheme().simulate(het, N, rng)
 
 
 def simulate_work_exchange(het: HetSpec, N: int, cfg: ExchangeConfig,
                            rng: np.random.Generator,
                            capped_mode: Literal["carry", "waterfill"] = "carry",
                            ) -> RunStats:
-    """Algorithms 1 (known het) and 3 (unknown het), single trial."""
-    lam = het.lambdas
-    K = het.K
-    threshold = cfg.threshold_frac * N / K
-    cap = (np.inf if cfg.storage_cap_frac is None or cfg.known_heterogeneity
-           else int(np.ceil(cfg.storage_cap_frac * N / K)))
-
-    # estimator state (paper eq. 23)
-    est_done = np.zeros(K, dtype=np.float64)
-    est_time = 0.0
-    lam_hat = np.ones(K, dtype=np.float64)
-
-    n_rem = N                       # unassigned + leftover units
-    n_left_prev = np.zeros(K, dtype=np.int64)   # leftover held by workers
-    n_done = np.zeros(K, dtype=np.int64)
-    t_comp = 0.0
-    n_comm = 0.0
-    iters = 0
-    t_iter = []
-
-    while n_rem > threshold and iters < cfg.max_iterations:
-        rates = lam if cfg.known_heterogeneity else lam_hat
-        if np.isinf(cap):
-            assign = proportional_assignment(rates, n_rem)
-        elif capped_mode == "waterfill":
-            assign = capped_proportional_assignment(rates, n_rem, cap)
-        else:  # paper-faithful: plain min(cap, share), carry the remainder
-            share = largest_remainder_round(rates, n_rem)
-            assign = np.minimum(share, cap).astype(np.int64)
-        carried = n_rem - int(assign.sum())    # Algorithm 3 carry-over
-        if assign.sum() == 0:   # degenerate rounding for tiny n_rem
-            break
-        # communication overhead, eq. (1): only units beyond the leftover
-        if iters > 0:
-            n_comm += float(np.maximum(assign - n_left_prev, 0).sum())
-        t_star, done = _iteration_outcome(assign, lam, rng)
-        iters += 1
-        t_iter.append(t_star)
-        t_comp += t_star
-        n_done += done
-        n_left_prev = assign - done
-        n_rem = carried + int(n_left_prev.sum())
-        # online estimate, eq. (23)
-        est_done += done
-        est_time += t_star
-        if est_time > 0:
-            lam_hat = np.where(est_done > 0, est_done / est_time, 1.0)
-
-    if n_rem > 0:
-        rates = lam if cfg.known_heterogeneity else lam_hat
-        assign = proportional_assignment(rates, n_rem)
-        if iters > 0:
-            n_comm += float(np.maximum(assign - n_left_prev, 0).sum())
-        t_comp += _final_phase(assign, lam, rng)
-        n_done += assign
-        iters += 1
-        t_iter.append(t_iter[-1] if t_iter else t_comp)
-
-    stats = RunStats(t_comp=t_comp, iterations=iters, n_comm=n_comm,
-                     n_done=n_done, t_iter=np.asarray(t_iter))
-    stats.check_work_conserved(N)
-    return stats
+    """Algorithms 1/3, one trial.  Use get_scheme("work_exchange")."""
+    _deprecated("simulate_work_exchange")
+    return schemes.simulate_work_exchange_scalar(het, N, cfg, rng, capped_mode)
 
 
 def simulate_mds(het: HetSpec, N: int, L: int,
                  rng: np.random.Generator) -> float:
-    """Section 3: (K, L) MDS-coded run; completion = L-th order statistic of
-    Erlang(ceil(N/L), lambda_k). Returns T_comp for one trial."""
+    """(K, L) MDS completion time, one trial.  Use get_scheme("mds", L=L)."""
+    _deprecated("simulate_mds")
     m = int(np.ceil(N / L))
     t_k = rng.gamma(shape=m, scale=1.0 / het.lambdas)
     return float(np.sort(t_k)[L - 1])
 
 
 def simulate_oracle(het: HetSpec, N: int, rng: np.random.Generator) -> float:
-    """Theorem 1: merged-process identity, T ~ Gamma(N, lambda_sum)."""
+    """Theorem 1 sample, one trial.  Use get_scheme("oracle")."""
+    _deprecated("simulate_oracle")
     return float(rng.gamma(shape=N, scale=1.0 / het.lambda_sum))
 
 
 # ---------------------------------------------------------------------------
-# Monte-Carlo means (vectorized over trials where the scheme allows)
+# Monte-Carlo means
 # ---------------------------------------------------------------------------
 
 def mds_mean_time(het: HetSpec, N: int, L: int, trials: int,
                   rng: np.random.Generator) -> float:
-    m = int(np.ceil(N / L))
-    t = rng.gamma(shape=m, scale=1.0 / het.lambdas, size=(trials, het.K))
-    t.sort(axis=1)
-    return float(t[:, L - 1].mean())
+    _deprecated("mds_mean_time")
+    return float(schemes.mds_time_samples(het, N, L, trials, rng).mean())
 
 
 def mds_optimize(het: HetSpec, N: int, trials: int,
                  rng: np.random.Generator) -> tuple[int, float]:
-    """Eq. (6): optimize L over [1, K] by Monte Carlo. Returns (L*, E[T])."""
-    best = (1, np.inf)
-    for L in range(1, het.K + 1):
-        mean_t = mds_mean_time(het, N, L, trials, rng)
-        if mean_t < best[1]:
-            best = (L, mean_t)
-    return best
+    """Eq. (6) L sweep.  Use get_scheme("mds").mc(...) (extra["L"])."""
+    _deprecated("mds_optimize")
+    L, mean_t, _ = schemes.mds_sweep(het, N, trials, rng)
+    return L, mean_t
 
 
 def fixed_mean_time(het: HetSpec, N: int, trials: int,
                     rng: np.random.Generator) -> float:
-    assign = proportional_assignment(het.lambdas, N)
-    busy = assign > 0
-    t = rng.gamma(shape=assign[busy], scale=1.0 / het.lambdas[busy],
-                  size=(trials, int(busy.sum())))
-    return float(t.max(axis=1).mean())
+    _deprecated("fixed_mean_time")
+    return schemes.FixedScheme().mc(het, N, trials, rng).t_comp
 
 
 def oracle_mean_time_mc(het: HetSpec, N: int, trials: int,
                         rng: np.random.Generator) -> float:
-    return float(rng.gamma(shape=N, scale=1.0 / het.lambda_sum,
-                           size=trials).mean())
-
-
-@dataclasses.dataclass
-class ExchangeMC:
-    t_comp: float
-    iterations: float
-    n_comm: float
-    t_std: float
-    i_std: float
-    c_std: float
+    _deprecated("oracle_mean_time_mc")
+    return schemes.OracleScheme().mc(het, N, trials, rng).t_comp
 
 
 def work_exchange_mc(het: HetSpec, N: int, cfg: ExchangeConfig, trials: int,
                      rng: np.random.Generator,
                      capped_mode: Literal["carry", "waterfill"] = "carry",
+                     engine: Literal["vectorized", "loop"] = "vectorized",
                      ) -> ExchangeMC:
-    ts, its, cs = np.empty(trials), np.empty(trials), np.empty(trials)
-    for i in range(trials):
-        s = simulate_work_exchange(het, N, cfg, rng, capped_mode)
-        ts[i], its[i], cs[i] = s.t_comp, s.iterations, s.n_comm
-    return ExchangeMC(float(ts.mean()), float(its.mean()), float(cs.mean()),
-                      float(ts.std()), float(its.std()), float(cs.std()))
+    """Work-exchange MC.  Use get_scheme("work_exchange[_unknown]").mc."""
+    _deprecated("work_exchange_mc")
+    if engine == "loop":
+        ts, its, cs = np.empty(trials), np.empty(trials), np.empty(trials)
+        for i in range(trials):
+            s = schemes.simulate_work_exchange_scalar(het, N, cfg, rng,
+                                                      capped_mode)
+            ts[i], its[i], cs[i] = s.t_comp, s.iterations, s.n_comm
+        return schemes._report("work_exchange", ts, its, cs)
+    return schemes.work_exchange_mc_batched(het, N, cfg, trials, rng,
+                                            capped_mode)

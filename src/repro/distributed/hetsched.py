@@ -29,10 +29,15 @@ from repro.core.coded import GradientCoding
 from repro.core.estimator import make_estimator
 from repro.core.exchange import MasterScheduler
 from repro.core.runtime import VirtualWorkerPool
+from repro.core.schemes import get_scheme
 from repro.data.pipeline import HetShardedLoader, UnitStore
 from repro.optim import AdamW
 from repro.train.loop import make_grad_step
 
+# Training policy names are scheme-registry names/aliases (equal_static ->
+# uniform, het_static -> fixed, work_exchange_online -> unknown-het work
+# exchange); gradient_coded replaces the exchange protocol with coded
+# redundancy and keeps its dedicated step path below.
 POLICIES = ("equal_static", "het_static", "work_exchange",
             "work_exchange_online", "gradient_coded")
 
@@ -81,23 +86,16 @@ class HetTrainer:
     # -- scheduler construction per policy ---------------------------------
 
     def _make_scheduler(self, unit_ids) -> MasterScheduler:
-        if self.policy == "equal_static":
-            return MasterScheduler(unit_ids, self.K, rates=np.ones(self.K),
-                                   threshold_frac=1e9)
-        if self.policy == "het_static":
-            return MasterScheduler(unit_ids, self.K, rates=self.rates,
-                                   threshold_frac=1e9)
-        if self.policy == "work_exchange":
-            return MasterScheduler(unit_ids, self.K, rates=self.rates,
-                                   threshold_frac=self.threshold_frac)
+        """Resolve the policy through SCHEME_REGISTRY and let the scheme
+        build its executable master protocol."""
         if self.policy == "work_exchange_online":
             if self._persistent_estimator is None:
                 self._persistent_estimator = make_estimator(
                     self.estimator_kind, self.K)
-            return MasterScheduler(unit_ids, self.K, rates=None,
-                                   estimator=self._persistent_estimator,
-                                   threshold_frac=self.threshold_frac)
-        raise ValueError(self.policy)
+        scheme = get_scheme(self.policy)
+        return scheme.make_scheduler(unit_ids, rates=self.rates,
+                                     estimator=self._persistent_estimator,
+                                     threshold_frac=self.threshold_frac)
 
     # -- one optimizer step --------------------------------------------------
 

@@ -1,5 +1,13 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+Skipped cleanly when ``hypothesis`` is not installed (it is a dev-only
+dependency, declared in pyproject's ``dev`` extra); the deterministic
+invariant checks live in test_schemes.py and always run.
+"""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

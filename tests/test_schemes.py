@@ -1,0 +1,331 @@
+"""Unified Scheme API: registry round-trip, shim equivalence, seed-for-seed
+validation of the vectorized MC engine, and uniform invariants over every
+registered scheme."""
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import simulator
+from repro.core.assignment import (capped_proportional_assignment,
+                                   capped_proportional_assignment_batch,
+                                   largest_remainder_round,
+                                   largest_remainder_round_batch)
+from repro.core.schemes import (MCReport, SCHEME_REGISTRY, Scheme,
+                                get_scheme, list_schemes, register_scheme,
+                                simulate_work_exchange_scalar,
+                                work_exchange_mc_batched)
+from repro.core.types import ExchangeConfig, HetSpec
+
+RNG = lambda s=0: np.random.default_rng(s)
+
+PAPER_SCHEMES = ("fixed", "uniform", "oracle", "mds", "work_exchange",
+                 "work_exchange_unknown")
+NEW_SCHEMES = ("het_mds", "trace_replay", "gradient_coded")
+
+
+def make_het(K=10, mu=10.0, sigma2=10.0 ** 2 / 6, seed=3):
+    return HetSpec.uniform_random(K, mu, sigma2, RNG(seed))
+
+
+class TestRegistry:
+    def test_all_expected_schemes_registered(self):
+        names = list_schemes()
+        for n in PAPER_SCHEMES + NEW_SCHEMES:
+            assert n in names, n
+
+    def test_roundtrip(self):
+        for name in list_schemes():
+            s = get_scheme(name)
+            assert isinstance(s, Scheme)
+            assert s.name == name
+            assert SCHEME_REGISTRY[name] is type(s)
+
+    def test_aliases_resolve_to_canonical(self):
+        assert type(get_scheme("het_static")) is type(get_scheme("fixed"))
+        assert type(get_scheme("equal_static")) is type(get_scheme("uniform"))
+        assert type(get_scheme("mds_opt")) is type(get_scheme("mds"))
+        assert type(get_scheme("work_exchange_online")) is \
+            type(get_scheme("work_exchange_unknown"))
+        assert get_scheme("we_known").known is True
+        assert get_scheme("we_unknown").known is False
+
+    def test_unknown_name_raises_with_listing(self):
+        with pytest.raises(KeyError, match="no_such_scheme"):
+            get_scheme("no_such_scheme")
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            @register_scheme("oracle")
+            class Dup(Scheme):
+                pass
+
+    def test_new_registration_is_visible_everywhere(self):
+        @register_scheme("tmp_test_scheme")
+        class Tmp(Scheme):
+            def initial_sizes(self, het, N):
+                return np.full(het.K, N // het.K, dtype=np.int64)
+        try:
+            assert "tmp_test_scheme" in list_schemes()
+            assert isinstance(get_scheme("tmp_test_scheme"), Tmp)
+        finally:
+            del SCHEME_REGISTRY["tmp_test_scheme"]
+
+    def test_params_forwarded(self):
+        s = get_scheme("work_exchange_unknown", threshold_frac=0.2,
+                       capped_mode="waterfill")
+        assert s.threshold_frac == 0.2 and s.capped_mode == "waterfill"
+        assert get_scheme("mds", L=3).L == 3
+        assert get_scheme("het_mds", redundancy=1.5).redundancy == 1.5
+
+
+class TestUniformReport:
+    """Every scheme returns the same MCReport shape -- the tentpole claim."""
+
+    @pytest.mark.parametrize("name", PAPER_SCHEMES + NEW_SCHEMES)
+    def test_mc_report_shape(self, name):
+        het = make_het()
+        N, trials = 2_000, 4
+        rep = get_scheme(name).mc(het, N, trials=trials, rng=RNG(1),
+                                  keep_trials=True)
+        assert isinstance(rep, MCReport)
+        assert rep.scheme == name and rep.trials == trials
+        assert np.isfinite(rep.t_comp) and rep.t_comp > 0
+        assert rep.iterations >= 1 and rep.n_comm >= 0
+        assert rep.t_comp_std >= 0
+        for arr in (rep.t_comp_trials, rep.iterations_trials,
+                    rep.n_comm_trials):
+            assert arr is not None and arr.shape == (trials,)
+        assert rep.t_comp == pytest.approx(rep.t_comp_trials.mean())
+
+    @pytest.mark.parametrize("name", PAPER_SCHEMES + NEW_SCHEMES)
+    def test_trials_omitted_by_default(self, name):
+        rep = get_scheme(name).mc(make_het(), 1_000, trials=2, rng=RNG(2))
+        assert rep.t_comp_trials is None
+
+    @pytest.mark.parametrize("name", PAPER_SCHEMES + NEW_SCHEMES)
+    def test_plan_covers_n(self, name):
+        het = make_het()
+        N = 1_000
+        plan = get_scheme(name).plan(het, N)
+        sizes = plan.sizes
+        assert len(plan.queues) == het.K
+        assert sizes.sum() >= N            # redundant schemes plan > N
+        ids = [u for q in plan.queues for u in q]
+        assert len(ids) == len(set(ids))   # distinct unit ids
+
+
+class TestWorkConservation:
+    """Satellite: the conservation property, uniformly over the registry."""
+
+    @pytest.mark.parametrize("name", PAPER_SCHEMES + NEW_SCHEMES)
+    @pytest.mark.parametrize("seed", [0, 7])
+    def test_simulate_conserves_work(self, name, seed):
+        het = make_het(seed=seed + 20)
+        N = 1_500
+        scheme = get_scheme(name)
+        stats = scheme.simulate(het, N, RNG(seed))
+        assert stats.t_comp > 0 and stats.iterations >= 1
+        if scheme.redundant:
+            # coded schemes deliver at least N (redundancy, never less)
+            assert int(stats.n_done.sum()) >= N
+        else:
+            stats.check_work_conserved(N)
+
+
+class TestShimEquivalence:
+    """Old simulator entry points == new Scheme API at the same seed."""
+
+    def setup_method(self):
+        warnings.simplefilter("ignore", DeprecationWarning)
+
+    def test_fixed_mean_time(self):
+        het = make_het()
+        old = simulator.fixed_mean_time(het, 5_000, 50, RNG(4))
+        new = get_scheme("fixed").mc(het, 5_000, 50, RNG(4)).t_comp
+        assert old == new
+
+    def test_oracle_mean_time(self):
+        het = make_het()
+        old = simulator.oracle_mean_time_mc(het, 5_000, 50, RNG(5))
+        new = get_scheme("oracle").mc(het, 5_000, 50, RNG(5)).t_comp
+        assert old == new
+
+    def test_mds_optimize(self):
+        het = make_het(K=6)
+        L_old, t_old = simulator.mds_optimize(het, 3_000, 40, RNG(6))
+        rep = get_scheme("mds").mc(het, 3_000, 40, RNG(6))
+        assert rep.extra["L"] == L_old
+        assert rep.t_comp == t_old
+
+    def test_simulate_work_exchange_is_scalar_reference(self):
+        het = make_het()
+        cfg = ExchangeConfig(known_heterogeneity=False)
+        old = simulator.simulate_work_exchange(het, 4_000, cfg, RNG(8))
+        ref = simulate_work_exchange_scalar(het, 4_000, cfg, RNG(8))
+        assert old.t_comp == ref.t_comp and old.n_comm == ref.n_comm
+        np.testing.assert_array_equal(old.n_done, ref.n_done)
+
+    def test_work_exchange_mc_loop_engine_matches_manual_loop(self):
+        het = make_het()
+        cfg = ExchangeConfig(known_heterogeneity=True)
+        mc = simulator.work_exchange_mc(het, 4_000, cfg, 10, RNG(9),
+                                        engine="loop")
+        rng = RNG(9)
+        ts = [simulate_work_exchange_scalar(het, 4_000, cfg, rng).t_comp
+              for _ in range(10)]
+        assert mc.t_comp == np.mean(ts)
+
+    def test_legacy_exchange_mc_field_names(self):
+        het = make_het()
+        cfg = ExchangeConfig(known_heterogeneity=True)
+        mc = simulator.work_exchange_mc(het, 2_000, cfg, 5, RNG(10))
+        assert mc.t_std == mc.t_comp_std
+        assert mc.i_std == mc.iterations_std
+        assert mc.c_std == mc.n_comm_std
+
+    def test_deprecation_warning_emitted(self):
+        het = make_het()
+        with pytest.warns(DeprecationWarning):
+            simulator.simulate_oracle(het, 10, RNG(0))
+
+
+class TestVectorizedEngine:
+    """Seed-for-seed validation of the batched MC against the scalar path."""
+
+    @pytest.mark.parametrize("known", [True, False])
+    @pytest.mark.parametrize("sigma2", [0.0, 10.0 ** 2 / 6])
+    @pytest.mark.parametrize("mode", ["carry", "waterfill"])
+    def test_single_trial_bitwise_equal(self, known, sigma2, mode):
+        """With one trial the batched engine consumes randomness in exactly
+        the scalar order: results must be bit-identical, seed for seed."""
+        cfg = ExchangeConfig(known_heterogeneity=known)
+        for seed in range(6):
+            het = HetSpec.uniform_random(13, 50.0, sigma2, RNG(seed + 100))
+            s = simulate_work_exchange_scalar(het, 5_000, cfg, RNG(seed),
+                                              mode)
+            b = work_exchange_mc_batched(het, 5_000, cfg, 1, RNG(seed), mode,
+                                         keep_trials=True)
+            assert s.t_comp == b.t_comp_trials[0]
+            assert s.iterations == b.iterations_trials[0]
+            assert s.n_comm == b.n_comm_trials[0]
+
+    @pytest.mark.parametrize("known", [True, False])
+    def test_many_trials_statistically_match_loop(self, known):
+        het = make_het(K=20, mu=10.0, seed=11)
+        N, trials = 20_000, 300
+        cfg = ExchangeConfig(known_heterogeneity=known)
+        vec = work_exchange_mc_batched(het, N, cfg, trials, RNG(12))
+        rng = RNG(13)
+        loop_t = np.array([
+            simulate_work_exchange_scalar(het, N, cfg, rng).t_comp
+            for _ in range(trials)])
+        # independent samples of the same distribution: compare via z-test
+        se = np.hypot(vec.t_comp_std, loop_t.std()) / np.sqrt(trials)
+        assert abs(vec.t_comp - loop_t.mean()) < 5 * se
+        assert vec.t_comp == pytest.approx(N / het.lambda_sum, rel=0.05)
+
+    def test_batched_respects_max_iterations(self):
+        het = make_het()
+        cfg = ExchangeConfig(known_heterogeneity=False, max_iterations=2,
+                             threshold_frac=0.0)
+        rep = work_exchange_mc_batched(het, 2_000, cfg, 8, RNG(14),
+                                       keep_trials=True)
+        assert (rep.iterations_trials <= 3).all()   # 2 loop + final phase
+
+    def test_speedup_over_per_trial_loop(self):
+        """The acceptance measurement (full K=50/trials=1000/N=1e6 scale,
+        where the measured speedup is ~7-10x and the engine is RNG-bound)
+        lives in benchmarks/run.py -> BENCH_schemes.json; here a reduced
+        configuration must still clear a conservative floor under CI noise.
+        """
+        het = HetSpec.uniform_random(50, 50.0, 50.0 ** 2 / 6, RNG(15))
+        N, trials = 100_000, 200
+        cfg = ExchangeConfig(known_heterogeneity=False)
+        rng = RNG(16)
+        t0 = time.perf_counter()
+        for _ in range(trials):
+            simulate_work_exchange_scalar(het, N, cfg, rng)
+        loop_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        work_exchange_mc_batched(het, N, cfg, trials, RNG(16))
+        vec_s = time.perf_counter() - t0
+        assert loop_s / vec_s > 3.0, (loop_s, vec_s)
+
+
+class TestBatchedAssignment:
+    def test_largest_remainder_batch_matches_scalar(self):
+        rng = RNG(20)
+        for _ in range(30):
+            K = int(rng.integers(2, 12))
+            T = int(rng.integers(1, 6))
+            shares = rng.random((T, K)) * 10
+            if rng.random() < 0.3:
+                shares[rng.integers(T)] = 0.0       # ones-fallback row
+            totals = rng.integers(0, 5_000, size=T)
+            out = largest_remainder_round_batch(shares, totals)
+            for i in range(T):
+                np.testing.assert_array_equal(
+                    out[i], largest_remainder_round(shares[i],
+                                                    int(totals[i])))
+
+    def test_capped_batch_matches_scalar(self):
+        rng = RNG(21)
+        for _ in range(30):
+            K = int(rng.integers(2, 10))
+            T = int(rng.integers(1, 5))
+            lam = rng.random((T, K)) * 5 + 0.1
+            n_rem = rng.integers(1, 3_000, size=T)
+            cap = int(rng.integers(1, 600))
+            out = capped_proportional_assignment_batch(lam, n_rem, cap)
+            for i in range(T):
+                np.testing.assert_array_equal(
+                    out[i], capped_proportional_assignment(
+                        lam[i], int(n_rem[i]), cap))
+
+
+class TestScenarioSchemes:
+    def test_het_mds_between_oracle_and_plain_mds(self):
+        het = make_het(K=20, seed=30)
+        N = 20_000
+        oracle_t = N / het.lambda_sum
+        rep = get_scheme("het_mds", redundancy=1.3).mc(het, N, 60, RNG(31))
+        assert rep.t_comp >= oracle_t * 0.999
+        # proportional coded loads beat the heterogeneity-blind (K, L) code
+        mds = get_scheme("mds").mc(het, N, 60, RNG(32))
+        assert rep.t_comp <= mds.t_comp * 1.05
+
+    def test_het_mds_redundancy_tradeoff(self):
+        """Under light-tailed Erlang service, proportional coded loads scale
+        every worker's time by ~r: redundancy costs completion time (it buys
+        straggler tolerance, not speed) and shifts work to communication."""
+        het = make_het(K=20, seed=33)
+        N = 20_000
+        lean = get_scheme("het_mds", redundancy=1.0).mc(het, N, 60, RNG(34))
+        fat = get_scheme("het_mds", redundancy=1.6).mc(het, N, 60, RNG(34))
+        assert lean.t_comp <= fat.t_comp <= 1.7 * lean.t_comp
+        assert lean.n_comm == 0 and fat.n_comm > 0
+
+    def test_trace_replay_uses_pool_traces(self):
+        het = make_het(K=4, seed=35)
+        traces = np.outer(het.lambdas, [1.0, 0.5, 2.0])   # drifting rates
+        scheme = get_scheme("trace_replay", traces=traces)
+        stats = scheme.simulate(het, 600, RNG(36))
+        stats.check_work_conserved(600)
+        assert stats.iterations >= 1
+
+    def test_trace_replay_synthetic_drift_shape_checked(self):
+        scheme = get_scheme("trace_replay")
+        het = make_het(K=5, seed=37)
+        tr = scheme._traces_for(het)
+        assert tr.shape == (5, scheme.period) and (tr > 0).all()
+        bad = get_scheme("trace_replay", traces=np.ones((3, 4)))
+        with pytest.raises(ValueError, match="workers"):
+            bad.simulate(het, 100, RNG(0))
+
+    def test_gradient_coded_covers_everything_early(self):
+        het = make_het(K=6, seed=38)
+        stats = get_scheme("gradient_coded", s=1).simulate(het, 900, RNG(39))
+        assert int(stats.n_done.sum()) == 900    # unique-coverage credit
+        assert stats.n_comm == pytest.approx(900)  # one extra replica
