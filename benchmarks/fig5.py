@@ -5,6 +5,11 @@ two heterogeneity levels (sigma^2 = 0 and mu^2/6).  Every scheme is
 resolved through ``SCHEME_REGISTRY`` -- register a scheme and add its
 name to ``benchmarks.common.FIG_SCHEMES`` and it appears in this figure
 (and the BENCH json) with no further wiring.
+
+The whole (mu, sigma^2) panel goes through ``Scheme.mc_grid`` -- one
+engine dispatch per scheme for the full grid instead of a Python loop of
+``mc()`` calls -- and inherits the sampler backend from
+``REPRO_SAMPLER_BACKEND`` (or the ``backend=`` argument).
 """
 from __future__ import annotations
 
@@ -13,38 +18,45 @@ import numpy as np
 from .common import N_PAPER, TRIALS, make_het, scheme_panel
 
 MUS = (10.0, 20.0, 50.0, 100.0)
+SIGMA_LEVELS = (("0", 0.0), ("mu^2/6", 1.0 / 6.0))   # sigma2 = frac * mu^2
 
 
-def run(trials: int = TRIALS, n: int = N_PAPER, quick: bool = False):
-    rows = []
+def grid_points(quick: bool = False):
+    """The figure's (mu, sigma^2-label, sigma^2) axis, panel order."""
     mus = MUS[:2] if quick else MUS
-    for mu in mus:
-        for sig_label, sigma2 in (("0", 0.0), ("mu^2/6", mu * mu / 6)):
-            het = make_het(mu, sigma2, seed=int(mu))
-            rng = np.random.default_rng(1234)
-            row = {"mu": mu, "sigma2": sig_label,
-                   "lambda_sum": het.lambda_sum,
-                   "oracle": n / het.lambda_sum}
-            for name, scheme in scheme_panel().items():
-                rep = scheme.mc(het, n, trials=rep_trials(name, trials),
-                                rng=rng)
-                row[name] = rep.t_comp
-                if "L" in rep.extra:
-                    row[f"{name}_L"] = int(rep.extra["L"])
-            # legacy column names kept for CSV consumers (only for panel
-            # members actually present, so trimming FIG_SCHEMES stays safe)
-            for old, new in (("mds_opt", "mds"), ("we_known", "work_exchange"),
-                             ("we_unknown", "work_exchange_unknown")):
-                if new in row:
-                    row[old] = row[new]
-            rows.append(row)
+    return [(mu, lbl, frac * mu * mu) for mu in mus
+            for lbl, frac in SIGMA_LEVELS]
+
+
+def grid_specs(quick: bool = False):
+    """One ``HetSpec`` per panel point (seeded per mu, as in PR 1)."""
+    return [make_het(mu, sigma2, seed=int(mu))
+            for mu, _, sigma2 in grid_points(quick)]
+
+
+def run(trials: int = TRIALS, n: int = N_PAPER, quick: bool = False,
+        backend: str | None = None):
+    points = grid_points(quick)
+    specs = grid_specs(quick)
+    rows = [{"mu": mu, "sigma2": lbl, "lambda_sum": het.lambda_sum,
+             "oracle": n / het.lambda_sum}
+            for (mu, lbl, _), het in zip(points, specs)]
+    for name, scheme in scheme_panel().items():
+        reports = scheme.mc_grid(specs, n, trials=trials,
+                                 rng=np.random.default_rng(1234),
+                                 backend=backend)
+        for row, rep in zip(rows, reports):
+            row[name] = rep.t_comp
+            if "L" in rep.extra:
+                row[f"{name}_L"] = int(rep.extra["L"])
+    for row in rows:
+        # legacy column names kept for CSV consumers (only for panel
+        # members actually present, so trimming FIG_SCHEMES stays safe)
+        for old, new in (("mds_opt", "mds"), ("we_known", "work_exchange"),
+                         ("we_unknown", "work_exchange_unknown")):
+            if new in row:
+                row[old] = row[new]
     return rows
-
-
-def rep_trials(name: str, trials: int) -> int:
-    # the MDS L-sweep draws trials per candidate L; keep its budget at the
-    # pre-registry level (mds_optimize used trials // 2)
-    return max(8, trials // 2) if name == "mds" else trials
 
 
 def validate(rows) -> list[str]:

@@ -2,8 +2,9 @@
 iterations I versus heterogeneity variance sigma^2, for work exchange
 with and without heterogeneity knowledge (mu = 50, K = 50, N = 1e6).
 
-Both variants are resolved through the scheme registry; the vectorized
-MC engine makes the trials dimension free."""
+The whole (sigma^2 x heterogeneity-draw) scenario grid runs through one
+``mc_grid`` dispatch per variant; the sampler backend follows
+``REPRO_SAMPLER_BACKEND`` / the ``backend=`` argument."""
 from __future__ import annotations
 
 import numpy as np
@@ -18,29 +19,33 @@ VARIANTS = (("known", "work_exchange"), ("unknown", "work_exchange_unknown"))
 
 
 def run(n: int = N_PAPER, draws: int = HET_DRAWS, trials: int = 4,
-        quick: bool = False):
-    rows = []
+        quick: bool = False, backend: str | None = None):
     sigma2s = SIGMA2S[::2] if quick else SIGMA2S
-    schemes = {label: get_scheme(name, threshold_frac=THRESHOLD_FRAC)
-               for label, name in VARIANTS}
-    for sigma2 in sigma2s:
-        acc = {(lbl, met): [] for lbl, _ in VARIANTS
-               for met in ("comm", "iters")}
-        for d in range(draws if not quick else max(4, draws // 4)):
-            het = make_het(MU, sigma2, seed=1000 + d)
-            rng = np.random.default_rng(d)
-            for label, scheme in schemes.items():
-                rep = scheme.mc(het, n, trials=trials, rng=rng)
-                acc[(label, "comm")].append(rep.n_comm / n)
-                acc[(label, "iters")].append(rep.iterations)
+    n_draws = max(4, draws // 4) if quick else draws
+    # the full grid is (sigma^2 x draw): one spec per cell, grid-major
+    specs = [make_het(MU, sigma2, seed=1000 + d)
+             for sigma2 in sigma2s for d in range(n_draws)]
+    per_variant = {}
+    for label, name in VARIANTS:
+        scheme = get_scheme(name, threshold_frac=THRESHOLD_FRAC)
+        per_variant[label] = scheme.mc_grid(
+            specs, n, trials=trials, rng=np.random.default_rng(2024),
+            backend=backend)
+    rows = []
+    for i, sigma2 in enumerate(sigma2s):
+        cell = slice(i * n_draws, (i + 1) * n_draws)
+        comm = {lbl: np.array([r.n_comm / n for r in reps[cell]])
+                for lbl, reps in per_variant.items()}
+        iters = {lbl: np.array([r.iterations for r in reps[cell]])
+                 for lbl, reps in per_variant.items()}
         rows.append({
             "sigma2": sigma2,
-            "comm_known": float(np.mean(acc[("known", "comm")])),
-            "comm_known_std": float(np.std(acc[("known", "comm")])),
-            "comm_unknown": float(np.mean(acc[("unknown", "comm")])),
-            "comm_unknown_std": float(np.std(acc[("unknown", "comm")])),
-            "iters_known": float(np.mean(acc[("known", "iters")])),
-            "iters_unknown": float(np.mean(acc[("unknown", "iters")])),
+            "comm_known": float(comm["known"].mean()),
+            "comm_known_std": float(comm["known"].std()),
+            "comm_unknown": float(comm["unknown"].mean()),
+            "comm_unknown_std": float(comm["unknown"].std()),
+            "iters_known": float(iters["known"].mean()),
+            "iters_unknown": float(iters["unknown"].mean()),
         })
     return rows
 

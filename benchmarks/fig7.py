@@ -2,8 +2,8 @@
 N_rem^th for the unknown-heterogeneity work exchange (mu = 50), and the
 companion claim that T_comp stays near-oracle at the default threshold.
 
-The threshold is a Scheme constructor parameter, so the sweep is just
-``get_scheme("work_exchange_unknown", threshold_frac=frac)``."""
+The threshold is a Scheme constructor parameter, so the sweep is one
+``mc_grid`` dispatch over the sigma^2 axis per threshold value."""
 from __future__ import annotations
 
 import numpy as np
@@ -17,17 +17,19 @@ SIGMA2S = (0.0, 277.0, 833.0)
 THRESH_FRACS = (0.001, 0.005, 0.01, 0.05, 0.2, 0.5)
 
 
-def run(n: int = N_PAPER, trials: int = 8, quick: bool = False):
+def run(n: int = N_PAPER, trials: int = 8, quick: bool = False,
+        backend: str | None = None):
     rows = []
     fracs = THRESH_FRACS[::2] if quick else THRESH_FRACS
     sigma2s = SIGMA2S[::2] if quick else SIGMA2S
-    for sigma2 in sigma2s:
-        het = make_het(MU, sigma2, seed=int(sigma2) + 7)
-        oracle_t = n / het.lambda_sum
-        for frac in fracs:
-            rng = np.random.default_rng(int(frac * 1e6))
-            scheme = get_scheme("work_exchange_unknown", threshold_frac=frac)
-            rep = scheme.mc(het, n, trials=trials, rng=rng)
+    specs = [make_het(MU, sigma2, seed=int(sigma2) + 7) for sigma2 in sigma2s]
+    oracle_ts = [n / het.lambda_sum for het in specs]
+    for frac in fracs:
+        scheme = get_scheme("work_exchange_unknown", threshold_frac=frac)
+        reports = scheme.mc_grid(specs, n, trials=trials,
+                                 rng=np.random.default_rng(int(frac * 1e6)),
+                                 backend=backend)
+        for sigma2, oracle_t, rep in zip(sigma2s, oracle_ts, reports):
             rows.append({"sigma2": sigma2, "threshold_frac": frac,
                          "iters": rep.iterations,
                          "t_comp_over_oracle": rep.t_comp / oracle_t})

@@ -8,7 +8,12 @@
        report = get_scheme("work_exchange").mc(het, N, trials, rng)
        print(report.t_comp, report.iterations, report.n_comm)
 
-3. Runs a REAL tiny-transformer training step under the work-exchange
+3. Sweeps a whole (mu, sigma^2) scenario grid in ONE engine dispatch via
+   ``mc_grid`` -- the sampler backend (exact numpy engine, or the fused
+   jitted jax pipeline) comes from REPRO_SAMPLER_BACKEND or the
+   ``backend=`` argument.
+
+4. Runs a REAL tiny-transformer training step under the work-exchange
    scheduler (virtual clocks, real gradients) -- the same registry
    resolves the training policy.
 
@@ -20,7 +25,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.core import HetSpec, get_scheme, list_schemes
+from repro.core import HetSpec, get_scheme, list_schemes, resolve_backend
 from repro.data import UnitStore
 from repro.distributed.hetsched import HetTrainer
 from repro.models import build_model
@@ -41,13 +46,27 @@ def main():
              "het_mds")
     for name in panel:
         rep = get_scheme(name).mc(het, N, trials=30, rng=rng)
-        extra = "".join(f" {k}={v:g}" for k, v in rep.extra.items())
+        extra = "".join(f" {k}={v:g}" for k, v in rep.extra.items()
+                        if isinstance(v, (int, float)))
         print(f"{name:22s} {rep.t_comp:9.3f} s "
               f"(+{100 * (rep.t_comp / oracle - 1):5.1f}%)  "
               f"I={rep.iterations:5.1f}  N_comm/N={rep.n_comm / N:.4f}"
               f"{extra}")
 
-    # --- 2. real training under the work exchange scheduler ----------------
+    # --- 2. a scenario grid in one engine dispatch --------------------------
+    backend = resolve_backend()      # REPRO_SAMPLER_BACKEND or "numpy"
+    mus = (10.0, 50.0, 100.0)
+    specs = [HetSpec.uniform_random(K, mu, mu * mu / 6, rng) for mu in mus]
+    print(f"\n(mu, sigma^2) grid through mc_grid, one '{backend}' backend "
+          f"dispatch for {len(specs)} x 30 runs:")
+    reports = get_scheme("work_exchange").mc_grid(specs, N, trials=30,
+                                                  rng=rng, backend=backend)
+    for mu, het_g, rep in zip(mus, specs, reports):
+        print(f"  mu={mu:5.1f}  T_comp={rep.t_comp:8.3f} s "
+              f"(oracle {N / het_g.lambda_sum:8.3f} s)  "
+              f"I={rep.iterations:5.1f}")
+
+    # --- 3. real training under the work exchange scheduler ----------------
     print("\nwork exchange training (real gradients, virtual clocks):")
     cfg = dataclasses.replace(smoke_config(get_config("phi3-mini-3.8b")),
                               dtype="float32")

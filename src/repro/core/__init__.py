@@ -9,6 +9,9 @@ Layout
                   and trial-batched (largest-remainder, water-filling)
   estimator    -- online rate estimation (paper eq. 23 + EMA + Bayesian)
   exchange     -- unit-id-level master protocol (Algorithms 1 & 3)
+  samplers     -- pluggable MC sampler backends (exact numpy engine /
+                  fused jitted jax pipeline) behind Scheme.mc + mc_grid;
+                  select with REPRO_SAMPLER_BACKEND or mc(..., backend=)
   schemes      -- THE policy surface: Scheme protocol + SCHEME_REGISTRY +
                   trial-vectorized Monte-Carlo engine.  All five paper
                   schemes (fixed, uniform, oracle, mds/mds_opt, work
@@ -29,15 +32,19 @@ Three-line API:
     ...                                         trials=100, rng=rng)
 """
 from . import (assignment, coded, erlang, estimator, exchange, mds, oracle,
-               schemes, simulator)
+               samplers, schemes, simulator)
+from .samplers import (SAMPLER_BACKENDS, get_backend, list_backends,
+                       register_backend, resolve_backend)
 from .schemes import (MCReport, Scheme, SCHEME_REGISTRY, get_scheme,
                       list_schemes, register_scheme)
 from .types import ExchangeConfig, HetSpec, RunStats
 
 __all__ = [
     "assignment", "coded", "erlang", "estimator", "exchange", "mds",
-    "oracle", "schemes", "simulator",
+    "oracle", "samplers", "schemes", "simulator",
     "MCReport", "Scheme", "SCHEME_REGISTRY", "get_scheme", "list_schemes",
     "register_scheme",
+    "SAMPLER_BACKENDS", "get_backend", "list_backends", "register_backend",
+    "resolve_backend",
     "ExchangeConfig", "HetSpec", "RunStats",
 ]

@@ -25,6 +25,14 @@ Gamma/argmin/Binomial under a per-trial active mask); the scalar
 single-trial path is kept both as the per-trial reference the batched
 engine is validated against seed-for-seed (``engine="loop"``) and as the
 ``simulate`` implementation.
+
+The draw pipeline itself is pluggable (``repro.core.samplers``): the
+``numpy`` backend is the exact engine above, the ``jax`` backend fuses the
+whole round pipeline into one jitted dispatch.  Select per call
+(``mc(..., backend="jax")``) or globally (``REPRO_SAMPLER_BACKEND``).  On
+top of it, ``mc_grid(het_specs, N, trials, rng)`` batches a whole
+``(mu, sigma^2)`` scenario grid through one engine call instead of a
+Python loop of ``mc()``s -- the figure drivers are one dispatch per panel.
 """
 from __future__ import annotations
 
@@ -34,11 +42,10 @@ from typing import Dict, List, Literal, Optional, Sequence, Tuple, Type
 import numpy as np
 
 from .assignment import (capped_proportional_assignment,
-                         capped_proportional_assignment_batch,
-                         largest_remainder_round,
-                         largest_remainder_round_batch,
-                         proportional_assignment, uniform_assignment)
+                         largest_remainder_round, proportional_assignment,
+                         uniform_assignment)
 from .exchange import Assignment, MasterScheduler
+from .samplers import get_backend, resolve_backend
 from .types import ExchangeConfig, HetSpec, RunStats
 
 
@@ -175,7 +182,14 @@ class Scheme:
         raise NotImplementedError
 
     def mc(self, het: HetSpec, N: int, trials: int,
-           rng: np.random.Generator, keep_trials: bool = False) -> MCReport:
+           rng: np.random.Generator, keep_trials: bool = False,
+           backend: Optional[str] = None) -> MCReport:
+        """Monte-Carlo report over ``trials`` runs.
+
+        ``backend`` selects the sampler backend (``repro.core.samplers``)
+        for schemes with a fused draw pipeline; schemes without one --
+        this default per-trial loop included -- always draw with numpy.
+        """
         ts = np.empty(trials)
         its = np.empty(trials)
         cs = np.empty(trials)
@@ -183,6 +197,19 @@ class Scheme:
             s = self.simulate(het, N, rng)
             ts[i], its[i], cs[i] = s.t_comp, s.iterations, s.n_comm
         return _report(self.name, ts, its, cs, keep_trials)
+
+    def mc_grid(self, het_specs: Sequence[HetSpec], N: int, trials: int,
+                rng: np.random.Generator, keep_trials: bool = False,
+                backend: Optional[str] = None) -> List[MCReport]:
+        """``mc`` over a scenario grid, one ``MCReport`` per spec.
+
+        The base implementation loops ``mc`` (drawing from the shared
+        ``rng`` in spec order); schemes with a batched engine override it
+        to run the whole ``len(het_specs) x trials`` batch in one engine
+        dispatch.
+        """
+        return [self.mc(het, N, trials, rng, keep_trials=keep_trials,
+                        backend=backend) for het in het_specs]
 
     # -- executable protocol (training/serving runtimes) --------------------
 
@@ -310,133 +337,32 @@ def work_exchange_mc_batched(het: HetSpec, N: int, cfg: ExchangeConfig,
                              trials: int, rng: np.random.Generator,
                              capped_mode: Literal["carry", "waterfill"]
                              = "carry", keep_trials: bool = False,
-                             scheme_name: str = "work_exchange") -> MCReport:
-    """All ``trials`` work-exchange runs at once: batched Gamma / argmin /
-    Binomial under a per-trial active mask.
+                             scheme_name: str = "work_exchange",
+                             backend: Optional[str] = None) -> MCReport:
+    """All ``trials`` work-exchange runs at once through a sampler backend.
 
-    State is (T,) / (T, K) arrays; each outer loop step advances every trial
-    still above the cutting threshold by one reassignment iteration, so the
-    Python-level loop count is max-iterations-over-trials (~10) instead of
-    trials x iterations.  With a single trial the randomness is consumed in
-    exactly the order of ``simulate_work_exchange_scalar``, which the tests
-    exploit for seed-for-seed validation of the whole engine.
+    The heavy lifting lives in ``repro.core.samplers``: the ``numpy``
+    backend is the exact batched Gamma / argmin / Binomial engine (with a
+    single trial it consumes randomness in exactly the order of
+    ``simulate_work_exchange_scalar``, which the tests exploit for
+    seed-for-seed validation); the ``jax`` backend fuses the same pipeline
+    into one jitted dispatch.
     """
-    lam = het.lambdas
-    K = het.K
-    T = int(trials)
-    known = cfg.known_heterogeneity
-    threshold = cfg.threshold_frac * N / K
-    cap = (np.inf if cfg.storage_cap_frac is None or known
-           else int(np.ceil(cfg.storage_cap_frac * N / K)))
-    inv_lam = 1.0 / lam
-    lam_b = np.broadcast_to(lam, (T, K))
+    name = resolve_backend(backend)
+    ts, its, cs = get_backend(name).work_exchange_grid(
+        het.lambdas[None, :], N, cfg, int(trials), rng, capped_mode)
+    return _report(scheme_name, ts, its, cs, keep_trials,
+                   extra={"backend": name})
 
-    est_done = np.zeros((T, K))
-    est_time = np.zeros(T)
-    lam_hat = np.ones((T, K))
-    n_rem = np.full(T, N, dtype=np.int64)
-    n_left_prev = np.zeros((T, K), dtype=np.int64)
-    n_done = np.zeros((T, K), dtype=np.int64)
-    t_comp = np.zeros(T)
-    n_comm = np.zeros(T)
-    iters = np.zeros(T, dtype=np.int64)
-    in_loop = np.ones(T, dtype=bool)
 
-    while True:
-        # compact every pass to the trials still above the threshold; row
-        # order is ascending, so a lone trial draws in exactly the scalar
-        # order and the tail of long-running trials stays cheap
-        in_loop &= (n_rem > threshold) & (iters < cfg.max_iterations)
-        idx = np.flatnonzero(in_loop)
-        if idx.size == 0:
-            break
-        n = idx.size
-        rates = lam_b[:n] if known else lam_hat[idx]
-        rem = n_rem[idx]
-        if np.isinf(cap):
-            assign = largest_remainder_round_batch(rates, rem)
-        elif capped_mode == "waterfill":
-            assign = capped_proportional_assignment_batch(rates, rem, cap)
-        else:
-            assign = np.minimum(largest_remainder_round_batch(rates, rem),
-                                cap)
-        assigned = assign.sum(axis=1)
-        carried = rem - assigned
-        # degenerate rounding: that trial leaves the loop without drawing
-        live = assigned > 0
-        if not live.all():
-            in_loop[idx[~live]] = False
-            idx, assign, carried = idx[live], assign[live], carried[live]
-            n = idx.size
-            if n == 0:
-                break
-
-        started = iters[idx] > 0
-        comm_add = np.maximum(assign - n_left_prev[idx], 0).sum(axis=1)
-        n_comm[idx] += np.where(started, comm_add, 0.0)
-
-        # batched iteration outcome (same draw order as the scalar path)
-        busy = assign > 0
-        if busy.all():      # the common case: draw the full matrix directly
-            t_k = rng.gamma(shape=assign, scale=inv_lam)
-        else:
-            t_k = np.full((n, K), np.inf)
-            t_k[busy] = rng.gamma(shape=assign[busy],
-                                  scale=np.broadcast_to(inv_lam,
-                                                        (n, K))[busy])
-        finisher = np.argmin(t_k, axis=1)
-        rows = np.arange(n)
-        t_star = t_k[rows, finisher]
-        done = np.zeros((n, K), dtype=np.int64)
-        done[rows, finisher] = assign[rows, finisher]
-        others = busy.copy()
-        others[rows, finisher] = False
-        o_rows, o_cols = np.nonzero(others)      # C order == scalar draw order
-        if o_rows.size:
-            n_oth = np.maximum(assign[o_rows, o_cols] - 1, 0)
-            p_oth = np.clip(t_star[o_rows] / t_k[o_rows, o_cols], 0.0, 1.0)
-            done[o_rows, o_cols] = rng.binomial(n_oth, p_oth)
-
-        iters[idx] += 1
-        t_comp[idx] += t_star
-        n_done[idx] += done
-        leftover = assign - done
-        n_left_prev[idx] = leftover
-        n_rem[idx] = carried + leftover.sum(axis=1)
-        if not known:        # online estimate, eq. (23)
-            ed = est_done[idx] + done
-            et = est_time[idx] + t_star
-            est_done[idx] = ed
-            est_time[idx] = et
-            lam_hat[idx] = np.where(ed > 0,
-                                    ed / np.maximum(et, 1e-300)[:, None], 1.0)
-
-    # final phase below the threshold: assign the remainder, wait for all
-    idx = np.flatnonzero(n_rem > 0)
-    if idx.size:
-        n = idx.size
-        rates = lam_b[:n] if known else lam_hat[idx]
-        assign = largest_remainder_round_batch(rates, n_rem[idx])
-        comm_add = np.maximum(assign - n_left_prev[idx], 0).sum(axis=1)
-        n_comm[idx] += np.where(iters[idx] > 0, comm_add, 0.0)
-        busy = assign > 0
-        if busy.all():
-            t_k = rng.gamma(shape=assign, scale=inv_lam)
-        else:
-            t_k = np.zeros((n, K))
-            t_k[busy] = rng.gamma(shape=assign[busy],
-                                  scale=np.broadcast_to(inv_lam,
-                                                        (n, K))[busy])
-        t_comp[idx] += t_k.max(axis=1)
-        n_done[idx] += assign
-        iters[idx] += 1
-
-    totals = n_done.sum(axis=1)
-    if not (totals == N).all():
-        bad = int(np.flatnonzero(totals != N)[0])
-        raise AssertionError(f"work conservation violated in trial {bad}: "
-                             f"processed {int(totals[bad])} of {N}")
-    return _report(scheme_name, t_comp, iters, n_comm, keep_trials)
+def _grid_reports(scheme_name: str, specs: Sequence[HetSpec], trials: int,
+                  arrays, keep_trials: bool, backend_name: str
+                  ) -> List[MCReport]:
+    """Slice flat grid-major engine output back into per-spec reports."""
+    ts, its, cs = (np.asarray(a).reshape(len(specs), trials) for a in arrays)
+    return [_report(scheme_name, ts[g], its[g], cs[g], keep_trials,
+                    extra={"backend": backend_name})
+            for g in range(len(specs))]
 
 
 # ---------------------------------------------------------------------------
@@ -457,7 +383,8 @@ class OracleScheme(Scheme):
                         n_done=self.initial_sizes(het, N))
 
     def mc(self, het: HetSpec, N: int, trials: int,
-           rng: np.random.Generator, keep_trials: bool = False) -> MCReport:
+           rng: np.random.Generator, keep_trials: bool = False,
+           backend: Optional[str] = None) -> MCReport:
         ts = rng.gamma(shape=N, scale=1.0 / het.lambda_sum, size=trials)
         return _report(self.name, ts, np.ones(trials), np.zeros(trials),
                        keep_trials, extra={"exact_mean": N / het.lambda_sum})
@@ -473,13 +400,36 @@ class _StaticScheme(Scheme):
         return RunStats(t_comp=t, iterations=1, n_comm=0.0, n_done=assign)
 
     def mc(self, het: HetSpec, N: int, trials: int,
-           rng: np.random.Generator, keep_trials: bool = False) -> MCReport:
+           rng: np.random.Generator, keep_trials: bool = False,
+           backend: Optional[str] = None) -> MCReport:
         assign = self.initial_sizes(het, N)
         busy = assign > 0
         t = rng.gamma(shape=assign[busy], scale=1.0 / het.lambdas[busy],
                       size=(trials, int(busy.sum())))
         return _report(self.name, t.max(axis=1), np.ones(trials),
                        np.zeros(trials), keep_trials)
+
+    def mc_grid(self, het_specs: Sequence[HetSpec], N: int, trials: int,
+                rng: np.random.Generator, keep_trials: bool = False,
+                backend: Optional[str] = None) -> List[MCReport]:
+        """One draw for the whole grid: (G * trials, K) Gamma matrix, max
+        over busy workers per row.  Same distribution as looped ``mc``."""
+        specs = list(het_specs)
+        if not specs or len({h.K for h in specs}) != 1:
+            return super().mc_grid(specs, N, trials, rng,
+                                   keep_trials=keep_trials, backend=backend)
+        T = int(trials)
+        shape = np.repeat(np.stack([self.initial_sizes(h, N)
+                                    for h in specs]), T, axis=0)
+        scale = np.repeat(np.stack([1.0 / h.lambdas for h in specs]),
+                          T, axis=0)
+        t = np.zeros(shape.shape)
+        busy = shape > 0
+        t[busy] = rng.gamma(shape=shape[busy], scale=scale[busy])
+        ts = t.max(axis=1).reshape(len(specs), T)
+        return [_report(self.name, ts[g], np.ones(T), np.zeros(T),
+                        keep_trials, extra={"backend": "numpy"})
+                for g in range(len(specs))]
 
     def _scheduler_rates(self, rates: np.ndarray) -> np.ndarray:
         raise NotImplementedError
@@ -551,9 +501,17 @@ class MDSScheme(Scheme):
                         n_comm=float(m * het.K - N), n_done=n_done)
 
     def mc(self, het: HetSpec, N: int, trials: int,
-           rng: np.random.Generator, keep_trials: bool = False) -> MCReport:
+           rng: np.random.Generator, keep_trials: bool = False,
+           backend: Optional[str] = None) -> MCReport:
         if self.L is None:
-            L, _, ts = mds_sweep(het, N, trials, rng)
+            # the K-candidate sweep only picks L*: bound its per-candidate
+            # budget at opt_trials, then spend the full trial budget on the
+            # winner alone (identical to the old behaviour whenever
+            # trials <= opt_trials)
+            sweep_trials = min(trials, self.opt_trials)
+            L, _, ts = mds_sweep(het, N, sweep_trials, rng)
+            if sweep_trials < trials:
+                ts = mds_time_samples(het, N, L, trials, rng)
         else:
             L = self._resolve_L(het, N, rng)
             ts = mds_time_samples(het, N, L, trials, rng)
@@ -625,12 +583,35 @@ class _WorkExchangeBase(Scheme):
                                              self.capped_mode)
 
     def mc(self, het: HetSpec, N: int, trials: int,
-           rng: np.random.Generator, keep_trials: bool = False) -> MCReport:
-        if self.engine == "loop":
+           rng: np.random.Generator, keep_trials: bool = False,
+           backend: Optional[str] = None) -> MCReport:
+        if self.engine == "loop":    # the per-trial validation reference
             return super().mc(het, N, trials, rng, keep_trials)
         return work_exchange_mc_batched(het, N, self.config(), trials, rng,
                                         self.capped_mode, keep_trials,
-                                        scheme_name=self.name)
+                                        scheme_name=self.name,
+                                        backend=backend)
+
+    def mc_grid(self, het_specs: Sequence[HetSpec], N: int, trials: int,
+                rng: np.random.Generator, keep_trials: bool = False,
+                backend: Optional[str] = None) -> List[MCReport]:
+        """One engine dispatch for the whole ``(het_specs) x trials`` batch.
+
+        Requires every spec to share K (one rate matrix row per spec);
+        mixed-K grids and the ``engine="loop"`` reference fall back to the
+        per-spec loop.
+        """
+        specs = list(het_specs)
+        if (self.engine == "loop" or not specs
+                or len({h.K for h in specs}) != 1):
+            return super().mc_grid(specs, N, trials, rng,
+                                   keep_trials=keep_trials, backend=backend)
+        name = resolve_backend(backend)
+        lam = np.stack([h.lambdas for h in specs])
+        arrays = get_backend(name).work_exchange_grid(
+            lam, N, self.config(), int(trials), rng, self.capped_mode)
+        return _grid_reports(self.name, specs, int(trials), arrays,
+                             keep_trials, name)
 
     def make_scheduler(self, unit_ids, rates=None, estimator=None,
                        threshold_frac=None) -> MasterScheduler:
@@ -689,20 +670,27 @@ class HetMDSScheme(Scheme):
         total = int(np.ceil(self.redundancy * N))
         return largest_remainder_round(het.lambdas, total)
 
+    @staticmethod
+    def _cover_times_rows(load_rows: np.ndarray, scale_rows: np.ndarray,
+                          N: int, rng: np.random.Generator) -> np.ndarray:
+        """Per-row cover time: earliest finish time at which the finished
+        workers' coded loads jointly cover N (rows are independent runs)."""
+        t = np.full(load_rows.shape, np.inf)
+        busy = load_rows > 0
+        t[busy] = rng.gamma(shape=load_rows[busy], scale=scale_rows[busy])
+        order = np.argsort(t, axis=1, kind="stable")
+        covered = np.cumsum(np.take_along_axis(load_rows, order, axis=1),
+                            axis=1) >= N
+        first = np.argmax(covered, axis=1)               # first covering rank
+        t_sorted = np.take_along_axis(t, order, axis=1)
+        return t_sorted[np.arange(first.size), first]
+
     def _cover_times(self, het: HetSpec, N: int, trials: int,
                      rng: np.random.Generator) -> np.ndarray:
         loads = self.initial_sizes(het, N)
-        busy = loads > 0
-        t = np.full((trials, het.K), np.inf)
-        t[:, busy] = rng.gamma(shape=loads[busy],
-                               scale=1.0 / het.lambdas[busy],
-                               size=(trials, int(busy.sum())))
-        order = np.argsort(t, axis=1, kind="stable")
-        loads_sorted = loads[order]                      # (trials, K)
-        covered = np.cumsum(loads_sorted, axis=1) >= N
-        idx = np.argmax(covered, axis=1)                 # first covering rank
-        t_sorted = np.take_along_axis(t, order, axis=1)
-        return t_sorted[np.arange(trials), idx]
+        return self._cover_times_rows(
+            np.broadcast_to(loads, (trials, het.K)),
+            np.broadcast_to(1.0 / het.lambdas, (trials, het.K)), N, rng)
 
     def simulate(self, het: HetSpec, N: int,
                  rng: np.random.Generator) -> RunStats:
@@ -712,12 +700,33 @@ class HetMDSScheme(Scheme):
                         n_comm=float(loads.sum() - N), n_done=loads)
 
     def mc(self, het: HetSpec, N: int, trials: int,
-           rng: np.random.Generator, keep_trials: bool = False) -> MCReport:
+           rng: np.random.Generator, keep_trials: bool = False,
+           backend: Optional[str] = None) -> MCReport:
         loads = self.initial_sizes(het, N)
         ts = self._cover_times(het, N, trials, rng)
         return _report(self.name, ts, np.ones(trials),
                        np.full(trials, float(loads.sum() - N)), keep_trials,
                        extra={"redundancy": self.redundancy})
+
+    def mc_grid(self, het_specs: Sequence[HetSpec], N: int, trials: int,
+                rng: np.random.Generator, keep_trials: bool = False,
+                backend: Optional[str] = None) -> List[MCReport]:
+        """Cover times for the whole grid in one (G * trials, K) batch."""
+        specs = list(het_specs)
+        if not specs or len({h.K for h in specs}) != 1:
+            return super().mc_grid(specs, N, trials, rng,
+                                   keep_trials=keep_trials, backend=backend)
+        T = int(trials)
+        loads = np.stack([self.initial_sizes(h, N) for h in specs])
+        ts = self._cover_times_rows(
+            np.repeat(loads, T, axis=0),
+            np.repeat(np.stack([1.0 / h.lambdas for h in specs]), T, axis=0),
+            N, rng).reshape(len(specs), T)
+        return [_report(self.name, ts[g], np.ones(T),
+                        np.full(T, float(loads[g].sum() - N)), keep_trials,
+                        extra={"redundancy": self.redundancy,
+                               "backend": "numpy"})
+                for g in range(len(specs))]
 
 
 @register_scheme("trace_replay")

@@ -1,0 +1,253 @@
+"""Sampler backends: registry/selection semantics, numpy bit-identity,
+numpy-vs-jax statistical equivalence, and ``mc_grid`` agreement.
+
+The jax tests deliberately share one padded batch-shape bucket (B=512) so
+the whole file pays a single jit compilation.
+"""
+import numpy as np
+import pytest
+
+from repro.core.samplers import (ENV_VAR, SAMPLER_BACKENDS, SamplerBackend,
+                                 get_backend, list_backends,
+                                 register_backend, resolve_backend,
+                                 work_exchange_grid_numpy)
+from repro.core.schemes import get_scheme, work_exchange_mc_batched
+from repro.core.types import ExchangeConfig, HetSpec
+
+RNG = lambda s=0: np.random.default_rng(s)  # noqa: E731
+
+K, N, TRIALS = 15, 50_000, 512      # B = 512: one jit bucket for the file
+
+
+def make_het(K=K, mu=20.0, sigma2=20.0 ** 2 / 6, seed=3):
+    return HetSpec.uniform_random(K, mu, sigma2, RNG(seed))
+
+
+# ---------------------------------------------------------------------------
+# registry + selection
+# ---------------------------------------------------------------------------
+
+class TestBackendRegistry:
+    def test_builtin_backends_registered(self):
+        assert {"numpy", "jax"} <= set(list_backends())
+        for name in ("numpy", "jax"):
+            assert get_backend(name).name == name
+
+    def test_default_is_numpy(self, monkeypatch):
+        monkeypatch.delenv(ENV_VAR, raising=False)
+        assert resolve_backend() == "numpy"
+
+    def test_env_var_selects_backend(self, monkeypatch):
+        monkeypatch.setenv(ENV_VAR, "jax")
+        assert resolve_backend() == "jax"
+        monkeypatch.setenv(ENV_VAR, "numpy")
+        assert resolve_backend() == "numpy"
+
+    def test_kwarg_overrides_env(self, monkeypatch):
+        monkeypatch.setenv(ENV_VAR, "jax")
+        assert resolve_backend("numpy") == "numpy"
+
+    def test_unknown_backend_raises(self, monkeypatch):
+        with pytest.raises(KeyError, match="no_such"):
+            resolve_backend("no_such")
+        monkeypatch.setenv(ENV_VAR, "bogus")
+        with pytest.raises(KeyError, match="bogus"):
+            resolve_backend()
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_backend(SamplerBackend(
+                name="numpy", work_exchange_grid=work_exchange_grid_numpy))
+
+    def test_unavailable_backend_rejected_with_hint(self):
+        register_backend(SamplerBackend(name="tmp_unavailable",
+                                        work_exchange_grid=None),
+                         available=lambda: False)
+        try:
+            with pytest.raises(RuntimeError, match="unavailable"):
+                resolve_backend("tmp_unavailable")
+        finally:
+            del SAMPLER_BACKENDS["tmp_unavailable"]
+
+    def test_env_var_reaches_scheme_mc(self, monkeypatch):
+        monkeypatch.setenv(ENV_VAR, "jax")
+        rep = get_scheme("work_exchange").mc(make_het(), N, TRIALS, RNG(0))
+        assert rep.extra["backend"] == "jax"
+        rep = get_scheme("work_exchange").mc(make_het(), N, TRIALS, RNG(0),
+                                             backend="numpy")
+        assert rep.extra["backend"] == "numpy"
+
+
+# ---------------------------------------------------------------------------
+# numpy backend: exact semantics
+# ---------------------------------------------------------------------------
+
+class TestNumpyBackend:
+    def test_mc_backend_numpy_is_the_batched_engine(self):
+        het = make_het()
+        cfg = ExchangeConfig(known_heterogeneity=True)
+        a = get_scheme("work_exchange").mc(het, 5_000, 32, RNG(1),
+                                           keep_trials=True,
+                                           backend="numpy")
+        b = work_exchange_mc_batched(het, 5_000, cfg, 32, RNG(1),
+                                     keep_trials=True)
+        np.testing.assert_array_equal(a.t_comp_trials, b.t_comp_trials)
+        np.testing.assert_array_equal(a.n_comm_trials, b.n_comm_trials)
+
+    def test_single_spec_grid_is_bitwise_mc(self):
+        het = make_het(seed=9)
+        for known in (True, False):
+            scheme = get_scheme("work_exchange" if known
+                                else "work_exchange_unknown")
+            rep = scheme.mc(het, 4_000, 24, RNG(2), keep_trials=True,
+                            backend="numpy")
+            [grid] = scheme.mc_grid([het], 4_000, 24, RNG(2),
+                                    keep_trials=True, backend="numpy")
+            np.testing.assert_array_equal(rep.t_comp_trials,
+                                          grid.t_comp_trials)
+            np.testing.assert_array_equal(rep.iterations_trials,
+                                          grid.iterations_trials)
+            np.testing.assert_array_equal(rep.n_comm_trials,
+                                          grid.n_comm_trials)
+
+    def test_grid_engine_conserves_work_per_row(self):
+        lam = np.stack([make_het(seed=s).lambdas for s in (1, 2, 3)])
+        cfg = ExchangeConfig(known_heterogeneity=False)
+        t, it, cm = work_exchange_grid_numpy(lam, 3_000, cfg, 8, RNG(3))
+        assert t.shape == it.shape == cm.shape == (24,)
+        assert (t > 0).all() and (it >= 1).all() and (cm >= 0).all()
+
+    def test_bad_lam_shape_raises(self):
+        with pytest.raises(ValueError, match="G, K"):
+            work_exchange_grid_numpy(np.ones(5), 100,
+                                     ExchangeConfig(), 2, RNG(0))
+
+
+# ---------------------------------------------------------------------------
+# jax backend: statistical equivalence with the exact engine
+# ---------------------------------------------------------------------------
+
+def _stat_close(rep_np, rep_jax, trials):
+    """Mean agreement within MC tolerance: 6 combined standard errors with
+    a small relative floor for the fluid relaxation's float32 pipeline."""
+    se = np.hypot(rep_np.t_comp_std, rep_jax.t_comp_std) / np.sqrt(trials)
+    tol = max(6.0 * se, 1e-3 * rep_np.t_comp)
+    assert abs(rep_np.t_comp - rep_jax.t_comp) < tol, \
+        (rep_np.t_comp, rep_jax.t_comp, tol)
+
+
+class TestJaxEquivalence:
+    @pytest.mark.parametrize("name", ["work_exchange",
+                                      "work_exchange_unknown"])
+    def test_mean_time_matches(self, name):
+        het = make_het(seed=11)
+        scheme = get_scheme(name)
+        rn = scheme.mc(het, N, TRIALS, RNG(5), backend="numpy")
+        rj = scheme.mc(het, N, TRIALS, RNG(5), backend="jax")
+        assert rj.extra["backend"] == "jax"
+        _stat_close(rn, rj, TRIALS)
+        # both sit just above the work-conservation lower bound
+        oracle = N / het.lambda_sum
+        assert oracle <= rj.t_comp < 1.05 * oracle
+
+    @pytest.mark.parametrize("name", ["work_exchange",
+                                      "work_exchange_unknown"])
+    def test_iterations_and_comm_match(self, name):
+        het = make_het(seed=12)
+        scheme = get_scheme(name)
+        rn = scheme.mc(het, N, TRIALS, RNG(6), backend="numpy")
+        rj = scheme.mc(het, N, TRIALS, RNG(6), backend="jax")
+        # the fluid relaxation may end the exchange loop a couple of
+        # rounds away from the integer engine (sub-half-unit shares are
+        # carried, not rounded up)
+        assert abs(rn.iterations - rj.iterations) <= max(
+            4.0, 0.2 * rn.iterations)
+        # communication: identical at the fraction-of-N scale
+        assert abs(rn.n_comm - rj.n_comm) / N < 0.01
+
+    def test_keep_trials_shapes(self):
+        rep = get_scheme("work_exchange").mc(make_het(), N, TRIALS, RNG(7),
+                                             keep_trials=True, backend="jax")
+        for arr in (rep.t_comp_trials, rep.iterations_trials,
+                    rep.n_comm_trials):
+            assert arr is not None and arr.shape == (TRIALS,)
+        assert rep.t_comp == pytest.approx(rep.t_comp_trials.mean())
+
+    def test_waterfill_mode_not_supported(self):
+        scheme = get_scheme("work_exchange_unknown", capped_mode="waterfill")
+        with pytest.raises(ValueError, match="waterfill"):
+            scheme.mc(make_het(), 2_000, 4, RNG(8), backend="jax")
+
+    def test_loop_engine_ignores_backend(self):
+        # engine="loop" is the scalar validation reference: it stays numpy
+        rep = get_scheme("work_exchange", engine="loop").mc(
+            make_het(), 2_000, 3, RNG(9), backend="jax")
+        assert rep.trials == 3 and rep.t_comp > 0
+
+
+# ---------------------------------------------------------------------------
+# mc_grid semantics
+# ---------------------------------------------------------------------------
+
+class TestMcGrid:
+    def test_default_loop_equals_manual_loop(self):
+        # base-class mc_grid draws from the shared rng in spec order
+        specs = [make_het(seed=s) for s in (1, 2)]
+        scheme = get_scheme("oracle")
+        grid = scheme.mc_grid(specs, 10_000, 16, RNG(10))
+        rng = RNG(10)
+        manual = [scheme.mc(h, 10_000, 16, rng) for h in specs]
+        for g, m in zip(grid, manual):
+            assert g.t_comp == m.t_comp and g.t_comp_std == m.t_comp_std
+
+    @pytest.mark.parametrize("backend", ["numpy", "jax"])
+    def test_grid_matches_looped_mc_statistically(self, backend):
+        specs = [make_het(seed=s, mu=10.0 * (s + 1),
+                          sigma2=(10.0 * (s + 1)) ** 2 / 6) for s in (0, 1)]
+        trials = TRIALS // len(specs)       # same B bucket as the rest
+        scheme = get_scheme("work_exchange_unknown")
+        grid = scheme.mc_grid(specs, N, trials, RNG(11), backend=backend)
+        for het, g in zip(specs, grid):
+            m = scheme.mc(het, N, trials, RNG(12), backend="numpy")
+            se = np.hypot(g.t_comp_std, m.t_comp_std) / np.sqrt(trials)
+            assert abs(g.t_comp - m.t_comp) < max(6 * se, 2e-3 * m.t_comp)
+        # reports align with the spec axis: faster cluster finishes sooner
+        assert grid[1].t_comp < grid[0].t_comp
+
+    def test_mixed_k_grid_falls_back_to_loop(self):
+        specs = [make_het(K=5, seed=1), make_het(K=8, seed=2)]
+        scheme = get_scheme("work_exchange")
+        grid = scheme.mc_grid(specs, 3_000, 6, RNG(13), backend="numpy")
+        rng = RNG(13)
+        manual = [scheme.mc(h, 3_000, 6, rng, backend="numpy")
+                  for h in specs]
+        for g, m in zip(grid, manual):
+            assert g.t_comp == m.t_comp
+
+    def test_grid_report_metadata(self):
+        specs = [make_het(seed=s) for s in (4, 5)]
+        grid = get_scheme("work_exchange").mc_grid(
+            specs, 5_000, 8, RNG(14), keep_trials=True, backend="numpy")
+        assert len(grid) == 2
+        for rep in grid:
+            assert rep.scheme == "work_exchange"
+            assert rep.trials == 8
+            assert rep.extra["backend"] == "numpy"
+            assert rep.t_comp_trials.shape == (8,)
+
+    @pytest.mark.parametrize("name", ["fixed", "uniform", "het_mds"])
+    def test_static_scheme_grid_matches_looped_mc(self, name):
+        # the one-draw batched grid is the same distribution as looped mc
+        specs = [make_het(seed=s) for s in (6, 7)]
+        trials = 400
+        scheme = get_scheme(name)
+        grid = scheme.mc_grid(specs, 20_000, trials, RNG(16))
+        for het, g in zip(specs, grid):
+            m = scheme.mc(het, 20_000, trials, RNG(17))
+            se = np.hypot(g.t_comp_std, m.t_comp_std) / np.sqrt(trials)
+            assert abs(g.t_comp - m.t_comp) < 6 * se
+            assert g.n_comm == m.n_comm and g.iterations == 1.0
+
+    def test_empty_grid(self):
+        assert get_scheme("work_exchange").mc_grid([], 1_000, 4,
+                                                   RNG(15)) == []
