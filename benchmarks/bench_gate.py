@@ -35,7 +35,10 @@ import statistics
 import sys
 from pathlib import Path
 
-WALL_KEYS_GRID = ("pr1_numpy_loop_s", "numpy_grid_s", "jax_grid_s")
+WALL_KEYS_GRID = ("pr1_numpy_loop_s", "numpy_grid_s", "jax_grid_s",
+                  "pallas_grid_s")
+WALL_KEYS_MDS = ("pr2_loop_s", "numpy_grid_s", "jax_grid_s",
+                 "pallas_grid_s")
 
 
 def load(path: str) -> dict:
@@ -54,6 +57,10 @@ def collect_walls(report: dict) -> dict:
     for key in WALL_KEYS_GRID:
         if key in grid:
             walls[f"fig5_grid.{key}"] = float(grid[key])
+    mds = report.get("mds_grid", {})
+    for key in WALL_KEYS_MDS:
+        if key in mds:
+            walls[f"mds_grid.{key}"] = float(mds[key])
     return walls
 
 

@@ -3,10 +3,11 @@
 Emits ``name,value,derived`` CSV rows and validates the paper's claims
 against this reproduction.  Also writes ``results/BENCH_schemes.json``:
 per-scheme mean T_comp through the registry, wall-clock of the
-work-exchange MC engine (per-trial loop vs vectorized), and the fig5
+work-exchange MC engine (per-trial loop vs vectorized), the fig5
 scenario-grid benchmark (PR-1 per-point ``mc()`` loop vs one-dispatch
-``mc_grid`` on the numpy and jax sampler backends), so the perf
-trajectory is tracked across PRs (see ``benchmarks.bench_gate``).
+``mc_grid`` on the numpy / jax / pallas sampler backends), and the
+``mds_grid`` benchmark (batched MDS L-sweep vs the PR-2 per-L loop), so
+the perf trajectory is tracked across PRs (see ``benchmarks.bench_gate``).
 
 Set REPRO_BENCH_QUICK=1 for a fast smoke pass.  The sampler backend for
 the figure sweeps follows REPRO_SAMPLER_BACKEND (default numpy).
@@ -75,21 +76,23 @@ def run_fig7():
 
 def _bench_fig5_grid(n: int, trials: int = 1000, reps: int = 5):
     """The tentpole measurement: fig5's (mu, sigma^2) scenario grid at
-    trials=1000, PR-1 per-point ``mc()`` loop vs one-dispatch ``mc_grid``.
+    trials=1000, PR-1 per-point ``mc()`` loop vs one-dispatch ``mc_grid``
+    on every registered sampler backend (numpy / jax / pallas).
 
     The PR-1 baseline reproduces that code path faithfully, including its
     full-budget MDS L-sweep (PR 1 swept every candidate L at trials/2;
     the sweep is now bounded by ``opt_trials``).  Wall-clocks are
-    min-over-reps (the standard noise-robust estimator); the first jax
-    call is recorded separately because it includes jit compilation,
-    which is paid once per batch-shape bucket and amortized across every
-    later panel in the process.
+    min-over-reps (the standard noise-robust estimator); the first
+    jax/pallas calls are recorded separately because they include jit
+    compilation, which is paid once per batch-shape bucket and amortized
+    across every later panel in the process.  On CPU runners the pallas
+    backend times its bit-identical jnp reference path (the kernel needs
+    a TPU to compile); it is recorded for trajectory, not as a CPU win.
     """
     if QUICK:               # smoke pass: keep the shape, shrink the budget
         trials, reps = 200, 1
     import numpy as np
 
-    from repro.core.samplers import get_backend
     from repro.core.schemes import get_scheme
     from . import fig5
     from .common import FIG_SCHEMES
@@ -116,20 +119,25 @@ def _bench_fig5_grid(n: int, trials: int = 1000, reps: int = 5):
     t0 = time.perf_counter()
     grid("jax")                                   # compiles the engine
     jax_first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    grid("pallas")                                # compiles the we_rounds path
+    pallas_first = time.perf_counter() - t0
     # interleave the candidates so every path samples the same machine
     # phases (wall-clock on shared/bursty hosts drifts minute to minute),
     # then take the per-path min
-    walls = {"loop": [], "numpy": [], "jax": []}
+    walls = {"loop": [], "numpy": [], "jax": [], "pallas": []}
     for _ in range(reps):
         for key, fn, args in (("loop", pr1_loop, ()),
                               ("numpy", grid, ("numpy",)),
-                              ("jax", grid, ("jax",))):
+                              ("jax", grid, ("jax",)),
+                              ("pallas", grid, ("pallas",))):
             t0 = time.perf_counter()
             fn(*args)
             walls[key].append(time.perf_counter() - t0)
     loop_s = min(walls["loop"])
     numpy_grid_s = min(walls["numpy"])
     jax_s = min(walls["jax"])
+    pallas_s = min(walls["pallas"])
     return {
         "N": n, "trials": trials, "grid_points": len(specs),
         "K": int(specs[0].K), "wall_reps": reps,
@@ -137,12 +145,87 @@ def _bench_fig5_grid(n: int, trials: int = 1000, reps: int = 5):
         "numpy_grid_s": round(numpy_grid_s, 4),
         "jax_grid_s": round(jax_s, 4),
         "jax_grid_first_call_s": round(jax_first, 4),
+        "pallas_grid_s": round(pallas_s, 4),
+        "pallas_grid_first_call_s": round(pallas_first, 4),
         "speedup_jax_vs_pr1_loop": round(loop_s / jax_s, 2),
         "speedup_jax_vs_pr1_loop_incl_compile": round(loop_s / jax_first, 2),
         "speedup_numpy_grid_vs_pr1_loop": round(loop_s / numpy_grid_s, 2),
+        "speedup_pallas_vs_pr1_loop": round(loop_s / pallas_s, 2),
         "note": "full fig5 scheme panel over the (mu, sigma^2) grid; "
-                "jax_grid_first_call_s includes one-off jit compilation "
-                "(cached per batch-shape bucket within a process)",
+                "*_first_call_s includes one-off jit compilation (cached "
+                "per batch-shape bucket within a process); pallas times "
+                "its jnp reference path on hosts without TPU lowering",
+    }
+
+
+def _bench_mds_grid(n: int, trials: int = 1000, opt_trials: int = 500,
+                    reps: int = 5):
+    """The batched MDS L-sweep vs the PR-2 per-L Python loop at figure
+    scale: every candidate L of every grid spec becomes extra rows of ONE
+    ``gamma_rows`` dispatch (``MDSScheme.mc_grid``), instead of the
+    K-iteration ``mds_sweep`` loop per spec.
+
+    The PR-2 baseline reproduces the old ``mc`` path faithfully: the
+    bounded per-L sweep loop, then the full-budget top-up draw for the
+    winning L.  Identical draw budgets on both sides; the numpy grid is
+    bit-identical to the loop (same stream), the jax/pallas grids swap
+    the exact Gamma sampler for their batched transform samplers.
+    """
+    if QUICK:
+        trials, opt_trials, reps = 200, 100, 1
+    import numpy as np
+
+    from repro.core.schemes import get_scheme, mds_sweep
+    from . import fig5
+
+    specs = fig5.grid_specs(quick=QUICK)
+
+    def pr2_loop():
+        rng = np.random.default_rng(77)
+        for het in specs:
+            sweep_trials = min(trials, opt_trials)
+            L, _, _ = mds_sweep(het, n, sweep_trials, rng)
+            if sweep_trials < trials:      # winner top-up, as PR-2 mc did
+                m = int(np.ceil(n / L))
+                t = rng.gamma(shape=m, scale=1.0 / het.lambdas,
+                              size=(trials, het.K))
+                t.sort(axis=1)
+
+    def grid(backend):
+        get_scheme("mds", opt_trials=opt_trials).mc_grid(
+            specs, n, trials, np.random.default_rng(77), backend=backend)
+
+    grid("jax")                          # pay jit compilation up front
+    grid("pallas")
+    walls = {"loop": [], "numpy": [], "jax": [], "pallas": []}
+    for _ in range(reps):
+        for key, fn, args in (("loop", pr2_loop, ()),
+                              ("numpy", grid, ("numpy",)),
+                              ("jax", grid, ("jax",)),
+                              ("pallas", grid, ("pallas",))):
+            t0 = time.perf_counter()
+            fn(*args)
+            walls[key].append(time.perf_counter() - t0)
+    loop_s = min(walls["loop"])
+    numpy_s = min(walls["numpy"])
+    jax_s = min(walls["jax"])
+    pallas_s = min(walls["pallas"])
+    return {
+        "N": n, "trials": trials, "opt_trials": opt_trials,
+        "grid_points": len(specs), "K": int(specs[0].K),
+        "wall_reps": reps,
+        "pr2_loop_s": round(loop_s, 4),
+        "numpy_grid_s": round(numpy_s, 4),
+        "jax_grid_s": round(jax_s, 4),
+        "pallas_grid_s": round(pallas_s, 4),
+        "speedup_numpy_grid_vs_pr2_loop": round(loop_s / numpy_s, 2),
+        "speedup_jax_grid_vs_pr2_loop": round(loop_s / jax_s, 2),
+        "speedup_pallas_grid_vs_pr2_loop": round(loop_s / pallas_s, 2),
+        "speedup_best_vs_pr2_loop": round(
+            loop_s / min(numpy_s, jax_s, pallas_s), 2),
+        "note": "all candidate L values of all specs in one gamma_rows "
+                "dispatch vs the PR-2 per-spec per-L sweep loop, equal "
+                "draw budgets; numpy grid is bit-identical to the loop",
     }
 
 
@@ -158,7 +241,8 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     het = make_het(50.0, 50.0 ** 2 / 6, seed=42)
     report = {"config": {"K": K_PAPER, "N": n, "mu": 50.0,
                          "sigma2": "mu^2/6", "trials": trials},
-              "schemes": {}, "mc_engine": {}, "fig5_grid": {}}
+              "schemes": {}, "mc_engine": {}, "fig5_grid": {},
+              "mds_grid": {}}
 
     # per-trial-loop schemes walk unit ids in Python: bound their budget
     # (the JSON records the actual N/trials used -- no silent caps)
@@ -206,14 +290,18 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     }
 
     report["fig5_grid"] = _bench_fig5_grid(n)
+    report["mds_grid"] = _bench_mds_grid(n)
 
     out_path.parent.mkdir(parents=True, exist_ok=True)
     out_path.write_text(json.dumps(report, indent=2))
     g = report["fig5_grid"]
+    m = report["mds_grid"]
     print(f"# wrote {out_path} (engine speedup "
           f"{report['mc_engine']['speedup']}x; fig5 grid: jax "
           f"{g['speedup_jax_vs_pr1_loop']}x vs PR1 loop, "
-          f"{g['speedup_jax_vs_pr1_loop_incl_compile']}x incl compile)",
+          f"{g['speedup_jax_vs_pr1_loop_incl_compile']}x incl compile, "
+          f"pallas {g['speedup_pallas_vs_pr1_loop']}x; mds grid: best "
+          f"{m['speedup_best_vs_pr2_loop']}x vs PR2 loop)",
           file=sys.stderr)
     return []
 

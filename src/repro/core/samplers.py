@@ -27,18 +27,34 @@ rounds.  Two backends implement it behind one grid-shaped contract:
     rejection loop is ~100x slower than NumPy on CPU, so the transform
     sampler is what makes the fused engine a win rather than a loss.
 
+``pallas``
+    The same fluid relaxation as ``jax``, but the whole round pipeline --
+    counter-based Threefry-2x32 bit generation keyed per ``(trial,
+    worker, round)``, the MT Gamma transform, the per-trial argmin, the
+    normal-limit Binomial -- fused into ONE tiled Pallas kernel
+    (``repro.kernels.we_rounds``): each program owns a ``(block_b, K)``
+    tile of trials and runs the exchange-round loop to completion in
+    VMEM.  On hosts without Pallas lowering (CPU CI) it executes a
+    bit-identical jitted ``jnp`` reference (or the kernel under the
+    Pallas interpreter -- ``REPRO_WE_ROUNDS_MODE=interpret``), so the
+    backend is always selectable; the kernel wins on TPU where the jax
+    backend is bit-generation-bound.
+
 Backends are registered in ``SAMPLER_BACKENDS`` and selected per call
 (``mc(..., backend="jax")``) or globally (``REPRO_SAMPLER_BACKEND=jax``);
 the default is ``numpy``.  The grid contract returns flat per-run arrays
 ``(t_comp, iterations, n_comm)`` of length ``G * trials`` in
 grid-major order; ``repro.core.schemes`` reshapes them into per-spec
-``MCReport`` rows.
+``MCReport`` rows.  Backends also expose ``gamma_rows`` -- batched
+``Gamma(shape) * scale`` over an ``(R, K)`` matrix in one call -- which
+is what the batched MDS L-sweep draws through (``numpy`` is bit-identical
+to the per-L loop; ``jax``/``pallas`` use their transform samplers).
 """
 from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Callable, Dict, List, Literal, Tuple
+from typing import Callable, Dict, List, Literal, Optional, Tuple
 
 import numpy as np
 
@@ -53,6 +69,9 @@ DEFAULT_BACKEND = "numpy"
 GridArrays = Tuple[np.ndarray, np.ndarray, np.ndarray]
 WEGridFn = Callable[[np.ndarray, int, ExchangeConfig, int,
                      np.random.Generator, str], GridArrays]
+# (shape_rows, scale_rows, rng) -> (R, K) Gamma(shape) * scale draws
+GammaRowsFn = Callable[[np.ndarray, np.ndarray, np.random.Generator],
+                       np.ndarray]
 
 
 # ---------------------------------------------------------------------------
@@ -61,11 +80,27 @@ WEGridFn = Callable[[np.ndarray, int, ExchangeConfig, int,
 
 @dataclasses.dataclass(frozen=True)
 class SamplerBackend:
-    """One RNG/compute backend behind the work-exchange MC pipeline."""
+    """One RNG/compute backend behind the work-exchange MC pipeline.
+
+    ``gamma_rows`` (optional) is the batched order-statistic primitive
+    the MDS L-sweep draws through; backends that leave it ``None`` fall
+    back to the exact numpy draw (``get_gamma_rows``), so any future
+    backend gets the full scheme surface for free.
+
+    ``coupled_mds_sweep`` opts the backend into the common-random-numbers
+    L-sweep: candidate Erlangs built as cumulative Gamma *increments*
+    over one shared trial axis, which stabilizes exactly the mean
+    differences the argmin needs, so half the sweep trials match the
+    independent sweep's selection accuracy (the winner's reported samples
+    always come from an independent exact-marginal top-up draw).  Exact
+    backends leave it False to stay bit-identical to the per-L loop.
+    """
 
     name: str
     work_exchange_grid: WEGridFn
     description: str = ""
+    gamma_rows: Optional[GammaRowsFn] = None
+    coupled_mds_sweep: bool = False
 
     def available(self) -> bool:
         return _BACKEND_AVAILABLE.get(self.name, lambda: True)()
@@ -105,6 +140,25 @@ def resolve_backend(backend: str | None = None) -> str:
             f"(is its runtime installed?); set {ENV_VAR} or pass "
             f"backend= one of {[n for n in list_backends() if get_backend(n).available()]}")
     return name
+
+
+def validate_backend(backend: str | None = None) -> str:
+    """Fail fast on unknown backend names without requiring availability.
+
+    Every ``Scheme.mc``/``mc_grid`` entry point calls this, including
+    schemes that never draw through a backend, so a typo in ``backend=``
+    or ``REPRO_SAMPLER_BACKEND`` raises a ``KeyError`` listing the
+    registered backends instead of being silently ignored (or surfacing
+    later as an opaque attribute error)."""
+    name = backend or os.environ.get(ENV_VAR) or DEFAULT_BACKEND
+    get_backend(name)          # KeyError with the registered list
+    return name
+
+
+def get_gamma_rows(name: str) -> GammaRowsFn:
+    """The backend's batched Gamma-rows primitive (numpy fallback)."""
+    fn = get_backend(name).gamma_rows
+    return fn if fn is not None else gamma_rows_numpy
 
 
 # ---------------------------------------------------------------------------
@@ -242,6 +296,27 @@ def work_exchange_grid_numpy(lam: np.ndarray, N: int, cfg: ExchangeConfig,
     return t_comp, iters.astype(np.float64), n_comm
 
 
+def gamma_rows_numpy(shape_rows: np.ndarray, scale_rows: np.ndarray,
+                     rng: np.random.Generator) -> np.ndarray:
+    """Exact ``Generator.gamma`` over an ``(R, K)`` matrix in one call.
+
+    ``shape_rows`` and ``scale_rows`` broadcast against each other (e.g.
+    an ``(R, 1)`` shape column against ``(R, K)`` scales).  With rows
+    laid out L-major this consumes randomness in exactly the order of
+    the PR-2 per-L sweep loop (``Generator.gamma`` fills the broadcast
+    output element by element in C order whether the shape argument is
+    scalar or array), which is what makes the batched MDS sweep
+    bit-identical to the loop.
+    """
+    shape_rows = np.asarray(shape_rows, dtype=np.float64)
+    out_shape = np.broadcast_shapes(shape_rows.shape,
+                                    np.asarray(scale_rows).shape)
+    if len(out_shape) != 2:
+        raise ValueError(f"shape/scale rows must broadcast to (R, K); "
+                         f"got {out_shape}")
+    return rng.gamma(shape=shape_rows, scale=scale_rows)
+
+
 # ---------------------------------------------------------------------------
 # jax backend: one jitted fluid-relaxation pipeline
 # ---------------------------------------------------------------------------
@@ -254,11 +329,18 @@ def _jax_available() -> bool:
         return False
 
 
+_JAX_TX = None               # transform-sampler namespace, built once
 _JAX_ENGINE = None           # built once; jax.jit caches per (B, K) shape
 
 
-def _build_jax_engine():
-    """Construct the jitted grid engine (imports jax lazily)."""
+def _jax_transforms():
+    """The fluid-relaxation transform samplers, shared by the fused
+    engine and the batched MDS ``gamma_rows`` path (lazy jax import)."""
+    global _JAX_TX
+    if _JAX_TX is not None:
+        return _JAX_TX
+    import types
+
     import jax
     import jax.numpy as jnp
 
@@ -303,6 +385,25 @@ def _build_jax_engine():
         std = jnp.sqrt(jnp.maximum(n * p * (1.0 - p), 0.0))
         z = jax.random.normal(key, n.shape)
         return jnp.clip(mean + z * std, 0.0, n)
+
+    _JAX_TX = types.SimpleNamespace(
+        gamma_mt_large=gamma_mt_large, gamma_mt_boost2=gamma_mt_boost2,
+        gamma_mt=gamma_mt, binomial_normal=binomial_normal,
+        gamma_mt_large_jit=jax.jit(gamma_mt_large),
+        gamma_mt_jit=jax.jit(gamma_mt))
+    return _JAX_TX
+
+
+def _build_jax_engine():
+    """Construct the jitted grid engine (imports jax lazily)."""
+    import jax
+    import jax.numpy as jnp
+
+    tx = _jax_transforms()
+    gamma_mt_large = tx.gamma_mt_large
+    gamma_mt_boost2 = tx.gamma_mt_boost2
+    gamma_mt = tx.gamma_mt
+    binomial_normal = tx.binomial_normal
 
     def engine(key, lam, n0, threshold, cap, known, max_iter):
         # ``known`` is STATIC: the known-heterogeneity engine compiles
@@ -442,14 +543,10 @@ def work_exchange_grid_jax(lam: np.ndarray, N: int, cfg: ExchangeConfig,
     cap = (np.inf if cfg.storage_cap_frac is None or known
            else float(np.ceil(cfg.storage_cap_frac * N / K)))
     lam_rows = np.repeat(lam, int(trials), axis=0)       # (B, K), grid-major
-    # pad the batch to a power-of-two bucket: jit caches per shape, so
-    # fig5/fig6/fig7-sized grids land in a handful of compilations per
-    # process instead of one per panel shape
-    B = lam_rows.shape[0]
-    pad = max(64, 1 << (B - 1).bit_length()) - B
-    if pad:
-        lam_rows = np.concatenate([lam_rows, np.repeat(lam_rows[:1], pad,
-                                                       axis=0)])
+    # pad the batch to a shape bucket (shared _pad_rows policy): jit
+    # caches per shape, so fig5/fig6/fig7-sized grids land in a handful
+    # of compilations per process instead of one per panel shape
+    lam_rows, B = _pad_rows(lam_rows)
     # rbg keys: counter-based bit generation is ~3x faster than threefry on
     # CPU and ample for Monte Carlo
     key = jax.random.key(int(rng.integers(2 ** 63 - 1)), impl="rbg")
@@ -460,6 +557,146 @@ def work_exchange_grid_jax(lam: np.ndarray, N: int, cfg: ExchangeConfig,
             np.asarray(cm, dtype=np.float64)[:B])
 
 
+def _pad_rows(rows: np.ndarray, bucket: int = 64) -> Tuple[np.ndarray, int]:
+    """Pad the leading axis to a shape bucket with copies of row 0, so
+    jit caches land in a handful of compilations: power-of-two buckets
+    (>= ``bucket``) up to 8192 rows, multiples of 8192 above (pow2 would
+    waste up to 2x the draw work on panel-sized grids)."""
+    R = rows.shape[0]
+    if R > 8192:
+        target = -(-R // 8192) * 8192
+    else:
+        target = max(bucket, 1 << (R - 1).bit_length())
+    if target - R:
+        rows = np.concatenate([rows, np.repeat(rows[:1], target - R,
+                                               axis=0)])
+    return rows, R
+
+
+def _pad_rows_to(rows: np.ndarray, R: int) -> np.ndarray:
+    """Bucket-pad 2-D arrays whose leading axis carries the ``R``
+    broadcast rows; leave size-1 leading axes and 1-D ``(K,)`` vectors
+    (both pure-broadcast operands) untouched."""
+    if rows.ndim == 2 and rows.shape[0] == R and R > 1:
+        return _pad_rows(rows)[0]
+    return rows
+
+
+def _gamma_rows_prep(shape_rows: np.ndarray, scale_rows: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray, int, bool]:
+    """Shared gamma_rows prologue: float32 conversion, broadcast-shape
+    validation, bucket padding of the row-carrying operands, and the
+    static sub-3-shape (boost) flag.  Returns
+    ``(padded_shape, padded_scale, R, boost)``."""
+    shape_rows = np.asarray(shape_rows, dtype=np.float32)
+    scale_rows = np.asarray(scale_rows, dtype=np.float32)
+    out_shape = np.broadcast_shapes(shape_rows.shape, scale_rows.shape)
+    if len(out_shape) != 2:
+        raise ValueError(f"shape/scale rows must broadcast to (R, K); "
+                         f"got {out_shape}")
+    R = out_shape[0]
+    return (_pad_rows_to(shape_rows, R),
+            _pad_rows_to(np.ascontiguousarray(scale_rows), R),
+            R, bool((shape_rows < 3.0).any()))
+
+
+_JAX_GAMMA_ROWS = None
+
+
+def gamma_rows_jax(shape_rows: np.ndarray, scale_rows: np.ndarray,
+                   rng: np.random.Generator) -> np.ndarray:
+    """Batched MT-transform Gammas in one jitted dispatch (mean-exact;
+    the boost chain compiles in only when some shape is below 3).
+
+    ``shape_rows``/``scale_rows`` broadcast against each other -- compact
+    ``(R, 1)`` shape columns stay compact until the kernel, where the
+    normal draw materializes the full broadcast shape.  The numpy ``rng``
+    only seeds the key stream; output is float32 (the fluid pipeline's
+    dtype), which callers may sort/average as-is.
+    """
+    global _JAX_GAMMA_ROWS
+    import jax
+
+    padded_shape, padded_scale, R, boost = _gamma_rows_prep(shape_rows,
+                                                            scale_rows)
+    if _JAX_GAMMA_ROWS is None:
+        import functools
+
+        import jax.numpy as jnp
+        tx = _jax_transforms()
+
+        def kernel(key, alpha, scale, boost):
+            out = jnp.broadcast_shapes(alpha.shape, scale.shape)
+            alpha = jnp.broadcast_to(alpha, out)
+            fn = tx.gamma_mt if boost else tx.gamma_mt_large
+            return fn(key, alpha, scale)
+
+        _JAX_GAMMA_ROWS = jax.jit(kernel, static_argnames=("boost",))
+    key = jax.random.key(int(rng.integers(2 ** 63 - 1)), impl="rbg")
+    out = np.asarray(_JAX_GAMMA_ROWS(key, padded_shape, padded_scale,
+                                     boost))[:R]
+    return np.array(out)      # own the memory: callers sort in place
+
+
+# ---------------------------------------------------------------------------
+# pallas backend: the fused we_rounds kernel (repro.kernels.we_rounds)
+# ---------------------------------------------------------------------------
+
+def work_exchange_grid_pallas(lam: np.ndarray, N: int, cfg: ExchangeConfig,
+                              trials: int, rng: np.random.Generator,
+                              capped_mode: Literal["carry", "waterfill"]
+                              = "carry") -> GridArrays:
+    """One fused Pallas pass over the ``(G * trials, K)`` grid.
+
+    Same fluid relaxation as the ``jax`` backend but with counter-based
+    Threefry bits generated *inside* the kernel, so the whole round
+    pipeline -- bit generation included -- is one tiled device pass.  On
+    CPU hosts the bit-identical jnp reference (or the interpreted kernel,
+    ``REPRO_WE_ROUNDS_MODE=interpret``) runs instead; see
+    ``repro.kernels.we_rounds.ops``.  The numpy ``rng`` only seeds the
+    Threefry key (one draw), keeping call sites generator-driven.
+    """
+    if capped_mode != "carry":
+        raise ValueError(
+            "the pallas sampler backend implements the paper-faithful "
+            "'carry' storage mode only; use backend='numpy' for "
+            "'waterfill'")
+    from repro.kernels.we_rounds import we_rounds_grid
+
+    lam = np.asarray(lam, dtype=np.float32)
+    if lam.ndim != 2:
+        raise ValueError(f"lam must be (G, K); got shape {lam.shape}")
+    K = lam.shape[1]
+    known = cfg.known_heterogeneity
+    threshold = cfg.threshold_frac * N / K
+    cap = (np.inf if cfg.storage_cap_frac is None or known
+           else float(np.ceil(cfg.storage_cap_frac * N / K)))
+    lam_rows = np.repeat(lam, int(trials), axis=0)       # (B, K), grid-major
+    # power-of-two bucket >= 128 (the kernel's tile height): panel-sized
+    # grids share a handful of compilations per process, and the bucket
+    # is always a whole number of tiles
+    lam_rows, B = _pad_rows(lam_rows, bucket=128)
+    seed = rng.integers(0, 2 ** 32, size=2, dtype=np.uint32)
+    t, it, cm = we_rounds_grid(lam_rows, seed, n0=float(N),
+                               threshold=float(threshold), cap=cap,
+                               known=bool(known),
+                               max_iter=int(cfg.max_iterations))
+    return t[:B], it[:B], cm[:B]
+
+
+def gamma_rows_pallas(shape_rows: np.ndarray, scale_rows: np.ndarray,
+                      rng: np.random.Generator) -> np.ndarray:
+    """Counter-based Threefry + MT-transform Gamma rows (one dispatch;
+    ``shape_rows``/``scale_rows`` broadcast like the other backends)."""
+    from repro.kernels.we_rounds import gamma_rows_grid
+
+    padded_shape, padded_scale, R, _ = _gamma_rows_prep(shape_rows,
+                                                        scale_rows)
+    seed = rng.integers(0, 2 ** 32, size=2, dtype=np.uint32)
+    out = gamma_rows_grid(padded_shape, padded_scale, seed)[:R]
+    return np.array(out)      # own the memory: callers sort in place
+
+
 # ---------------------------------------------------------------------------
 # registration
 # ---------------------------------------------------------------------------
@@ -468,19 +705,36 @@ register_backend(SamplerBackend(
     name="numpy",
     work_exchange_grid=work_exchange_grid_numpy,
     description="exact integer-unit engine (Generator.gamma/binomial); "
-                "bit-identical to the scalar reference at trials=1"))
+                "bit-identical to the scalar reference at trials=1",
+    gamma_rows=gamma_rows_numpy))
 
 register_backend(SamplerBackend(
     name="jax",
     work_exchange_grid=work_exchange_grid_jax,
     description="one jitted fluid-relaxation pipeline (mean-exact MT gamma "
                 "+ normal-limit binomial, float32); statistically "
-                "equivalent, not bit-identical"),
+                "equivalent, not bit-identical",
+    gamma_rows=gamma_rows_jax,
+    coupled_mds_sweep=True),
+    available=_jax_available)
+
+register_backend(SamplerBackend(
+    name="pallas",
+    work_exchange_grid=work_exchange_grid_pallas,
+    description="fused we_rounds Pallas kernel (counter-based Threefry "
+                "bits + MT gamma + argmin + normal-limit binomial in one "
+                "tiled pass); compiled on TPU, bit-identical jnp "
+                "reference / interpreted kernel on CPU",
+    gamma_rows=gamma_rows_pallas,
+    coupled_mds_sweep=True),
     available=_jax_available)
 
 
 __all__ = [
     "ENV_VAR", "DEFAULT_BACKEND", "SAMPLER_BACKENDS", "SamplerBackend",
     "register_backend", "get_backend", "list_backends", "resolve_backend",
+    "validate_backend", "get_gamma_rows",
     "work_exchange_grid_numpy", "work_exchange_grid_jax",
+    "work_exchange_grid_pallas", "gamma_rows_numpy", "gamma_rows_jax",
+    "gamma_rows_pallas",
 ]

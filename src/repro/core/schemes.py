@@ -45,7 +45,8 @@ from .assignment import (capped_proportional_assignment,
                          largest_remainder_round, proportional_assignment,
                          uniform_assignment)
 from .exchange import Assignment, MasterScheduler
-from .samplers import get_backend, resolve_backend
+from .samplers import (get_backend, get_gamma_rows, resolve_backend,
+                       validate_backend)
 from .types import ExchangeConfig, HetSpec, RunStats
 
 
@@ -188,8 +189,12 @@ class Scheme:
 
         ``backend`` selects the sampler backend (``repro.core.samplers``)
         for schemes with a fused draw pipeline; schemes without one --
-        this default per-trial loop included -- always draw with numpy.
+        this default per-trial loop included -- always draw with numpy,
+        but still validate the name so a typo'd ``backend=`` or
+        ``REPRO_SAMPLER_BACKEND`` raises a ``KeyError`` listing the
+        registered backends instead of being silently ignored.
         """
+        validate_backend(backend)
         ts = np.empty(trials)
         its = np.empty(trials)
         cs = np.empty(trials)
@@ -385,6 +390,7 @@ class OracleScheme(Scheme):
     def mc(self, het: HetSpec, N: int, trials: int,
            rng: np.random.Generator, keep_trials: bool = False,
            backend: Optional[str] = None) -> MCReport:
+        validate_backend(backend)
         ts = rng.gamma(shape=N, scale=1.0 / het.lambda_sum, size=trials)
         return _report(self.name, ts, np.ones(trials), np.zeros(trials),
                        keep_trials, extra={"exact_mean": N / het.lambda_sum})
@@ -402,6 +408,7 @@ class _StaticScheme(Scheme):
     def mc(self, het: HetSpec, N: int, trials: int,
            rng: np.random.Generator, keep_trials: bool = False,
            backend: Optional[str] = None) -> MCReport:
+        validate_backend(backend)
         assign = self.initial_sizes(het, N)
         busy = assign > 0
         t = rng.gamma(shape=assign[busy], scale=1.0 / het.lambdas[busy],
@@ -414,6 +421,7 @@ class _StaticScheme(Scheme):
                 backend: Optional[str] = None) -> List[MCReport]:
         """One draw for the whole grid: (G * trials, K) Gamma matrix, max
         over busy workers per row.  Same distribution as looped ``mc``."""
+        validate_backend(backend)
         specs = list(het_specs)
         if not specs or len({h.K for h in specs}) != 1:
             return super().mc_grid(specs, N, trials, rng,
@@ -467,7 +475,16 @@ class UniformScheme(_StaticScheme):
 class MDSScheme(Scheme):
     """Section 3: (K, L) MDS-coded run; T = L-th order statistic of
     Erlang(ceil(N/L), lambda_k).  ``L=None`` optimizes L by Monte Carlo
-    (eq. 6) inside ``mc``; ``opt_trials`` bounds that inner sweep."""
+    (eq. 6) inside ``mc``; ``opt_trials`` bounds that inner sweep.
+
+    The L-sweep is batched: all candidate L values become extra grid rows
+    of ONE ``gamma_rows`` call through the selected sampler backend
+    (``mds_sweep_batched``), and ``mc_grid`` batches the whole
+    ``specs x L x trials`` cube the same way -- no per-L Python loop on
+    any backend.  On the numpy backend the batched draw consumes
+    randomness in exactly the per-L loop's order, so the chosen L (and
+    every sample) is bit-identical to the PR-2 sweep.
+    """
 
     redundant = True    # K * ceil(N/L) coded units are shipped for N useful
 
@@ -481,7 +498,10 @@ class MDSScheme(Scheme):
             if not 1 <= self.L <= het.K:
                 raise ValueError(f"L must be in [1, {het.K}]; got {self.L}")
             return self.L
-        L, _ = mds_sweep(het, N, self.opt_trials, rng)[:2]
+        # simulate() is the exact single-trial reference: sweep with the
+        # exact numpy draws regardless of the global backend selection
+        L, _ = mds_sweep_batched(het, N, self.opt_trials, rng,
+                                 backend="numpy")[:2]
         return L
 
     def initial_sizes(self, het: HetSpec, N: int) -> np.ndarray:
@@ -503,39 +523,207 @@ class MDSScheme(Scheme):
     def mc(self, het: HetSpec, N: int, trials: int,
            rng: np.random.Generator, keep_trials: bool = False,
            backend: Optional[str] = None) -> MCReport:
+        name = resolve_backend(backend)
         if self.L is None:
             # the K-candidate sweep only picks L*: bound its per-candidate
             # budget at opt_trials, then spend the full trial budget on the
             # winner alone (identical to the old behaviour whenever
             # trials <= opt_trials)
             sweep_trials = min(trials, self.opt_trials)
-            L, _, ts = mds_sweep(het, N, sweep_trials, rng)
-            if sweep_trials < trials:
-                ts = mds_time_samples(het, N, L, trials, rng)
+            [(L, ts)] = _mds_select_L_grid([het], N, sweep_trials, rng,
+                                           name)
+            if ts is None or sweep_trials < trials:
+                ts = mds_time_samples(het, N, L, trials, rng, backend=name)
         else:
             L = self._resolve_L(het, N, rng)
-            ts = mds_time_samples(het, N, L, trials, rng)
+            ts = mds_time_samples(het, N, L, trials, rng, backend=name)
         m = int(np.ceil(N / L))
         return _report(self.name, ts, np.ones(trials),
                        np.full(trials, float(m * het.K - N)), keep_trials,
-                       extra={"L": L})
+                       extra={"L": L, "backend": name})
+
+    def mc_grid(self, het_specs: Sequence[HetSpec], N: int, trials: int,
+                rng: np.random.Generator, keep_trials: bool = False,
+                backend: Optional[str] = None) -> List[MCReport]:
+        """The whole ``specs x candidate-L x trials`` cube in one
+        ``gamma_rows`` dispatch (plus one winner top-up dispatch),
+        instead of a per-spec per-L loop.
+
+        Requires every spec to share K; mixed-K grids fall back to the
+        per-spec loop.
+        """
+        specs = list(het_specs)
+        if not specs or len({h.K for h in specs}) != 1:
+            return super().mc_grid(specs, N, trials, rng,
+                                   keep_trials=keep_trials, backend=backend)
+        name = resolve_backend(backend)
+        K = specs[0].K
+        T = int(trials)
+        draw = get_gamma_rows(name)
+        if self.L is not None:
+            if not 1 <= self.L <= K:
+                raise ValueError(f"L must be in [1, {K}]; got {self.L}")
+            selection = [(self.L, None)] * len(specs)
+        else:
+            selection = _mds_select_L_grid(specs, N,
+                                           min(T, self.opt_trials), rng,
+                                           name)
+        winners = [L for L, _ in selection]
+        sweep_ts = [ts for _, ts in selection]
+        if any(ts is None for ts in sweep_ts) or min(T, self.opt_trials) < T:
+            sweep_ts = _mds_order_stat_rows(specs, N, winners, T, draw, rng)
+        return [self._grid_report(specs[g], N, winners[g], sweep_ts[g], T,
+                                  keep_trials, name)
+                for g in range(len(specs))]
+
+    def _grid_report(self, het: HetSpec, N: int, L: int, ts: np.ndarray,
+                     trials: int, keep_trials: bool, name: str) -> MCReport:
+        m = int(np.ceil(N / L))
+        return _report(self.name, ts, np.ones(trials),
+                       np.full(trials, float(m * het.K - N)), keep_trials,
+                       extra={"L": L, "backend": name})
+
+
+def _mds_select_L_grid(specs: Sequence[HetSpec], N: int, sweep_trials: int,
+                       rng: np.random.Generator, name: str
+                       ) -> List[Tuple[int, Optional[np.ndarray]]]:
+    """Pick L* per spec: all candidate L of all specs as grid rows of ONE
+    ``gamma_rows`` dispatch.  Returns ``(L*, sweep samples at L*)`` per
+    spec; the samples slot is ``None`` for coupled sweeps (cross-candidate
+    correlated -- callers must top up from an independent draw).
+
+    Exact backends run the *independent* cube: spec-major then L-major
+    rows, bit-identical in stream order to looping ``mds_sweep`` per
+    spec.  Transform backends (``coupled_mds_sweep``) run the
+    *common-random-numbers* cube: per spec, ONE shared trial axis with
+    candidate Erlangs built as cumulative Gamma increments
+    ``T(m_L) = T(m_{L+1}) + Gamma(m_L - m_{L+1})`` (Gamma additivity), so
+    the mean differences the argmin compares are positively correlated
+    and half the trials (``ceil(sweep_trials / 2)``, floor 16) match the
+    independent sweep's selection accuracy at half the draws.
+    """
+    K = specs[0].K
+    G = len(specs)
+    draw = get_gamma_rows(name)
+    cand = list(range(1, K + 1))
+    m = np.array([int(np.ceil(N / L)) for L in cand], dtype=np.float64)
+    inv_lam = np.stack([1.0 / h.lambdas for h in specs])
+
+    if get_backend(name).coupled_mds_sweep:
+        ct = max(16, (int(sweep_trials) + 1) // 2)
+        m_asc = m[::-1]                      # ascending m: L = K, K-1, ... 1
+        diffs = np.empty(K)
+        diffs[0] = m_asc[0]
+        diffs[1:] = np.diff(m_asc)
+        # rows spec-major then increment-major, drawn at unit rate (one
+        # compact shape column, a (1, K) scale row -- no G*K*ct-row scale
+        # matrix); the per-worker 1/lambda lands in the same fused pass
+        # that zeroes tied increments (ceil(N/L) ties draw at shape 1)
+        shape_col = np.tile(np.repeat(np.maximum(diffs, 1.0), ct),
+                            G)[:, None]
+        t = draw(shape_col, np.ones((1, K), dtype=np.float32), rng)
+        t = t.reshape(G, K, ct, K)
+        t *= (diffs > 0)[None, :, None, None] * inv_lam[:, None, None, :]
+        cube = np.cumsum(t, axis=1)
+        cube.sort(axis=3)                    # cube[g, i] = T at m_asc[i]
+        out: List[Tuple[int, Optional[np.ndarray]]] = []
+        for g in range(G):
+            best = (1, np.inf)
+            for L in cand:
+                mean_t = float(cube[g, K - L, :, L - 1].mean())
+                if mean_t < best[1]:
+                    best = (L, mean_t)
+            out.append((best[0], None))
+        return out
+
+    sweep_trials = int(sweep_trials)
+    shape_col = np.tile(np.repeat(m, sweep_trials), G)[:, None]
+    scale_rows = np.repeat(inv_lam, K * sweep_trials, axis=0)
+    t = draw(shape_col, scale_rows, rng)
+    t.sort(axis=1)
+    t = t.reshape(G, K, sweep_trials, K)
+    out = []
+    for g in range(G):
+        best: Tuple[int, float, Optional[np.ndarray]] = (1, np.inf, None)
+        for i, L in enumerate(cand):
+            ts = t[g, i, :, L - 1]
+            mean_t = float(ts.mean())
+            if mean_t < best[1]:
+                best = (L, mean_t, ts)
+        out.append((best[0], best[2]))
+    return out
+
+
+def _mds_order_stat_rows(specs: Sequence[HetSpec], N: int,
+                         Ls: Sequence[int], trials: int, draw,
+                         rng: np.random.Generator) -> List[np.ndarray]:
+    """Per-spec T^MDS(L_g) samples, all specs in one gamma_rows call."""
+    K = specs[0].K
+    shape_col = np.repeat(
+        np.array([float(np.ceil(N / L)) for L in Ls]), trials)[:, None]
+    scale_rows = np.repeat(np.stack([1.0 / h.lambdas for h in specs]),
+                           trials, axis=0)
+    t = draw(shape_col, scale_rows, rng)
+    t.sort(axis=1)
+    t = t.reshape(len(specs), trials, K)
+    return [t[g, :, Ls[g] - 1] for g in range(len(specs))]
 
 
 def mds_time_samples(het: HetSpec, N: int, L: int, trials: int,
-                     rng: np.random.Generator) -> np.ndarray:
-    """Per-trial T^MDS(L): L-th order statistic of the worker Erlangs."""
-    m = int(np.ceil(N / L))
-    t = rng.gamma(shape=m, scale=1.0 / het.lambdas, size=(trials, het.K))
+                     rng: np.random.Generator,
+                     backend: Optional[str] = None) -> np.ndarray:
+    """Per-trial T^MDS(L): L-th order statistic of the worker Erlangs,
+    drawn through the selected sampler backend (numpy = exact, and
+    bit-identical to the pre-backend ``rng.gamma(size=(trials, K))``)."""
+    name = resolve_backend(backend)
+    m = float(np.ceil(N / L))
+    shape_rows = np.broadcast_to(np.float64(m), (trials, het.K))
+    t = get_gamma_rows(name)(shape_rows, 1.0 / het.lambdas, rng)
     t.sort(axis=1)
     return t[:, L - 1]
 
 
 def mds_sweep(het: HetSpec, N: int, trials: int, rng: np.random.Generator
               ) -> Tuple[int, float, np.ndarray]:
-    """Eq. (6): optimize L over [1, K] by MC.  Returns (L*, E[T], samples)."""
+    """Eq. (6) as the PR-2 per-L reference loop (numpy draws).
+
+    Kept verbatim as the validation baseline ``mds_sweep_batched`` is
+    pinned against (and as the loop the ``mds_grid`` benchmark times).
+    """
     best: Tuple[int, float, Optional[np.ndarray]] = (1, np.inf, None)
     for L in range(1, het.K + 1):
-        ts = mds_time_samples(het, N, L, trials, rng)
+        m = int(np.ceil(N / L))
+        t = rng.gamma(shape=m, scale=1.0 / het.lambdas,
+                      size=(trials, het.K))
+        t.sort(axis=1)
+        ts = t[:, L - 1]
+        mean_t = float(ts.mean())
+        if mean_t < best[1]:
+            best = (L, mean_t, ts)
+    return best  # type: ignore[return-value]
+
+
+def mds_sweep_batched(het: HetSpec, N: int, trials: int,
+                      rng: np.random.Generator,
+                      backend: Optional[str] = None
+                      ) -> Tuple[int, float, np.ndarray]:
+    """Eq. (6) with every candidate L as extra grid rows of ONE batched
+    ``gamma_rows`` draw: rows are L-major ``(K * trials, K)``, so on the
+    numpy backend the random stream -- and therefore the chosen L and
+    every sample -- is bit-identical to the ``mds_sweep`` loop.
+    Returns ``(L*, E[T(L*)], samples at L*)``.
+    """
+    name = resolve_backend(backend)
+    K = het.K
+    m = np.array([int(np.ceil(N / L)) for L in range(1, K + 1)],
+                 dtype=np.float64)
+    shape_rows = np.broadcast_to(np.repeat(m, trials)[:, None],
+                                 (K * trials, K))
+    t = get_gamma_rows(name)(shape_rows, 1.0 / het.lambdas, rng)
+    t.sort(axis=1)
+    best: Tuple[int, float, Optional[np.ndarray]] = (1, np.inf, None)
+    for L in range(1, K + 1):
+        ts = t[(L - 1) * trials:L * trials, L - 1]
         mean_t = float(ts.mean())
         if mean_t < best[1]:
             best = (L, mean_t, ts)
@@ -586,7 +774,10 @@ class _WorkExchangeBase(Scheme):
            rng: np.random.Generator, keep_trials: bool = False,
            backend: Optional[str] = None) -> MCReport:
         if self.engine == "loop":    # the per-trial validation reference
-            return super().mc(het, N, trials, rng, keep_trials)
+            # backend is unused by the scalar loop but still validated,
+            # so a typo'd name fails fast here like everywhere else
+            return super().mc(het, N, trials, rng, keep_trials,
+                              backend=backend)
         return work_exchange_mc_batched(het, N, self.config(), trials, rng,
                                         self.capped_mode, keep_trials,
                                         scheme_name=self.name,
@@ -702,6 +893,7 @@ class HetMDSScheme(Scheme):
     def mc(self, het: HetSpec, N: int, trials: int,
            rng: np.random.Generator, keep_trials: bool = False,
            backend: Optional[str] = None) -> MCReport:
+        validate_backend(backend)
         loads = self.initial_sizes(het, N)
         ts = self._cover_times(het, N, trials, rng)
         return _report(self.name, ts, np.ones(trials),
@@ -712,6 +904,7 @@ class HetMDSScheme(Scheme):
                 rng: np.random.Generator, keep_trials: bool = False,
                 backend: Optional[str] = None) -> List[MCReport]:
         """Cover times for the whole grid in one (G * trials, K) batch."""
+        validate_backend(backend)
         specs = list(het_specs)
         if not specs or len({h.K for h in specs}) != 1:
             return super().mc_grid(specs, N, trials, rng,
@@ -845,7 +1038,8 @@ class GradientCodedScheme(Scheme):
 __all__ = [
     "MCReport", "Scheme", "SCHEME_REGISTRY", "register_scheme", "get_scheme",
     "list_schemes", "simulate_work_exchange_scalar",
-    "work_exchange_mc_batched", "mds_sweep", "mds_time_samples",
+    "work_exchange_mc_batched", "mds_sweep", "mds_sweep_batched",
+    "mds_time_samples",
     "OracleScheme", "FixedScheme", "UniformScheme", "MDSScheme",
     "WorkExchangeScheme", "WorkExchangeUnknownScheme", "HetMDSScheme",
     "TraceReplayScheme", "GradientCodedScheme",

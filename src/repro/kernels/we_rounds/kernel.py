@@ -1,0 +1,81 @@
+"""Pallas kernel for the work-exchange exchange-round pipeline.
+
+One ``pallas_call`` fuses counter-based bit generation (Threefry-2x32,
+keyed per ``(trial, worker, round)``), the Marsaglia-Tsang Gamma
+transform, the per-trial argmin straggler selection, and the normal-limit
+Binomial into a single tiled pass over the ``(trials x K)`` grid: grid =
+``(B / block_b,)``, each program owns a ``(block_b, K)`` tile of trials
+and runs the whole exchange-round ``while_loop`` to completion in VMEM --
+state never round-trips to HBM between rounds, and the only HBM traffic
+is one read of the rate tile and one write of the three per-trial stats.
+
+Because every draw is a pure function of ``(seed, row, worker, round,
+slot)`` (see ``ref.py``, which owns all the math), the kernel is
+bit-identical to ``we_rounds_reference`` for any ``block_b``, and padding
+rows cannot perturb real ones.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_B = 128
+
+
+def _we_rounds_kernel(seed_ref, lam_ref, out_ref, *, K: int, block_b: int,
+                      n0: float, threshold: float, cap: float, known: bool,
+                      max_iter: int):
+    k0 = seed_ref[0, 0]
+    k1 = seed_ref[0, 1]
+    lam = lam_ref[...]
+    inv_lam = 1.0 / lam
+    base = pl.program_id(0) * block_b
+    row_ids = base + jax.lax.broadcasted_iota(jnp.int32, (block_b, 1), 0)
+
+    def cond(st):
+        return st["active"].any()
+
+    def body(st):
+        return ref.round_body(st, lam, inv_lam, row_ids, k0, k1, K=K,
+                              cap=cap, threshold=threshold, known=known,
+                              max_iter=max_iter)
+
+    st = jax.lax.while_loop(
+        cond, body, ref.init_state(block_b, K, n0, threshold, known))
+    t, it, cm = ref.final_phase(st, lam, inv_lam, row_ids, k0, k1, K=K,
+                                known=known, max_iter=max_iter)
+    out_ref[...] = jnp.stack([t, it, cm], axis=1)
+
+
+def we_rounds_pallas(lam_rows: jnp.ndarray, seed: jnp.ndarray, *,
+                     n0: float, threshold: float, cap: float, known: bool,
+                     max_iter: int, block_b: int = DEFAULT_BLOCK_B,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Run the fused round pipeline; returns ``(B, 3)``:
+    ``[:, 0] = t_comp``, ``[:, 1] = iterations``, ``[:, 2] = n_comm``.
+
+    ``B`` must be a multiple of ``block_b`` (callers pad -- see
+    ``ops.we_rounds_grid``); ``seed`` is a ``(1, 2)`` uint32 array shared
+    by every tile.
+    """
+    B, K = lam_rows.shape
+    assert B % block_b == 0, f"pad B={B} to a multiple of {block_b}"
+    kernel = functools.partial(_we_rounds_kernel, K=K, block_b=block_b,
+                               n0=n0, threshold=threshold, cap=cap,
+                               known=known, max_iter=max_iter)
+    return pl.pallas_call(
+        kernel,
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 3), jnp.float32),
+        interpret=interpret,
+    )(seed, lam_rows)

@@ -1,0 +1,135 @@
+"""Dispatch layer for the ``we_rounds`` kernel package.
+
+``we_rounds_grid`` is what the ``pallas`` sampler backend calls: it pads
+the batch to a tile multiple, picks an execution mode, and returns numpy
+arrays.  Modes (``REPRO_WE_ROUNDS_MODE`` or the ``mode=`` kwarg):
+
+``auto``
+    Compiled Pallas kernel when a Pallas-lowering backend (TPU) is
+    attached, otherwise the jitted jnp reference -- the path CPU CI runs.
+``kernel`` / ``interpret``
+    Force the Pallas kernel, compiled / in interpreter mode.  Interpret
+    mode executes the *actual kernel code* on CPU (slowly), which is what
+    the ``pallas-interpret`` CI job exercises.
+``reference``
+    Force the jitted jnp oracle.
+
+All modes are bit-identical on real rows (counter-based draws -- see
+``ref.py``), so mode selection is a pure performance choice.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .kernel import DEFAULT_BLOCK_B, we_rounds_pallas
+from .ref import gamma_rows_reference, we_rounds_reference
+
+ENV_MODE = "REPRO_WE_ROUNDS_MODE"
+MODES = ("auto", "kernel", "interpret", "reference")
+
+
+def lowering_available() -> bool:
+    """True when the attached jax backend can compile Pallas TPU kernels."""
+    try:
+        import jax
+        return jax.default_backend() in ("tpu",)
+    except Exception:
+        return False
+
+
+def resolve_mode(mode: Optional[str] = None) -> str:
+    name = mode or os.environ.get(ENV_MODE) or "auto"
+    if name not in MODES:
+        raise KeyError(f"unknown we_rounds mode {name!r}; have {MODES}")
+    if name == "auto":
+        return "kernel" if lowering_available() else "reference"
+    return name
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_reference(n0: float, threshold: float, cap: float, known: bool,
+                   max_iter: int):
+    import jax
+    return jax.jit(functools.partial(we_rounds_reference, n0=n0,
+                                     threshold=threshold, cap=cap,
+                                     known=known, max_iter=max_iter))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_kernel(n0: float, threshold: float, cap: float, known: bool,
+                max_iter: int, block_b: int, interpret: bool):
+    import jax
+    return jax.jit(functools.partial(we_rounds_pallas, n0=n0,
+                                     threshold=threshold, cap=cap,
+                                     known=known, max_iter=max_iter,
+                                     block_b=block_b, interpret=interpret))
+
+
+def we_rounds_grid(lam_rows: np.ndarray, seed, *, n0: float,
+                   threshold: float, cap: float, known: bool,
+                   max_iter: int, mode: Optional[str] = None,
+                   block_b: int = DEFAULT_BLOCK_B
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Fused round pipeline over ``(B, K)`` rate rows -> per-row
+    ``(t_comp, iterations, n_comm)`` float64 numpy arrays.
+
+    ``seed`` is a pair of uint32 (any sequence of two ints).  ``B`` is
+    padded to a multiple of ``block_b`` with copies of row 0 (counters are
+    per global row, so padding never alters real rows).
+    """
+    import jax.numpy as jnp
+
+    lam_rows = np.asarray(lam_rows, dtype=np.float32)
+    if lam_rows.ndim != 2:
+        raise ValueError(f"lam_rows must be (B, K); got {lam_rows.shape}")
+    B = lam_rows.shape[0]
+    mode = resolve_mode(mode)
+    seed_arr = np.asarray(seed, dtype=np.uint32).reshape(2)
+
+    pad = (-B) % block_b
+    if pad and mode != "reference":
+        lam_rows = np.concatenate(
+            [lam_rows, np.repeat(lam_rows[:1], pad, axis=0)])
+
+    if mode == "reference":
+        fn = _jit_reference(float(n0), float(threshold), float(cap),
+                            bool(known), int(max_iter))
+        t, it, cm = fn(jnp.asarray(lam_rows), jnp.asarray(seed_arr))
+    else:
+        fn = _jit_kernel(float(n0), float(threshold), float(cap),
+                         bool(known), int(max_iter), int(block_b),
+                         mode == "interpret")
+        out = fn(jnp.asarray(lam_rows), jnp.asarray(seed_arr[None, :]))
+        t, it, cm = out[:, 0], out[:, 1], out[:, 2]
+    return (np.asarray(t, dtype=np.float64)[:B],
+            np.asarray(it, dtype=np.float64)[:B],
+            np.asarray(cm, dtype=np.float64)[:B])
+
+
+@functools.lru_cache(maxsize=4)
+def _jit_gamma_rows(boost: bool):
+    import jax
+    return jax.jit(functools.partial(gamma_rows_reference, boost=boost))
+
+
+def gamma_rows_grid(shape_rows: np.ndarray, scale_rows: np.ndarray,
+                    seed) -> np.ndarray:
+    """Counter-based ``Gamma(shape) * scale`` over ``(R, K)`` rows in one
+    jitted dispatch (the MDS L-sweep primitive of the pallas backend;
+    shape/scale broadcast against each other).  The boost chain -- and
+    its two extra Threefry calls per element -- is compiled in only when
+    some shape is below 3.  Output stays float32 (the pipeline dtype)."""
+    import jax.numpy as jnp
+
+    shape_rows = np.asarray(shape_rows, dtype=np.float32)
+    scale_rows = np.asarray(scale_rows, dtype=np.float32)
+    seed_arr = np.asarray(seed, dtype=np.uint32).reshape(2)
+    boost = bool((shape_rows < 3.0).any())
+    out = _jit_gamma_rows(boost)(jnp.asarray(shape_rows),
+                                 jnp.asarray(scale_rows),
+                                 jnp.asarray(seed_arr))
+    return np.asarray(out)

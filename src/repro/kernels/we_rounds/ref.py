@@ -1,0 +1,283 @@
+"""Counter-based work-exchange round pipeline: shared math + jnp oracle.
+
+Everything the Pallas kernel computes lives here as pure ``jnp`` functions
+on ``(rows, K)`` tiles, so the kernel (``kernel.py``) and the reference
+engine (``we_rounds_reference``) share one implementation of
+
+* **bit generation** -- Threefry-2x32 (20 rounds: add / xor / rotate on
+  ``uint32`` only, the reason JAX itself uses Threefry on TPU), keyed per
+  ``(trial, worker, round, slot)``.  Counter-based draws make the pipeline
+  embarrassingly parallel AND tiling-invariant: a row's random stream
+  depends only on its global row id, never on tile size, loop trip count,
+  or padding rows, so kernel and reference are *bit-identical* and padded
+  rows cannot perturb real ones.
+* **Gamma service draws** -- the mean-exact Marsaglia-Tsang transform
+  ``d * (1 + z / (3 sqrt(d)))^3`` with the exact boost
+  ``Gamma(a) = Gamma(a+1) * U^(1/a)`` chained three times below shape 3
+  (the same relaxation as the ``jax`` sampler backend).
+* **straggler selection** -- per-trial argmin over the K workers.
+* **Binomial done-counts** -- the mean/variance-exact normal limit.
+
+``we_rounds_reference`` runs the full batch through one
+``lax.while_loop``; it is both the CPU-CI execution path of the ``pallas``
+sampler backend (jitted, no Pallas lowering required) and the oracle the
+kernel is validated against.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# slot layout per (trial, worker, round): 4 Threefry calls x 2 words
+#   pair 0 -> Box-Muller pair for the Gamma normal
+#   pair 1 -> boost uniforms u0, u1
+#   pair 2 -> boost uniform u2 (word 1 spare)
+#   pair 3 -> Box-Muller pair for the Binomial normal
+N_PAIRS = 4
+_U32 = jnp.uint32
+
+
+def _rotl(x: jnp.ndarray, d: int) -> jnp.ndarray:
+    return (x << _U32(d)) | (x >> _U32(32 - d))
+
+
+def threefry2x32(k0, k1, c0, c1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Threefry-2x32, 20 rounds (the full-strength variant)."""
+    k0, k1 = _U32(k0) + _U32(0), _U32(k1) + _U32(0)
+    ks2 = k0 ^ k1 ^ _U32(0x1BD11BDA)
+    x0 = c0.astype(jnp.uint32) + k0
+    x1 = c1.astype(jnp.uint32) + k1
+    rot_a = (13, 15, 26, 6)
+    rot_b = (17, 29, 16, 24)
+    inject = ((k1, ks2), (ks2, k0), (k0, k1), (k1, ks2), (ks2, k0))
+    for block in range(5):
+        for d in (rot_a if block % 2 == 0 else rot_b):
+            x0 = x0 + x1
+            x1 = _rotl(x1, d) ^ x0
+        x0 = x0 + inject[block][0]
+        x1 = x1 + inject[block][1] + _U32(block + 1)
+    return x0, x1
+
+
+def uniform01(bits: jnp.ndarray) -> jnp.ndarray:
+    """uint32 -> float32 uniform in (0, 1): top 24 bits, zero-excluded
+    so ``log(u)`` stays finite."""
+    u = (bits >> _U32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+    return jnp.maximum(u, jnp.float32(1e-12))
+
+
+def _box_muller(u1: jnp.ndarray, u2: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(
+        jnp.float32(2.0 * jnp.pi) * u2)
+
+
+def round_uniforms(k0, k1, c0: jnp.ndarray, c1_base: jnp.ndarray):
+    """The 7 variates one exchange round needs per ``(row, worker)`` cell.
+
+    ``c0`` carries the global row (trial) id, ``c1_base`` the
+    ``(round * K + worker) * N_PAIRS`` namespace; both broadcast over the
+    tile.  Returns ``(z_gamma, u0, u1, u2, z_binom)`` float32 arrays.
+    """
+    c0 = c0.astype(jnp.uint32)
+    c1_base = c1_base.astype(jnp.uint32)
+    a0, a1 = threefry2x32(k0, k1, c0, c1_base)
+    b0, b1 = threefry2x32(k0, k1, c0, c1_base + _U32(1))
+    c0_, _ = threefry2x32(k0, k1, c0, c1_base + _U32(2))
+    d0, d1 = threefry2x32(k0, k1, c0, c1_base + _U32(3))
+    z_gamma = _box_muller(uniform01(a0), uniform01(a1))
+    z_binom = _box_muller(uniform01(d0), uniform01(d1))
+    return (z_gamma, uniform01(b0), uniform01(b1), uniform01(c0_), z_binom)
+
+
+def gamma_mt(z: jnp.ndarray, u0: jnp.ndarray, u1: jnp.ndarray,
+             u2: jnp.ndarray, alpha: jnp.ndarray,
+             inv_rate: jnp.ndarray) -> jnp.ndarray:
+    """Mean-exact MT transform for any ``alpha > 0``: raw transform at
+    shape ``alpha + 3`` below 3, pulled back through the exact identity
+    ``Gamma(a) = Gamma(a+1) U^{1/a}`` chained three times (the chained
+    mean telescopes exactly, as in the jax sampler backend)."""
+    boost = alpha < 3.0
+    a = jnp.where(boost, alpha + 3.0, alpha)
+    d = a - jnp.float32(1.0 / 3.0)
+    c = jnp.maximum(1.0 + z / (3.0 * jnp.sqrt(d)), 0.0)
+    raw = d * c ** 3 * inv_rate
+    log_pow = (jnp.log(u0) / jnp.maximum(alpha, 1e-12)
+               + jnp.log(u1) / jnp.maximum(alpha + 1.0, 1e-12)
+               + jnp.log(u2) / jnp.maximum(alpha + 2.0, 1e-12))
+    return raw * jnp.where(boost, jnp.exp(log_pow), 1.0)
+
+
+def binomial_normal(z: jnp.ndarray, n: jnp.ndarray,
+                    p: jnp.ndarray) -> jnp.ndarray:
+    """Binomial(n, p) in its mean/variance-exact normal limit."""
+    mean = n * p
+    std = jnp.sqrt(jnp.maximum(n * p * (1.0 - p), 0.0))
+    return jnp.clip(mean + z * std, 0.0, n)
+
+
+# ---------------------------------------------------------------------------
+# the round pipeline on a (rows, K) tile
+# ---------------------------------------------------------------------------
+
+def init_state(rows: int, K: int, n0: float, threshold: float,
+               known: bool) -> Dict[str, jnp.ndarray]:
+    st = {
+        "n_rem": jnp.full((rows, 1), jnp.float32(n0)),
+        "n_left": jnp.zeros((rows, K), jnp.float32),
+        "t_comp": jnp.zeros((rows, 1), jnp.float32),
+        "n_comm": jnp.zeros((rows, 1), jnp.float32),
+        "iters": jnp.zeros((rows, 1), jnp.int32),
+        "active": jnp.full((rows, 1), n0 > threshold),
+    }
+    if not known:
+        st.update(est_done=jnp.zeros((rows, K), jnp.float32),
+                  est_time=jnp.zeros((rows, 1), jnp.float32),
+                  lam_hat=jnp.ones((rows, K), jnp.float32))
+    return st
+
+
+def round_body(st: Dict[str, jnp.ndarray], lam: jnp.ndarray,
+               inv_lam: jnp.ndarray, row_ids: jnp.ndarray, k0, k1, *,
+               K: int, cap: float, threshold: float, known: bool,
+               max_iter: int) -> Dict[str, jnp.ndarray]:
+    """One fluid exchange round on a tile (shared by kernel and oracle).
+
+    The RNG round index is the row's own ``iters`` (== the global loop
+    count while a row is active), so frozen rows recompute already-spent
+    counters into fully-masked lanes and the result is independent of how
+    many extra trips the surrounding ``while_loop`` makes.
+    """
+    worker = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
+    c1 = ((st["iters"] * K + worker) * N_PAIRS).astype(jnp.uint32)
+    z_g, u0, u1, u2, z_b = round_uniforms(k0, k1, row_ids, c1)
+
+    rates = lam if known else st["lam_hat"]
+    share = rates * (st["n_rem"] / rates.sum(1, keepdims=True))
+    assign = jnp.minimum(share, jnp.float32(cap))
+    busy = assign > 0.5        # sub-half slivers carry over as leftover
+    t_raw = gamma_mt(z_g, u0, u1, u2, jnp.maximum(assign, 0.5), inv_lam)
+    t_k = jnp.where(busy, t_raw, jnp.inf)
+    t_star = t_k.min(1, keepdims=True)
+    proceed = st["active"] & jnp.isfinite(t_star)
+    fin = t_k == t_star                     # finisher clears its queue
+    p = jnp.clip(t_star / t_k, 0.0, 1.0)
+    done = binomial_normal(z_b, jnp.maximum(assign - 1.0, 0.0), p)
+    done = jnp.where(fin, assign, jnp.where(busy, done, 0.0))
+    n_rem = st["n_rem"] - done.sum(1, keepdims=True)
+
+    started = st["iters"] > 0
+    comm = jnp.maximum(assign - st["n_left"], 0.0).sum(1, keepdims=True)
+    upd = lambda new, old: jnp.where(proceed, new, old)  # noqa: E731
+    iters = st["iters"] + proceed
+    n_rem_m = upd(n_rem, st["n_rem"])
+    out = {
+        "n_rem": n_rem_m,
+        "n_left": upd(assign - done, st["n_left"]),
+        "t_comp": upd(st["t_comp"] + t_star, st["t_comp"]),
+        "n_comm": upd(st["n_comm"] + jnp.where(started, comm, 0.0),
+                      st["n_comm"]),
+        "iters": iters,
+        "active": proceed & (n_rem_m > threshold) & (iters < max_iter),
+    }
+    if not known:
+        # accumulators go unmasked; frozen rows only read them through
+        # lam_hat, which IS masked
+        ed = st["est_done"] + done
+        et = st["est_time"] + t_star
+        out["est_done"] = ed
+        out["est_time"] = et
+        out["lam_hat"] = upd(jnp.where(ed > 0.0, ed / jnp.maximum(et, 1e-30),
+                                       1.0), st["lam_hat"])
+    return out
+
+
+def final_phase(st: Dict[str, jnp.ndarray], lam: jnp.ndarray,
+                inv_lam: jnp.ndarray, row_ids: jnp.ndarray, k0, k1, *,
+                K: int, known: bool, max_iter: int):
+    """Below the threshold: assign the remainder, wait for all workers.
+    Uses the reserved round index ``max_iter`` (the loop never reaches it:
+    in-loop draws happen at ``iters < max_iter``)."""
+    worker = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
+    c1 = ((jnp.int32(max_iter) * K + worker) * N_PAIRS).astype(jnp.uint32)
+    z_g, u0, u1, u2, _ = round_uniforms(
+        k0, k1, jnp.broadcast_to(row_ids, (row_ids.shape[0], 1)), c1)
+    has_rem = st["n_rem"] > 1e-6
+    rates = lam if known else st["lam_hat"]
+    share = rates * (st["n_rem"] / rates.sum(1, keepdims=True))
+    comm = jnp.maximum(share - st["n_left"], 0.0).sum(1, keepdims=True)
+    t_k = jnp.where(share > 1e-9,
+                    gamma_mt(z_g, u0, u1, u2, jnp.maximum(share, 1e-9),
+                             inv_lam), 0.0)
+    t_comp = st["t_comp"] + jnp.where(has_rem, t_k.max(1, keepdims=True),
+                                      0.0)
+    n_comm = st["n_comm"] + jnp.where(has_rem & (st["iters"] > 0), comm,
+                                      0.0)
+    iters = st["iters"] + has_rem
+    return t_comp[:, 0], iters[:, 0].astype(jnp.float32), n_comm[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# full-batch jnp oracle (the pallas backend's CPU execution path)
+# ---------------------------------------------------------------------------
+
+def we_rounds_reference(lam_rows: jnp.ndarray, seed: jnp.ndarray, *,
+                        n0: float, threshold: float, cap: float,
+                        known: bool, max_iter: int):
+    """The whole ``(B, K)`` batch through one ``lax.while_loop``.
+
+    Bit-identical to the Pallas kernel (interpret or compiled) on shared
+    rows for any tiling, because every draw is a pure function of
+    ``(seed, row, worker, round, slot)``.
+    """
+    B, K = lam_rows.shape
+    lam = lam_rows.astype(jnp.float32)
+    inv_lam = 1.0 / lam
+    k0, k1 = seed[0], seed[1]
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (B, 1), 0)
+
+    def cond(st):
+        return st["active"].any()
+
+    def body(st):
+        return round_body(st, lam, inv_lam, row_ids, k0, k1, K=K, cap=cap,
+                          threshold=threshold, known=known,
+                          max_iter=max_iter)
+
+    st = jax.lax.while_loop(cond, body,
+                            init_state(B, K, n0, threshold, known))
+    return final_phase(st, lam, inv_lam, row_ids, k0, k1, K=K, known=known,
+                       max_iter=max_iter)
+
+
+# ---------------------------------------------------------------------------
+# batched Gamma rows (the MDS L-sweep primitive)
+# ---------------------------------------------------------------------------
+
+def gamma_rows_reference(shape_rows: jnp.ndarray, scale_rows: jnp.ndarray,
+                         seed: jnp.ndarray, *,
+                         boost: bool = True) -> jnp.ndarray:
+    """Counter-based ``Gamma(shape) * scale`` over an ``(R, K)`` matrix in
+    one pass (round namespace 0 -- each call gets a fresh seed).
+    ``shape_rows``/``scale_rows`` broadcast against each other.  With
+    ``boost=False`` (every shape >= 3, the MDS regime) only the Box-Muller
+    pair is generated -- one Threefry call per element instead of three.
+    """
+    R, K = jnp.broadcast_shapes(shape_rows.shape, scale_rows.shape)
+    k0, k1 = seed[0], seed[1]
+    c0 = jax.lax.broadcasted_iota(jnp.int32, (R, 1), 0).astype(jnp.uint32)
+    worker = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
+    c1 = (worker * N_PAIRS).astype(jnp.uint32)
+    a0, a1 = threefry2x32(k0, k1, c0, c1)
+    z = _box_muller(uniform01(a0), uniform01(a1))
+    alpha = jnp.broadcast_to(shape_rows, (R, K)).astype(jnp.float32)
+    scale = scale_rows.astype(jnp.float32)
+    if not boost:
+        d = alpha - jnp.float32(1.0 / 3.0)
+        c = jnp.maximum(1.0 + z / (3.0 * jnp.sqrt(d)), 0.0)
+        return d * c ** 3 * scale
+    b0, b1 = threefry2x32(k0, k1, c0, c1 + _U32(1))
+    c0_, _ = threefry2x32(k0, k1, c0, c1 + _U32(2))
+    return gamma_mt(z, uniform01(b0), uniform01(b1), uniform01(c0_),
+                    alpha, scale)

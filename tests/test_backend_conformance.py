@@ -1,0 +1,161 @@
+"""Cross-backend conformance suite: the contract every sampler backend
+must satisfy, parametrized over ``list(SAMPLER_BACKENDS)`` so a future
+backend gets the full battery for free just by registering.
+
+Contract, per backend:
+  * conservation -- every non-redundant scheme completes exactly N units
+    (exact engines assert it internally; fluid engines sit at/above the
+    work-conservation bound and never lose work at MC tolerance);
+  * statistical equivalence -- mean AND variance of T_comp within
+    tolerance of the exact numpy engine on a shared scenario grid;
+  * determinism -- same seed, same report, twice;
+  * mc/mc_grid agreement -- the grid dispatch is the same distribution as
+    looped ``mc``.
+
+The work-exchange runs share one ``B = G * trials = 512`` batch bucket so
+jitted backends pay a single compilation for the whole file.
+"""
+import numpy as np
+import pytest
+
+from repro.core.samplers import ENV_VAR, SAMPLER_BACKENDS, get_backend
+from repro.core.schemes import get_scheme, list_schemes
+from repro.core.types import HetSpec
+
+RNG = lambda s=0: np.random.default_rng(s)  # noqa: E731
+
+K, N, TRIALS = 15, 50_000, 512
+
+BACKENDS = [name for name in sorted(SAMPLER_BACKENDS)
+            if get_backend(name).available()]
+WE_SCHEMES = ("work_exchange", "work_exchange_unknown")
+
+
+def make_het(K=K, mu=20.0, sigma2=20.0 ** 2 / 6, seed=3):
+    return HetSpec.uniform_random(K, mu, sigma2, RNG(seed))
+
+
+def mean_close(a, b, trials, k=6.0, floor=2e-3):
+    """|mean_a - mean_b| within k combined standard errors (+ a small
+    relative floor for float32 fluid pipelines)."""
+    se = np.hypot(a.t_comp_std, b.t_comp_std) / np.sqrt(trials)
+    assert abs(a.t_comp - b.t_comp) < max(k * se, floor * b.t_comp), \
+        (a.t_comp, b.t_comp, se)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestConservation:
+    def test_every_scheme_conserves_work(self, backend, monkeypatch):
+        """With the backend selected globally, each registered scheme's
+        exact single-trial path still completes exactly N units (the
+        ``redundant`` schemes ship more by design and are checked for
+        >= N)."""
+        monkeypatch.setenv(ENV_VAR, backend)
+        het = make_het()
+        n = 2_000
+        for name in list_schemes():
+            scheme = get_scheme(name)
+            stats = scheme.simulate(het, n, RNG(1))
+            total = int(round(float(stats.n_done.sum())))
+            if scheme.redundant:
+                assert total >= n, f"{name} lost work: {total} < {n}"
+            else:
+                stats.check_work_conserved(n)
+
+    def test_we_time_between_oracle_and_bound(self, backend):
+        """No backend may 'complete' faster than the merged-process lower
+        bound (that would mean losing units), nor sit far above it."""
+        het = make_het(seed=11)
+        oracle = N / het.lambda_sum
+        for name in WE_SCHEMES:
+            rep = get_scheme(name).mc(het, N, TRIALS, RNG(2),
+                                      backend=backend)
+            assert rep.extra["backend"] == backend
+            assert oracle * 0.999 <= rep.t_comp < 1.10 * oracle, \
+                (name, rep.t_comp, oracle)
+
+    def test_report_shape_contract(self, backend):
+        rep = get_scheme("work_exchange").mc(make_het(), N, TRIALS, RNG(3),
+                                             keep_trials=True,
+                                             backend=backend)
+        assert rep.trials == TRIALS
+        for arr in (rep.t_comp_trials, rep.iterations_trials,
+                    rep.n_comm_trials):
+            assert arr is not None and arr.shape == (TRIALS,)
+            assert np.isfinite(arr).all()
+        assert (rep.iterations_trials >= 1).all()
+        assert (rep.n_comm_trials >= 0).all()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestStatisticalEquivalence:
+    @pytest.mark.parametrize("name", WE_SCHEMES)
+    def test_mean_and_variance_match_numpy(self, backend, name):
+        het = make_het(seed=12)
+        ref = get_scheme(name).mc(het, N, TRIALS, RNG(5), backend="numpy")
+        rep = get_scheme(name).mc(het, N, TRIALS, RNG(6), backend=backend)
+        mean_close(rep, ref, TRIALS)
+        # variance: the fluid relaxation may only perturb the spread a
+        # little (chi^2 ratio bounds at ~6 sigma for 512 samples)
+        ratio = rep.t_comp_std / max(ref.t_comp_std, 1e-12)
+        assert 0.6 < ratio < 1.6, (rep.t_comp_std, ref.t_comp_std)
+
+    def test_mds_sweep_matches_numpy(self, backend):
+        het = make_het(seed=13)
+        ref = get_scheme("mds").mc(het, N, 400, RNG(7), backend="numpy")
+        rep = get_scheme("mds").mc(het, N, 400, RNG(8), backend=backend)
+        assert rep.extra["backend"] == backend
+        # transform backends run the coupled (common-random-numbers)
+        # sweep; near the optimum adjacent L means are statistically
+        # tied, so allow the choice to land on a neighbour
+        assert abs(rep.extra["L"] - ref.extra["L"]) <= 2
+        mean_close(rep, ref, 400)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestDeterminism:
+    def test_same_seed_same_report(self, backend):
+        het = make_het(seed=14)
+        a = get_scheme("work_exchange").mc(het, N, TRIALS, RNG(9),
+                                           keep_trials=True,
+                                           backend=backend)
+        b = get_scheme("work_exchange").mc(het, N, TRIALS, RNG(9),
+                                           keep_trials=True,
+                                           backend=backend)
+        np.testing.assert_array_equal(a.t_comp_trials, b.t_comp_trials)
+        np.testing.assert_array_equal(a.iterations_trials,
+                                      b.iterations_trials)
+        np.testing.assert_array_equal(a.n_comm_trials, b.n_comm_trials)
+
+    def test_mds_same_seed_same_report(self, backend):
+        het = make_het(seed=15)
+        a = get_scheme("mds").mc(het, N, 128, RNG(10), keep_trials=True,
+                                 backend=backend)
+        b = get_scheme("mds").mc(het, N, 128, RNG(10), keep_trials=True,
+                                 backend=backend)
+        assert a.extra["L"] == b.extra["L"]
+        np.testing.assert_array_equal(a.t_comp_trials, b.t_comp_trials)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestGridAgreement:
+    def test_we_grid_matches_looped_mc(self, backend):
+        specs = [make_het(seed=s, mu=10.0 * (s + 1),
+                          sigma2=(10.0 * (s + 1)) ** 2 / 6) for s in (0, 1)]
+        trials = TRIALS // len(specs)       # stay in the shared B bucket
+        scheme = get_scheme("work_exchange")
+        grid = scheme.mc_grid(specs, N, trials, RNG(11), backend=backend)
+        for het, g in zip(specs, grid):
+            m = scheme.mc(het, N, trials, RNG(12), backend=backend)
+            mean_close(g, m, trials)
+        assert grid[1].t_comp < grid[0].t_comp      # spec axis aligned
+
+    def test_mds_grid_matches_looped_mc(self, backend):
+        specs = [make_het(seed=s + 20) for s in (0, 1)]
+        scheme = get_scheme("mds")
+        grid = scheme.mc_grid(specs, N, 300, RNG(13), backend=backend)
+        rng = RNG(14)
+        for het, g in zip(specs, grid):
+            m = scheme.mc(het, N, 300, rng, backend=backend)
+            assert abs(g.extra["L"] - m.extra["L"]) <= 2
+            mean_close(g, m, 300)

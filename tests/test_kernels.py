@@ -13,6 +13,8 @@ from repro.kernels.linear_scan.ops import linear_scan as ls_op
 from repro.kernels.linear_scan.ref import linear_scan_ref
 from repro.kernels.moe_gmm.kernel import expert_matmul
 from repro.kernels.moe_gmm.ref import expert_matmul_ref
+from repro.kernels.we_rounds import (gamma_rows_grid, lowering_available,
+                                     resolve_mode, we_rounds_grid)
 
 RNG = np.random.default_rng(0)
 
@@ -129,6 +131,97 @@ class TestLinearScan:
         np.testing.assert_allclose(
             np.asarray(ls_kernel(a, b, chunk=32, interpret=True)),
             np.asarray(linear_recurrence(a, b)), rtol=1e-5, atol=1e-5)
+
+
+class TestWeRounds:
+    """The fused work-exchange round-pipeline kernel (pallas backend)."""
+
+    K, N = 12, 30_000
+    THRESHOLD = 0.01 * N / K
+
+    def _lam_rows(self, B, seed=3):
+        rng = np.random.default_rng(seed)
+        return np.repeat(rng.uniform(10.0, 30.0, size=(1, self.K)), B,
+                         axis=0)
+
+    def _run(self, B, mode, known=True, seed=(11, 22)):
+        cap = np.inf if known else float(np.ceil(self.N / self.K))
+        return we_rounds_grid(self._lam_rows(B), seed, n0=self.N,
+                              threshold=self.THRESHOLD, cap=cap,
+                              known=known, max_iter=10_000, mode=mode)
+
+    @pytest.mark.parametrize("known", [True, False])
+    def test_interpret_kernel_bitwise_matches_reference(self, known):
+        """Counter-based draws make kernel tiling invisible: the
+        interpreted kernel and the jnp oracle are BIT-identical."""
+        for a, b in zip(self._run(256, "interpret", known),
+                        self._run(256, "reference", known)):
+            np.testing.assert_array_equal(a, b)
+
+    @pytest.mark.parametrize("B", [1, 77, 130, 200])
+    def test_padding_path_odd_batches(self, B):
+        """Odd / non-power-of-two trial counts pad to the tile multiple;
+        padding rows must never perturb real rows (vs the unpadded
+        reference) and outputs keep the requested length."""
+        t, it, cm = self._run(B, "interpret")
+        t_ref, it_ref, cm_ref = self._run(B, "reference")
+        assert t.shape == it.shape == cm.shape == (B,)
+        np.testing.assert_array_equal(t, t_ref)
+        np.testing.assert_array_equal(it, it_ref)
+        np.testing.assert_array_equal(cm, cm_ref)
+        assert np.isfinite(t).all() and (it >= 1).all() and (cm >= 0).all()
+
+    @pytest.mark.parametrize("known", [True, False])
+    def test_statistically_equivalent_to_jax_backend(self, known):
+        """Interpret-mode kernel vs the fused jax backend at 6 combined
+        standard errors on a shared scenario (both sample the same fluid
+        relaxation from independent bit streams)."""
+        from repro.core.samplers import work_exchange_grid_jax
+        from repro.core.types import ExchangeConfig, HetSpec
+
+        trials = 512
+        lam = self._lam_rows(1)[0]
+        t_k, _, cm_k = self._run(trials, "interpret", known)
+        cfg = ExchangeConfig(known_heterogeneity=known)
+        t_j, _, cm_j = work_exchange_grid_jax(
+            lam[None, :], self.N, cfg, trials, np.random.default_rng(5))
+        se = np.hypot(t_k.std(), t_j.std()) / np.sqrt(trials)
+        assert abs(t_k.mean() - t_j.mean()) < max(6.0 * se,
+                                                  1e-3 * t_j.mean())
+        assert abs(cm_k.mean() - cm_j.mean()) / self.N < 0.01
+        oracle = self.N / HetSpec(lam).lambda_sum
+        assert oracle <= t_k.mean() < 1.05 * oracle
+
+    def test_gamma_rows_moments(self):
+        """Counter-based MT gamma rows: mean exact, variance alpha + 1/9
+        (large-shape transform) at 6 SE."""
+        R, K, alpha, scale = 4096, 8, 7.5, 0.5
+        g = gamma_rows_grid(np.full((R, K), alpha), np.full((R, K), scale),
+                            (1, 2))
+        n = R * K
+        se_mean = np.sqrt(alpha + 1 / 9) * scale / np.sqrt(n)
+        assert abs(g.mean() - alpha * scale) < 6 * se_mean
+        var_want = (alpha + 1 / 9) * scale ** 2
+        assert abs(g.var() - var_want) < 0.05 * var_want
+
+    def test_mode_resolution_and_env(self, monkeypatch):
+        monkeypatch.delenv("REPRO_WE_ROUNDS_MODE", raising=False)
+        assert resolve_mode() in ("kernel", "reference")
+        assert resolve_mode("interpret") == "interpret"
+        monkeypatch.setenv("REPRO_WE_ROUNDS_MODE", "reference")
+        assert resolve_mode() == "reference"
+        with pytest.raises(KeyError, match="bogus"):
+            resolve_mode("bogus")
+
+    @pytest.mark.skipif(not lowering_available(),
+                        reason="Pallas lowering needs a TPU backend; "
+                               "interpret/reference modes cover CPU CI")
+    def test_compiled_kernel_bitwise_matches_reference(self):
+        """On hosts with a real Pallas backend the compiled kernel must
+        reproduce the oracle bit-for-bit too (counter-based draws)."""
+        for a, b in zip(self._run(256, "kernel"),
+                        self._run(256, "reference")):
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
 
 
 class TestChunkedAttentionSkip:

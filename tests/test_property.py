@@ -12,6 +12,7 @@ from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
 from repro.core import oracle, simulator
+from repro.core import schemes as schemes_mod
 from repro.core.assignment import (capped_proportional_assignment,
                                    largest_remainder_round,
                                    proportional_assignment)
@@ -127,6 +128,84 @@ class TestStochasticModelProperties:
         stats.check_work_conserved(n)    # raises on violation
         assert stats.t_comp >= 0
         assert stats.n_comm >= 0
+
+
+class TestBatchedMDSSweepProperties:
+    """The grid MDS L-sweep: all candidate L values as extra rows of one
+    batched draw must reproduce the PR-2 per-L loop exactly (numpy)."""
+
+    @given(K=st.integers(2, 12), mu=st.floats(5.0, 80.0),
+           sigma2_frac=st.floats(0.0, 1.0 / 3.0),
+           n=st.integers(50, 20_000), trials=st.integers(4, 40),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(**SETTINGS)
+    def test_batched_sweep_picks_same_L_as_loop(self, K, mu, sigma2_frac,
+                                                n, trials, seed):
+        het = HetSpec.uniform_random(K, mu, sigma2_frac * mu * mu,
+                                     np.random.default_rng(seed))
+        L_loop, mean_loop, ts_loop = schemes_mod.mds_sweep(
+            het, n, trials, np.random.default_rng(seed + 1))
+        L_bat, mean_bat, ts_bat = schemes_mod.mds_sweep_batched(
+            het, n, trials, np.random.default_rng(seed + 1),
+            backend="numpy")
+        assert L_bat == L_loop
+        assert mean_bat == mean_loop
+        np.testing.assert_array_equal(ts_bat, ts_loop)
+
+    @given(K=st.integers(2, 10), mu=st.floats(5.0, 60.0),
+           n=st.integers(100, 10_000), seed=st.integers(0, 2**31 - 1),
+           n_specs=st.integers(1, 3))
+    @settings(**SETTINGS)
+    def test_grid_mc_picks_same_L_as_per_spec_mc(self, K, mu, n, seed,
+                                                 n_specs):
+        """mc_grid's batched specs x L x trials cube chooses, per spec,
+        exactly the L the per-spec mc sweep chooses (fresh rng each --
+        the sweep draws are bit-identical per spec block)."""
+        specs = [HetSpec.uniform_random(K, mu, mu * mu / 6,
+                                        np.random.default_rng(seed + s))
+                 for s in range(n_specs)]
+        trials = 16
+        scheme = schemes_mod.get_scheme("mds", opt_trials=trials)
+        grid = scheme.mc_grid(specs, n, trials,
+                              np.random.default_rng(seed),
+                              backend="numpy")
+        for g, het in zip(grid, specs):
+            L_solo, _, _ = schemes_mod.mds_sweep_batched(
+                het, n, trials, _rng_at_spec(specs, het, seed, trials, n),
+                backend="numpy")
+            assert g.extra["L"] == L_solo
+
+    @given(K=st.integers(2, 12), mu=st.floats(5.0, 80.0),
+           n=st.integers(50, 20_000), trials=st.integers(4, 64),
+           L=st.integers(1, 12), seed=st.integers(0, 2**31 - 1))
+    @settings(**SETTINGS)
+    def test_fixed_L_time_samples_backend_path_is_exact(self, K, mu, n,
+                                                        trials, L, seed):
+        """The backend-routed mds_time_samples (numpy) is bit-identical
+        to the direct rng.gamma draw it replaced."""
+        L = min(L, K)
+        het = HetSpec.uniform_random(K, mu, mu * mu / 6,
+                                     np.random.default_rng(seed))
+        rng = np.random.default_rng(seed + 2)
+        m = int(np.ceil(n / L))
+        t = rng.gamma(shape=m, scale=1.0 / het.lambdas, size=(trials, K))
+        t.sort(axis=1)
+        want = t[:, L - 1]
+        got = schemes_mod.mds_time_samples(
+            het, n, L, trials, np.random.default_rng(seed + 2),
+            backend="numpy")
+        np.testing.assert_array_equal(got, want)
+
+
+def _rng_at_spec(specs, het, seed, trials, n):
+    """Replay the grid draw stream up to ``het``'s spec block: the cube is
+    spec-major, so spec g's sweep sees the rng after g earlier sweeps."""
+    rng = np.random.default_rng(seed)
+    for h in specs:
+        if h is het:
+            return rng
+        schemes_mod.mds_sweep_batched(h, n, trials, rng, backend="numpy")
+    raise AssertionError("spec not in grid")
 
 
 class TestCodedProperties:

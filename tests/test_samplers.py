@@ -29,9 +29,10 @@ def make_het(K=K, mu=20.0, sigma2=20.0 ** 2 / 6, seed=3):
 
 class TestBackendRegistry:
     def test_builtin_backends_registered(self):
-        assert {"numpy", "jax"} <= set(list_backends())
-        for name in ("numpy", "jax"):
+        assert {"numpy", "jax", "pallas"} <= set(list_backends())
+        for name in ("numpy", "jax", "pallas"):
             assert get_backend(name).name == name
+            assert get_backend(name).description
 
     def test_default_is_numpy(self, monkeypatch):
         monkeypatch.delenv(ENV_VAR, raising=False)
@@ -76,6 +77,82 @@ class TestBackendRegistry:
         rep = get_scheme("work_exchange").mc(make_het(), N, TRIALS, RNG(0),
                                              backend="numpy")
         assert rep.extra["backend"] == "numpy"
+
+
+class TestBackendValidationFix:
+    """Regression: an unknown backend -- kwarg OR env var -- must raise a
+    KeyError naming the registered backends from EVERY scheme's mc/mc_grid
+    entry point, including schemes that never draw through a backend
+    (previously the name was silently ignored there, and the env-var path
+    could only fail far downstream)."""
+
+    # one loop-based, one static-batched, one redundant-batched, one
+    # engine-backed, plus the sweep scheme: the full mc override surface
+    SCHEMES = ("oracle", "fixed", "mds", "het_mds", "work_exchange",
+               "trace_replay")
+
+    @pytest.mark.parametrize("name", SCHEMES)
+    def test_kwarg_nosuch_raises_keyerror(self, name):
+        with pytest.raises(KeyError, match="nosuch.*numpy"):
+            get_scheme(name).mc(make_het(), 1_000, 2, RNG(0),
+                                backend="nosuch")
+
+    @pytest.mark.parametrize("name", SCHEMES)
+    def test_env_nosuch_raises_keyerror(self, name, monkeypatch):
+        monkeypatch.setenv(ENV_VAR, "nosuch")
+        with pytest.raises(KeyError, match="nosuch.*numpy"):
+            get_scheme(name).mc(make_het(), 1_000, 2, RNG(0))
+
+    @pytest.mark.parametrize("name", ("fixed", "mds", "het_mds",
+                                      "work_exchange"))
+    def test_mc_grid_nosuch_raises_keyerror(self, name, monkeypatch):
+        monkeypatch.setenv(ENV_VAR, "nosuch")
+        with pytest.raises(KeyError, match="nosuch.*numpy"):
+            get_scheme(name).mc_grid([make_het()], 1_000, 2, RNG(0))
+
+    def test_error_lists_registered_backends(self):
+        with pytest.raises(KeyError) as ei:
+            get_scheme("oracle").mc(make_het(), 1_000, 2, RNG(0),
+                                    backend="nosuch")
+        for registered in list_backends():
+            assert registered in str(ei.value)
+
+    def test_loop_engine_still_validates_backend(self):
+        # regression: engine="loop" used to drop the kwarg entirely
+        with pytest.raises(KeyError, match="nosuch"):
+            get_scheme("work_exchange", engine="loop").mc(
+                make_het(), 1_000, 2, RNG(0), backend="nosuch")
+
+
+class TestGammaRows:
+    """The per-backend batched Gamma primitive the MDS sweep draws on."""
+
+    @pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+    def test_broadcast_shapes_including_R_equals_K(self, backend):
+        # regression: a 1-D (K,) scale with R == K used to be padded as
+        # if it carried the batch rows, crashing the jitted kernel
+        from repro.core.samplers import get_gamma_rows
+        draw = get_gamma_rows(backend)
+        K = 8
+        for shape_rows, scale in (
+                (np.full((K, 1), 50.0), np.full(K, 0.1)),      # R == K
+                (np.full((3, 1), 20.0), np.full((1, K), 0.2)),
+                (np.full((5, K), 10.0), np.full((5, K), 0.5))):
+            out = draw(shape_rows, scale, RNG(1))
+            R = np.broadcast_shapes(shape_rows.shape,
+                                    np.asarray(scale).shape)[0]
+            assert out.shape == (R, K)
+            assert np.isfinite(out).all() and (out > 0).all()
+
+    @pytest.mark.parametrize("backend", ["jax", "pallas"])
+    def test_mean_matches_exact_numpy(self, backend):
+        from repro.core.samplers import get_gamma_rows
+        shape_rows = np.full((4096, 4), 12.0)
+        scale = np.full(4, 0.25)
+        g = get_gamma_rows(backend)(shape_rows, scale, RNG(2))
+        n = g.size
+        se = np.sqrt(12.0 + 1 / 9) * 0.25 / np.sqrt(n)
+        assert abs(g.mean() - 3.0) < 6 * se
 
 
 # ---------------------------------------------------------------------------
