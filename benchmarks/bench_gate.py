@@ -39,6 +39,7 @@ WALL_KEYS_GRID = ("pr1_numpy_loop_s", "numpy_grid_s", "jax_grid_s",
                   "pallas_grid_s")
 WALL_KEYS_MDS = ("pr2_loop_s", "numpy_grid_s", "jax_grid_s",
                  "pallas_grid_s")
+WALL_KEYS_SHARDED = ("single_jax_s", "sharded_jax_s")
 
 
 def load(path: str) -> dict:
@@ -61,6 +62,12 @@ def collect_walls(report: dict) -> dict:
     for key in WALL_KEYS_MDS:
         if key in mds:
             walls[f"mds_grid.{key}"] = float(mds[key])
+    sharded = report.get("fig5_sharded", {})
+    # only comparable when both runs saw the same device count
+    for key in WALL_KEYS_SHARDED:
+        if key in sharded:
+            walls[f"fig5_sharded.{key}@{sharded.get('devices')}dev"] = \
+                float(sharded[key])
     return walls
 
 

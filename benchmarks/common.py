@@ -32,7 +32,7 @@ def we_cfg(known: bool, threshold_frac: float = THRESHOLD_FRAC
 # registry-resolved scheme panel shared by the figure drivers; extend this
 # tuple (or register a new scheme) and it shows up in fig5 + the BENCH json
 FIG_SCHEMES = ("mds", "fixed", "work_exchange", "work_exchange_unknown",
-               "het_mds")
+               "het_mds", "hedged")
 
 
 def scheme_panel() -> Dict[str, Scheme]:

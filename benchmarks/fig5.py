@@ -1,21 +1,24 @@
-"""Paper Figure 5: mean computation time of all five schemes.
+"""Paper Figure 5: mean computation time of all registered panel schemes.
 
 N = 1e6 points over K = 50 workers, four values of mu-hat = lambda_sum/K,
-two heterogeneity levels (sigma^2 = 0 and mu^2/6).  Every scheme is
-resolved through ``SCHEME_REGISTRY`` -- register a scheme and add its
-name to ``benchmarks.common.FIG_SCHEMES`` and it appears in this figure
-(and the BENCH json) with no further wiring.
+two heterogeneity levels (sigma^2 = 0 and mu^2/6).
 
-The whole (mu, sigma^2) panel goes through ``Scheme.mc_grid`` -- one
-engine dispatch per scheme for the full grid instead of a Python loop of
-``mc()`` calls -- and inherits the sampler backend from
-``REPRO_SAMPLER_BACKEND`` (or the ``backend=`` argument).
+The whole study is ONE declarative ``ExperimentSpec`` resolved through
+``repro.experiments``: the scheme panel (``benchmarks.common.FIG_SCHEMES``
+-- register a scheme, add its name, and it appears here and in the BENCH
+json), the (mu, sigma^2) ``ScenarioGrid`` with per-mu pinned
+heterogeneity draws, and the execution knobs (sampler backend, device
+sharding).  Each scheme task draws from its own fresh
+``default_rng(1234)``, so the numpy-backend numbers are seed-for-seed
+bit-identical to the pre-spec drivers (pinned by
+``tests/test_experiments.py``).  Pass ``store=`` to land the result in
+the content-addressed store and make unchanged re-runs cache hits.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from .common import N_PAPER, TRIALS, make_het, scheme_panel
+from repro.experiments import (ExperimentResult, ExperimentSpec,
+                               ScenarioGrid, run_experiment, scheme_spec)
+from .common import FIG_SCHEMES, K_PAPER, N_PAPER, TRIALS, make_het
 
 MUS = (10.0, 20.0, 50.0, 100.0)
 SIGMA_LEVELS = (("0", 0.0), ("mu^2/6", 1.0 / 6.0))   # sigma2 = frac * mu^2
@@ -34,18 +37,28 @@ def grid_specs(quick: bool = False):
             for mu, _, sigma2 in grid_points(quick)]
 
 
-def run(trials: int = TRIALS, n: int = N_PAPER, quick: bool = False,
-        backend: str | None = None):
-    points = grid_points(quick)
-    specs = grid_specs(quick)
-    rows = [{"mu": mu, "sigma2": lbl, "lambda_sum": het.lambda_sum,
-             "oracle": n / het.lambda_sum}
-            for (mu, lbl, _), het in zip(points, specs)]
-    for name, scheme in scheme_panel().items():
-        reports = scheme.mc_grid(specs, n, trials=trials,
-                                 rng=np.random.default_rng(1234),
-                                 backend=backend)
-        for row, rep in zip(rows, reports):
+def experiment(trials: int = TRIALS, n: int = N_PAPER, quick: bool = False,
+               backend: str | None = None,
+               devices: int | str = 1) -> ExperimentSpec:
+    """The figure as a declarative spec (same draws as ``grid_specs``)."""
+    points = [(mu, sigma2, int(mu)) for mu, _, sigma2 in grid_points(quick)]
+    return ExperimentSpec(
+        name="fig5-quick" if quick else "fig5",
+        grid=ScenarioGrid(K=K_PAPER, points=points),
+        schemes=tuple(scheme_spec(name) for name in FIG_SCHEMES),
+        N=n, trials=trials, seed=1234, backend=backend, devices=devices)
+
+
+def rows_from(result: ExperimentResult):
+    """Legacy row dicts (CSV schema) from an experiment result."""
+    points = result.spec.grid.points
+    hets = result.spec.grid.specs()
+    n = result.spec.N
+    rows = [{"mu": mu, "sigma2": "0" if sigma2 == 0 else "mu^2/6",
+             "lambda_sum": het.lambda_sum, "oracle": n / het.lambda_sum}
+            for (mu, sigma2, _), het in zip(points, hets)]
+    for name in result.keys():
+        for row, rep in zip(rows, result.report(name)):
             row[name] = rep.t_comp
             if "L" in rep.extra:
                 row[f"{name}_L"] = int(rep.extra["L"])
@@ -57,6 +70,13 @@ def run(trials: int = TRIALS, n: int = N_PAPER, quick: bool = False,
             if new in row:
                 row[old] = row[new]
     return rows
+
+
+def run(trials: int = TRIALS, n: int = N_PAPER, quick: bool = False,
+        backend: str | None = None, store=None, force: bool = False):
+    result = run_experiment(experiment(trials, n, quick, backend),
+                            store=store, force=force)
+    return rows_from(result)
 
 
 def validate(rows) -> list[str]:

@@ -2,15 +2,19 @@
 iterations I versus heterogeneity variance sigma^2, for work exchange
 with and without heterogeneity knowledge (mu = 50, K = 50, N = 1e6).
 
-The whole (sigma^2 x heterogeneity-draw) scenario grid runs through one
-``mc_grid`` dispatch per variant; the sampler backend follows
-``REPRO_SAMPLER_BACKEND`` / the ``backend=`` argument."""
+One declarative ``ExperimentSpec``: the (sigma^2 x heterogeneity-draw)
+scenario grid plus two scheme tasks (known / unknown variant), both
+seeded at 2024 so the numpy-backend numbers are seed-for-seed
+bit-identical to the pre-spec driver.  The sampler backend and device
+sharding ride on the spec; ``store=`` lands the result in the
+content-addressed store."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.schemes import get_scheme
-from .common import HET_DRAWS, N_PAPER, THRESHOLD_FRAC, make_het
+from repro.experiments import (ExperimentResult, ExperimentSpec,
+                               ScenarioGrid, run_experiment, scheme_spec)
+from .common import HET_DRAWS, K_PAPER, N_PAPER, THRESHOLD_FRAC
 
 MU = 50.0
 SIGMA2S = (0.0, 166.0, 333.0, 500.0, 666.0, 833.0)   # up to mu^2/3
@@ -18,26 +22,36 @@ SIGMA2S = (0.0, 166.0, 333.0, 500.0, 666.0, 833.0)   # up to mu^2/3
 VARIANTS = (("known", "work_exchange"), ("unknown", "work_exchange_unknown"))
 
 
-def run(n: int = N_PAPER, draws: int = HET_DRAWS, trials: int = 4,
-        quick: bool = False, backend: str | None = None):
+def experiment(n: int = N_PAPER, draws: int = HET_DRAWS, trials: int = 4,
+               quick: bool = False,
+               backend: str | None = None) -> ExperimentSpec:
     sigma2s = SIGMA2S[::2] if quick else SIGMA2S
     n_draws = max(4, draws // 4) if quick else draws
     # the full grid is (sigma^2 x draw): one spec per cell, grid-major
-    specs = [make_het(MU, sigma2, seed=1000 + d)
-             for sigma2 in sigma2s for d in range(n_draws)]
-    per_variant = {}
-    for label, name in VARIANTS:
-        scheme = get_scheme(name, threshold_frac=THRESHOLD_FRAC)
-        per_variant[label] = scheme.mc_grid(
-            specs, n, trials=trials, rng=np.random.default_rng(2024),
-            backend=backend)
+    points = [(MU, sigma2, 1000 + d)
+              for sigma2 in sigma2s for d in range(n_draws)]
+    return ExperimentSpec(
+        name="fig6-quick" if quick else "fig6",
+        grid=ScenarioGrid(K=K_PAPER, points=points),
+        schemes=tuple(scheme_spec(name, key=label,
+                                  threshold_frac=THRESHOLD_FRAC)
+                      for label, name in VARIANTS),
+        N=n, trials=trials, seed=2024, backend=backend)
+
+
+def rows_from(result: ExperimentResult):
+    n = result.spec.N
+    sigma2s = sorted({s2 for _, s2, _ in result.spec.grid.points})
+    n_draws = len(result.spec.grid) // len(sigma2s)
     rows = []
     for i, sigma2 in enumerate(sigma2s):
         cell = slice(i * n_draws, (i + 1) * n_draws)
-        comm = {lbl: np.array([r.n_comm / n for r in reps[cell]])
-                for lbl, reps in per_variant.items()}
-        iters = {lbl: np.array([r.iterations for r in reps[cell]])
-                 for lbl, reps in per_variant.items()}
+        comm = {lbl: np.array([r.n_comm / n
+                               for r in result.report(lbl)[cell]])
+                for lbl, _ in VARIANTS}
+        iters = {lbl: np.array([r.iterations
+                                for r in result.report(lbl)[cell]])
+                 for lbl, _ in VARIANTS}
         rows.append({
             "sigma2": sigma2,
             "comm_known": float(comm["known"].mean()),
@@ -48,6 +62,14 @@ def run(n: int = N_PAPER, draws: int = HET_DRAWS, trials: int = 4,
             "iters_unknown": float(iters["unknown"].mean()),
         })
     return rows
+
+
+def run(n: int = N_PAPER, draws: int = HET_DRAWS, trials: int = 4,
+        quick: bool = False, backend: str | None = None, store=None,
+        force: bool = False):
+    result = run_experiment(experiment(n, draws, trials, quick, backend),
+                            store=store, force=force)
+    return rows_from(result)
 
 
 def validate(rows) -> list[str]:

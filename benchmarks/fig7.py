@@ -2,14 +2,16 @@
 N_rem^th for the unknown-heterogeneity work exchange (mu = 50), and the
 companion claim that T_comp stays near-oracle at the default threshold.
 
-The threshold is a Scheme constructor parameter, so the sweep is one
-``mc_grid`` dispatch over the sigma^2 axis per threshold value."""
+The threshold is a scheme constructor parameter, so the sweep is one
+declarative ``ExperimentSpec`` with one task per threshold value (each
+with its historical per-threshold seed, keeping the numpy numbers
+seed-for-seed bit-identical to the pre-spec driver) over the sigma^2
+scenario grid."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core.schemes import get_scheme
-from .common import N_PAPER, make_het
+from repro.experiments import (ExperimentResult, ExperimentSpec,
+                               ScenarioGrid, run_experiment, scheme_spec)
+from .common import K_PAPER, N_PAPER
 
 MU = 50.0
 SIGMA2S = (0.0, 277.0, 833.0)
@@ -17,23 +19,42 @@ SIGMA2S = (0.0, 277.0, 833.0)
 THRESH_FRACS = (0.001, 0.005, 0.01, 0.05, 0.2, 0.5)
 
 
-def run(n: int = N_PAPER, trials: int = 8, quick: bool = False,
-        backend: str | None = None):
-    rows = []
+def experiment(n: int = N_PAPER, trials: int = 8, quick: bool = False,
+               backend: str | None = None) -> ExperimentSpec:
     fracs = THRESH_FRACS[::2] if quick else THRESH_FRACS
     sigma2s = SIGMA2S[::2] if quick else SIGMA2S
-    specs = [make_het(MU, sigma2, seed=int(sigma2) + 7) for sigma2 in sigma2s]
-    oracle_ts = [n / het.lambda_sum for het in specs]
-    for frac in fracs:
-        scheme = get_scheme("work_exchange_unknown", threshold_frac=frac)
-        reports = scheme.mc_grid(specs, n, trials=trials,
-                                 rng=np.random.default_rng(int(frac * 1e6)),
-                                 backend=backend)
-        for sigma2, oracle_t, rep in zip(sigma2s, oracle_ts, reports):
+    points = [(MU, sigma2, int(sigma2) + 7) for sigma2 in sigma2s]
+    return ExperimentSpec(
+        name="fig7-quick" if quick else "fig7",
+        grid=ScenarioGrid(K=K_PAPER, points=points),
+        schemes=tuple(scheme_spec("work_exchange_unknown",
+                                  key=f"th={frac}", threshold_frac=frac,
+                                  seed=int(frac * 1e6))
+                      for frac in fracs),
+        N=n, trials=trials, backend=backend)
+
+
+def rows_from(result: ExperimentResult):
+    n = result.spec.N
+    hets = result.spec.grid.specs()
+    sigma2s = [s2 for _, s2, _ in result.spec.grid.points]
+    oracle_ts = [n / het.lambda_sum for het in hets]
+    rows = []
+    for key in result.keys():
+        frac = float(key.split("=", 1)[1])
+        for sigma2, oracle_t, rep in zip(sigma2s, oracle_ts,
+                                         result.report(key)):
             rows.append({"sigma2": sigma2, "threshold_frac": frac,
                          "iters": rep.iterations,
                          "t_comp_over_oracle": rep.t_comp / oracle_t})
     return rows
+
+
+def run(n: int = N_PAPER, trials: int = 8, quick: bool = False,
+        backend: str | None = None, store=None, force: bool = False):
+    result = run_experiment(experiment(n, trials, quick, backend),
+                            store=store, force=force)
+    return rows_from(result)
 
 
 def validate(rows) -> list[str]:

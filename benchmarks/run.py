@@ -1,16 +1,28 @@
 """Benchmark harness: one entry per paper figure + the roofline table.
 
 Emits ``name,value,derived`` CSV rows and validates the paper's claims
-against this reproduction.  Also writes ``results/BENCH_schemes.json``:
-per-scheme mean T_comp through the registry, wall-clock of the
-work-exchange MC engine (per-trial loop vs vectorized), the fig5
-scenario-grid benchmark (PR-1 per-point ``mc()`` loop vs one-dispatch
-``mc_grid`` on the numpy / jax / pallas sampler backends), and the
-``mds_grid`` benchmark (batched MDS L-sweep vs the PR-2 per-L loop), so
-the perf trajectory is tracked across PRs (see ``benchmarks.bench_gate``).
+against this reproduction.  The figure studies run as declarative
+``ExperimentSpec``s through ``repro.experiments``: each result lands in
+the content-addressed store (``results/store/<spec-hash>.json``) and the
+claim checks are validated against the report *read back from the
+store*, so what the gate certifies is exactly what the store serves.
+
+Also writes ``results/BENCH_schemes.json``: per-scheme mean T_comp
+through the registry, wall-clock of the work-exchange MC engine
+(per-trial loop vs vectorized), the fig5 scenario-grid benchmark (PR-1
+per-point ``mc()`` loop vs one-dispatch ``mc_grid`` on the numpy / jax /
+pallas sampler backends), the ``mds_grid`` benchmark (batched MDS
+L-sweep vs the PR-2 per-L loop), and the ``fig5_sharded`` benchmark
+(single-device vs shard_map multi-device jax execution of the fig5 WE
+grid), so the perf trajectory is tracked across PRs
+(see ``benchmarks.bench_gate``).
 
 Set REPRO_BENCH_QUICK=1 for a fast smoke pass.  The sampler backend for
 the figure sweeps follows REPRO_SAMPLER_BACKEND (default numpy).
+REPRO_BENCH_DEVICES (default 4) forces that many simulated host devices
+for the sharded benchmark when no real multi-device platform is
+attached; REPRO_BENCH_CACHED=1 lets figure runs reuse store hits
+instead of recomputing.
 
 Exit codes distinguish the two failure modes:
   0 -- every paper-claim check passed
@@ -27,6 +39,17 @@ import traceback
 from pathlib import Path
 
 QUICK = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
+CACHED = bool(int(os.environ.get("REPRO_BENCH_CACHED", "0")))
+BENCH_DEVICES = int(os.environ.get("REPRO_BENCH_DEVICES", "4"))
+
+# simulated host devices for the sharded-grid benchmark: must be set
+# before the first jax import anywhere in the process
+if (BENCH_DEVICES > 1
+        and "xla_force_host_platform_device_count"
+        not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={BENCH_DEVICES}").strip()
 
 EXIT_VALIDATION_FAILED = 1
 EXIT_CRASHED = 2
@@ -36,13 +59,28 @@ def _emit(name: str, value, derived=""):
     print(f"{name},{value},{derived}")
 
 
+def _stored_result(mod, **kwargs):
+    """Run a figure experiment through the store and hand back the rows
+    REREAD from the stored entry -- claim validation is routed through
+    the content-addressed record, not the in-memory run."""
+    from repro.experiments import default_store, run_experiment
+
+    store = default_store()
+    spec = mod.experiment(quick=QUICK, **kwargs)
+    result = run_experiment(spec, store=store, force=not CACHED)
+    stored = store.get(result.spec_hash)
+    _emit(f"{spec.name}.store", result.spec_hash[:16],
+          "cache-hit" if result.cache_hit else "computed")
+    return mod.rows_from(stored if stored is not None else result)
+
+
 def run_fig5():
     from . import fig5
-    rows = fig5.run(quick=QUICK)
+    rows = _stored_result(fig5)
     for r in rows:
         tag = f"fig5[mu={r['mu']},s2={r['sigma2']}]"
         for scheme in ("oracle", "mds_opt", "fixed", "we_known",
-                       "we_unknown", "het_mds"):
+                       "we_unknown", "het_mds", "hedged"):
             if scheme not in r:      # panel member removed from FIG_SCHEMES
                 continue
             _emit(f"{tag}.{scheme}_T_comp_s", f"{r[scheme]:.4f}",
@@ -52,7 +90,7 @@ def run_fig5():
 
 def run_fig6():
     from . import fig6
-    rows = fig6.run(quick=QUICK)
+    rows = _stored_result(fig6)
     for r in rows:
         tag = f"fig6[s2={r['sigma2']:.0f}]"
         _emit(f"{tag}.comm_known_frac", f"{r['comm_known']:.5f}",
@@ -66,7 +104,7 @@ def run_fig6():
 
 def run_fig7():
     from . import fig7
-    rows = fig7.run(quick=QUICK)
+    rows = _stored_result(fig7)
     for r in rows:
         _emit(f"fig7[s2={r['sigma2']:.0f},th={r['threshold_frac']}].iters",
               f"{r['iters']:.2f}",
@@ -229,6 +267,84 @@ def _bench_mds_grid(n: int, trials: int = 1000, opt_trials: int = 500,
     }
 
 
+def _bench_fig5_sharded(n: int, trials: int = 1000, reps: int = 5):
+    """The multi-device lever: fig5's work-exchange grid on the jax
+    backend, single-device dispatch vs the shard_map executor
+    (``repro.core.samplers.grid_sharding``) over the attached devices
+    (simulated host devices on CPU runners -- see REPRO_BENCH_DEVICES).
+
+    Times the two work-exchange schemes (the backend-routed, dominant
+    cost of the panel); static/coded schemes draw host-side numpy
+    regardless of backend and are unaffected by sharding.  Alongside the
+    walls it records the statistical agreement between the two paths
+    (max |mean drift| in combined standard errors over schemes x grid
+    points) -- sharded runs use independent per-device key streams, so
+    agreement is the 6-SE statistical contract, not bit-identity.
+    """
+    if QUICK:
+        trials, reps = 200, 2
+    import numpy as np
+
+    from repro.core.samplers import grid_sharding
+    from repro.core.schemes import get_scheme
+    from . import fig5
+
+    try:
+        import jax
+        devices = len(jax.devices())
+    except Exception as e:      # pragma: no cover - jax always in CI
+        return {"skipped": f"jax unavailable: {e}"}
+    if devices < 2:
+        return {"skipped": f"single-device host ({devices} device)"}
+
+    specs = fig5.grid_specs(quick=QUICK)
+    schemes = ("work_exchange", "work_exchange_unknown")
+
+    def sweep(keep=False):
+        out = {}
+        for name in schemes:
+            out[name] = get_scheme(name).mc_grid(
+                specs, n, trials=trials, rng=np.random.default_rng(1234),
+                backend="jax", keep_trials=keep)
+        return out
+
+    # warm both paths (jit compilation is cached per batch-shape bucket)
+    single_reports = sweep(keep=True)
+    with grid_sharding():
+        sharded_reports = sweep(keep=True)
+    drift_se = 0.0
+    for name in schemes:
+        for a, b in zip(single_reports[name], sharded_reports[name]):
+            se = float(np.hypot(a.t_comp_std, b.t_comp_std)
+                       / np.sqrt(trials))
+            drift_se = max(drift_se, abs(a.t_comp - b.t_comp) / se)
+
+    walls = {"single": [], "sharded": []}
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        sweep()
+        walls["single"].append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        with grid_sharding():
+            sweep()
+        walls["sharded"].append(time.perf_counter() - t0)
+    single_s = min(walls["single"])
+    sharded_s = min(walls["sharded"])
+    return {
+        "N": n, "trials": trials, "grid_points": len(specs),
+        "K": int(specs[0].K), "devices": devices, "wall_reps": reps,
+        "schemes": list(schemes),
+        "single_jax_s": round(single_s, 4),
+        "sharded_jax_s": round(sharded_s, 4),
+        "speedup_sharded_vs_single": round(single_s / sharded_s, 2),
+        "max_mean_drift_se": round(drift_se, 2),
+        "note": "fig5 work-exchange grid, jax backend: one-device "
+                "dispatch vs shard_map over all attached devices "
+                "(simulated host devices on CPU runners; per-device key "
+                "streams, so agreement is statistical, not bitwise)",
+    }
+
+
 def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     """Per-scheme MC means + engine/grid wall-clock, machine-readable."""
     import numpy as np
@@ -242,7 +358,7 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     report = {"config": {"K": K_PAPER, "N": n, "mu": 50.0,
                          "sigma2": "mu^2/6", "trials": trials},
               "schemes": {}, "mc_engine": {}, "fig5_grid": {},
-              "mds_grid": {}}
+              "mds_grid": {}, "fig5_sharded": {}}
 
     # per-trial-loop schemes walk unit ids in Python: bound their budget
     # (the JSON records the actual N/trials used -- no silent caps)
@@ -291,17 +407,23 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
 
     report["fig5_grid"] = _bench_fig5_grid(n)
     report["mds_grid"] = _bench_mds_grid(n)
+    report["fig5_sharded"] = _bench_fig5_sharded(n)
 
     out_path.parent.mkdir(parents=True, exist_ok=True)
     out_path.write_text(json.dumps(report, indent=2))
     g = report["fig5_grid"]
     m = report["mds_grid"]
+    s = report["fig5_sharded"]
+    shard_note = (f"sharded {s['speedup_sharded_vs_single']}x on "
+                  f"{s['devices']} devices"
+                  if "speedup_sharded_vs_single" in s
+                  else f"sharded: {s.get('skipped', 'n/a')}")
     print(f"# wrote {out_path} (engine speedup "
           f"{report['mc_engine']['speedup']}x; fig5 grid: jax "
           f"{g['speedup_jax_vs_pr1_loop']}x vs PR1 loop, "
           f"{g['speedup_jax_vs_pr1_loop_incl_compile']}x incl compile, "
           f"pallas {g['speedup_pallas_vs_pr1_loop']}x; mds grid: best "
-          f"{m['speedup_best_vs_pr2_loop']}x vs PR2 loop)",
+          f"{m['speedup_best_vs_pr2_loop']}x vs PR2 loop; {shard_note})",
           file=sys.stderr)
     return []
 

@@ -1,10 +1,14 @@
 """Regenerate every paper figure's data to CSV under results/figures/.
 
-The figure modules resolve every policy through the scheme registry
-(``repro.core.schemes``); a newly registered scheme shows up in the fig5
-CSV automatically via ``benchmarks.common.FIG_SCHEMES``.
+The figure modules are declarative ``ExperimentSpec``s resolved through
+``repro.experiments`` (``benchmarks/fig5|6|7.py``); a newly registered
+scheme shows up in the fig5 CSV automatically via
+``benchmarks.common.FIG_SCHEMES``.  Results go through the
+content-addressed store (``results/store/<spec-hash>.json``), so
+regenerating with unchanged specs is served from cache -- pass --fresh
+to force recomputation.
 
-Run:  PYTHONPATH=src python examples/paper_figures.py [--quick]
+Run:  PYTHONPATH=src python examples/paper_figures.py [--quick] [--fresh]
 """
 import argparse
 import csv
@@ -15,6 +19,7 @@ from pathlib import Path
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import fig5, fig6, fig7
+from repro.experiments import ResultsStore
 
 
 def dump(rows, path: Path):
@@ -29,12 +34,17 @@ def dump(rows, path: Path):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--fresh", action="store_true",
+                    help="recompute even when the store has the spec")
     ap.add_argument("--out", default="results/figures")
+    ap.add_argument("--store", default="results/store")
     args = ap.parse_args()
     out = Path(args.out)
-    dump(fig5.run(quick=args.quick), out / "fig5_completion_time.csv")
-    dump(fig6.run(quick=args.quick), out / "fig6_comm_and_iters.csv")
-    dump(fig7.run(quick=args.quick), out / "fig7_threshold.csv")
+    store = ResultsStore(args.store)
+    kw = dict(quick=args.quick, store=store, force=args.fresh)
+    dump(fig5.run(**kw), out / "fig5_completion_time.csv")
+    dump(fig6.run(**kw), out / "fig6_comm_and_iters.csv")
+    dump(fig7.run(**kw), out / "fig7_threshold.csv")
     print("done")
 
 

@@ -8,10 +8,12 @@
        report = get_scheme("work_exchange").mc(het, N, trials, rng)
        print(report.t_comp, report.iterations, report.n_comm)
 
-3. Sweeps a whole (mu, sigma^2) scenario grid in ONE engine dispatch via
-   ``mc_grid`` -- the sampler backend (exact numpy engine, or the fused
-   jitted jax pipeline) comes from REPRO_SAMPLER_BACKEND or the
-   ``backend=`` argument.
+3. Declares a whole (mu, sigma^2) scenario study as an ``ExperimentSpec``
+   (``repro.experiments``) and resolves it through the single engine
+   entry point: the sampler backend (exact numpy engine, fused jitted
+   jax pipeline, pallas kernel) and the device sharding knob ride on the
+   spec, results land in the content-addressed store, and re-running the
+   unchanged spec is a cache hit.
 
 4. Runs a REAL tiny-transformer training step under the work-exchange
    scheduler (virtual clocks, real gradients) -- the same registry
@@ -20,6 +22,7 @@
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import dataclasses
+import tempfile
 
 import jax
 import numpy as np
@@ -28,6 +31,8 @@ from repro.configs import get_config, smoke_config
 from repro.core import HetSpec, get_scheme, list_schemes, resolve_backend
 from repro.data import UnitStore
 from repro.distributed.hetsched import HetTrainer
+from repro.experiments import (ExperimentSpec, ResultsStore, ScenarioGrid,
+                               run_experiment, scheme_spec)
 from repro.models import build_model
 from repro.optim import AdamW
 
@@ -43,7 +48,7 @@ def main():
     print(f"oracle lower bound (Thm 1):       {oracle:.3f} s")
 
     panel = ("mds", "fixed", "work_exchange", "work_exchange_unknown",
-             "het_mds")
+             "het_mds", "hedged")
     for name in panel:
         rep = get_scheme(name).mc(het, N, trials=30, rng=rng)
         extra = "".join(f" {k}={v:g}" for k, v in rep.extra.items()
@@ -53,18 +58,29 @@ def main():
               f"I={rep.iterations:5.1f}  N_comm/N={rep.n_comm / N:.4f}"
               f"{extra}")
 
-    # --- 2. a scenario grid in one engine dispatch --------------------------
+    # --- 2. a declarative experiment through the store ----------------------
     backend = resolve_backend()      # REPRO_SAMPLER_BACKEND or "numpy"
     mus = (10.0, 50.0, 100.0)
-    specs = [HetSpec.uniform_random(K, mu, mu * mu / 6, rng) for mu in mus]
-    print(f"\n(mu, sigma^2) grid through mc_grid, one '{backend}' backend "
-          f"dispatch for {len(specs)} x 30 runs:")
-    reports = get_scheme("work_exchange").mc_grid(specs, N, trials=30,
-                                                  rng=rng, backend=backend)
-    for mu, het_g, rep in zip(mus, specs, reports):
+    spec = ExperimentSpec(
+        name="quickstart",
+        grid=ScenarioGrid(K=K, points=[(mu, mu * mu / 6, int(mu))
+                                       for mu in mus]),
+        schemes=(scheme_spec("work_exchange"),),
+        N=N, trials=30, seed=7, backend=backend,
+        devices="auto")              # shards trials x scenarios if >1 device
+    store = ResultsStore(tempfile.mkdtemp(prefix="repro-store-"))
+    result = run_experiment(spec, store=store)
+    print(f"\nExperimentSpec {spec.name!r} through the '{backend}' backend "
+          f"({result.spec.devices} device(s)); stored at "
+          f"store/{result.spec_hash[:16]}....json:")
+    for (mu, _, _), het_g, rep in zip(spec.grid.points, spec.grid.specs(),
+                                      result.report("work_exchange")):
         print(f"  mu={mu:5.1f}  T_comp={rep.t_comp:8.3f} s "
               f"(oracle {N / het_g.lambda_sum:8.3f} s)  "
               f"I={rep.iterations:5.1f}")
+    again = run_experiment(spec, store=store)
+    print(f"  re-run with the unchanged spec: "
+          f"{'cache HIT, served from the store' if again.cache_hit else 'recomputed'}")
 
     # --- 3. real training under the work exchange scheduler ----------------
     print("\nwork exchange training (real gradients, virtual clocks):")

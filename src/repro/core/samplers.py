@@ -52,6 +52,7 @@ to the per-L loop; ``jax``/``pallas`` use their transform samplers).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 from typing import Callable, Dict, List, Literal, Optional, Tuple
@@ -159,6 +160,41 @@ def get_gamma_rows(name: str) -> GammaRowsFn:
     """The backend's batched Gamma-rows primitive (numpy fallback)."""
     fn = get_backend(name).gamma_rows
     return fn if fn is not None else gamma_rows_numpy
+
+
+# ---------------------------------------------------------------------------
+# multi-device grid sharding (the experiment engine's scale layer)
+# ---------------------------------------------------------------------------
+
+_GRID_MESH: List[Optional[object]] = [None]   # active jax Mesh, or None
+
+
+@contextlib.contextmanager
+def grid_sharding(devices: Optional[int] = None):
+    """Shard backend grid dispatches across devices inside the context.
+
+    Builds a 1-D ``'grid'`` mesh (``repro.distributed.sharding.grid_mesh``)
+    over up to ``devices`` devices (None = all) and routes the ``jax`` and
+    ``pallas`` ``work_exchange_grid`` calls through a ``shard_map``
+    executor that splits the scenario x trials batch rows across it --
+    each device runs an independent round pipeline on its own key stream
+    (embarrassingly parallel, no collectives).  The ``numpy`` backend is
+    untouched: it stays the bit-exact single-device oracle.  With one
+    device the context is a no-op, so callers can wrap unconditionally.
+    """
+    from repro.distributed.sharding import grid_mesh
+    mesh = grid_mesh(devices)
+    prev = _GRID_MESH[0]
+    _GRID_MESH[0] = mesh if mesh.size > 1 else None
+    try:
+        yield mesh
+    finally:
+        _GRID_MESH[0] = prev
+
+
+def active_grid_mesh():
+    """The Mesh installed by ``grid_sharding``, or None outside it."""
+    return _GRID_MESH[0]
 
 
 # ---------------------------------------------------------------------------
@@ -511,6 +547,42 @@ def _build_jax_engine():
     return jax.jit(engine, static_argnames=("known",))
 
 
+_JAX_SHARDED: Dict[object, Callable] = {}    # Mesh -> jitted shard_map engine
+
+
+def _sharded_jax_engine(mesh):
+    """Jitted shard_map wrapper of the fused engine, cached per mesh.
+
+    Each device runs the whole ``lax.while_loop`` pipeline on its own
+    block of batch rows with its own rbg key -- no collectives, so the
+    shards never synchronize until the final gather.  ``check_rep=False``
+    because jax<=0.4 has no replication rule for ``while``.
+    """
+    if mesh in _JAX_SHARDED:
+        return _JAX_SHARDED[mesh]
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    global _JAX_ENGINE
+    if _JAX_ENGINE is None:
+        _JAX_ENGINE = _build_jax_engine()
+    eng = _JAX_ENGINE
+    spec = PartitionSpec(mesh.axis_names[0])
+
+    def sharded(keys, lam, n0, threshold, cap, known, max_iter):
+        def block(keys_b, lam_b):
+            return eng(keys_b[0], lam_b, n0, threshold, cap, known,
+                       max_iter)
+        return shard_map(block, mesh=mesh, in_specs=(spec, spec),
+                         out_specs=spec, check_rep=False)(keys, lam)
+
+    fn = jax.jit(sharded, static_argnames=("n0", "threshold", "cap",
+                                           "known", "max_iter"))
+    _JAX_SHARDED[mesh] = fn
+    return fn
+
+
 def work_exchange_grid_jax(lam: np.ndarray, N: int, cfg: ExchangeConfig,
                            trials: int, rng: np.random.Generator,
                            capped_mode: Literal["carry", "waterfill"]
@@ -547,11 +619,28 @@ def work_exchange_grid_jax(lam: np.ndarray, N: int, cfg: ExchangeConfig,
     # caches per shape, so fig5/fig6/fig7-sized grids land in a handful
     # of compilations per process instead of one per panel shape
     lam_rows, B = _pad_rows(lam_rows)
-    # rbg keys: counter-based bit generation is ~3x faster than threefry on
-    # CPU and ample for Monte Carlo
-    key = jax.random.key(int(rng.integers(2 ** 63 - 1)), impl="rbg")
-    t, it, cm = _JAX_ENGINE(key, lam_rows, float(N), float(threshold),
-                            cap, bool(known), int(cfg.max_iterations))
+    mesh = active_grid_mesh()
+    if mesh is not None:
+        # sharded executor: one independent engine per device over its
+        # block of rows, each on its own split of the key stream (NOT
+        # bit-identical to the single-device jax path; statistically
+        # equivalent -- the numpy oracle is the bit-exact reference)
+        D = int(mesh.size)
+        extra = (-lam_rows.shape[0]) % D
+        if extra:
+            lam_rows = np.concatenate(
+                [lam_rows, np.repeat(lam_rows[:1], extra, axis=0)])
+        keys = jax.random.split(
+            jax.random.key(int(rng.integers(2 ** 63 - 1)), impl="rbg"), D)
+        t, it, cm = _sharded_jax_engine(mesh)(
+            keys, lam_rows, float(N), float(threshold), cap, bool(known),
+            int(cfg.max_iterations))
+    else:
+        # rbg keys: counter-based bit generation is ~3x faster than
+        # threefry on CPU and ample for Monte Carlo
+        key = jax.random.key(int(rng.integers(2 ** 63 - 1)), impl="rbg")
+        t, it, cm = _JAX_ENGINE(key, lam_rows, float(N), float(threshold),
+                                cap, bool(known), int(cfg.max_iterations))
     return (np.asarray(t, dtype=np.float64)[:B],
             np.asarray(it, dtype=np.float64)[:B],
             np.asarray(cm, dtype=np.float64)[:B])
@@ -676,11 +765,18 @@ def work_exchange_grid_pallas(lam: np.ndarray, N: int, cfg: ExchangeConfig,
     # grids share a handful of compilations per process, and the bucket
     # is always a whole number of tiles
     lam_rows, B = _pad_rows(lam_rows, bucket=128)
-    seed = rng.integers(0, 2 ** 32, size=2, dtype=np.uint32)
+    mesh = active_grid_mesh()
+    if mesh is not None:
+        # sharded executor: one independent seed pair per device (each
+        # shard keys its Threefry counters from its own seed row)
+        seed = rng.integers(0, 2 ** 32, size=(int(mesh.size), 2),
+                            dtype=np.uint32)
+    else:
+        seed = rng.integers(0, 2 ** 32, size=2, dtype=np.uint32)
     t, it, cm = we_rounds_grid(lam_rows, seed, n0=float(N),
                                threshold=float(threshold), cap=cap,
                                known=bool(known),
-                               max_iter=int(cfg.max_iterations))
+                               max_iter=int(cfg.max_iterations), mesh=mesh)
     return t[:B], it[:B], cm[:B]
 
 
@@ -734,6 +830,7 @@ __all__ = [
     "ENV_VAR", "DEFAULT_BACKEND", "SAMPLER_BACKENDS", "SamplerBackend",
     "register_backend", "get_backend", "list_backends", "resolve_backend",
     "validate_backend", "get_gamma_rows",
+    "grid_sharding", "active_grid_mesh",
     "work_exchange_grid_numpy", "work_exchange_grid_jax",
     "work_exchange_grid_pallas", "gamma_rows_numpy", "gamma_rows_jax",
     "gamma_rows_pallas",

@@ -90,6 +90,43 @@ class MCReport:
     def c_std(self) -> float:
         return self.n_comm_std
 
+    # -- serialization (the results-store record format) ---------------------
+
+    def to_dict(self, include_trials: bool = True) -> Dict:
+        """JSON-able dict; the per-trial arrays ride along (as lists) only
+        when attached AND ``include_trials`` -- stored reports stay small
+        by default because ``mc(keep_trials=False)`` never attaches them."""
+        d = {
+            "scheme": self.scheme, "trials": self.trials,
+            "t_comp": self.t_comp, "t_comp_std": self.t_comp_std,
+            "iterations": self.iterations,
+            "iterations_std": self.iterations_std,
+            "n_comm": self.n_comm, "n_comm_std": self.n_comm_std,
+            "extra": dict(self.extra),
+        }
+        if include_trials:
+            for field in ("t_comp_trials", "iterations_trials",
+                          "n_comm_trials"):
+                arr = getattr(self, field)
+                if arr is not None:
+                    d[field] = [float(x) for x in arr]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "MCReport":
+        trials = {field: (np.asarray(d[field], dtype=np.float64)
+                          if d.get(field) is not None else None)
+                  for field in ("t_comp_trials", "iterations_trials",
+                                "n_comm_trials")}
+        return cls(scheme=d["scheme"], trials=int(d["trials"]),
+                   t_comp=float(d["t_comp"]),
+                   t_comp_std=float(d["t_comp_std"]),
+                   iterations=float(d["iterations"]),
+                   iterations_std=float(d["iterations_std"]),
+                   n_comm=float(d["n_comm"]),
+                   n_comm_std=float(d["n_comm_std"]),
+                   extra=dict(d.get("extra", {})), **trials)
+
 
 def _report(scheme: str, ts: np.ndarray, its: np.ndarray, cs: np.ndarray,
             keep_trials: bool = False,
@@ -1035,6 +1072,91 @@ class GradientCodedScheme(Scheme):
                         n_comm=float(sizes.sum() - N), n_done=n_done)
 
 
+@register_scheme("hedged", aliases=("replicate_slowest", "hedged_requests"))
+class HedgedScheme(Scheme):
+    """Replication-on-slowest (hedged requests, ROADMAP candidate).
+
+    The fastest worker is withheld as a hot spare; the other K-1 workers
+    take the heterogeneity-aware proportional shares of all N units.  The
+    spare mirrors the queue of the predicted straggler -- the lowest-rate
+    loaded worker, which has both the largest expected completion time
+    and (Var[T_k] = n_k / lambda_k^2) the heaviest tail -- and whichever
+    replica finishes first counts.  Classic tail-latency hedging: pay one
+    duplicated shard instead of coordination rounds; ``n_comm`` is the
+    duplicated units.  With K = 1 there is nobody to hedge with and the
+    scheme degenerates to the fixed assignment.
+    """
+
+    redundant = True    # the straggler's shard ships twice
+
+    def _layout(self, het: HetSpec, N: int):
+        """Per-worker primary loads + (spare, straggler) worker ids."""
+        loads = np.zeros(het.K, dtype=np.int64)
+        if het.K == 1:
+            loads[0] = N
+            return loads, None, None
+        spare = int(np.argmax(het.lambdas))
+        others = np.delete(np.arange(het.K), spare)
+        loads[others] = proportional_assignment(het.lambdas[others], N)
+        loaded = others[loads[others] > 0]
+        if loaded.size == 0:
+            return loads, None, None
+        strag = int(loaded[np.argmin(het.lambdas[loaded])])
+        return loads, spare, strag
+
+    def initial_sizes(self, het: HetSpec, N: int) -> np.ndarray:
+        loads, spare, strag = self._layout(het, N)
+        sizes = loads.copy()
+        if spare is not None:
+            sizes[spare] = loads[strag]      # the duplicated shard
+        return sizes
+
+    def _finish_times(self, het: HetSpec, N: int, trials: int,
+                      rng: np.random.Generator):
+        """Per-trial ``(t_comp, n_comm, t_strag_raw, t_spare)`` plus the
+        layout, all trials at once (draw order: primaries, then spare)."""
+        loads, spare, strag = self._layout(het, N)
+        busy = loads > 0
+        t_k = np.full((trials, het.K), -np.inf)   # idle never sets the max
+        t_k[:, busy] = rng.gamma(shape=loads[busy],
+                                 scale=1.0 / het.lambdas[busy],
+                                 size=(trials, int(busy.sum())))
+        if spare is None:
+            return (t_k.max(axis=1), np.zeros(trials), loads, spare, strag,
+                    None, None)
+        t_spare = rng.gamma(shape=loads[strag],
+                            scale=1.0 / het.lambdas[spare], size=trials)
+        t_eff = t_k.copy()
+        t_eff[:, strag] = np.minimum(t_k[:, strag], t_spare)
+        t_comp = t_eff.max(axis=1)          # spare's column is -inf
+        n_comm = np.full(trials, float(loads[strag]))
+        return t_comp, n_comm, loads, spare, strag, t_k[:, strag], t_spare
+
+    def simulate(self, het: HetSpec, N: int,
+                 rng: np.random.Generator) -> RunStats:
+        t_comp, n_comm, loads, spare, strag, t_strag, t_spare = \
+            self._finish_times(het, N, 1, rng)
+        n_done = loads.copy()
+        if spare is not None and float(t_spare[0]) < float(t_strag[0]):
+            # the spare's replica finished first: credit it, not the
+            # straggler (exactly one replica counts -- work conserved)
+            n_done[spare] = loads[strag]
+            n_done[strag] = 0
+        return RunStats(t_comp=float(t_comp[0]), iterations=1,
+                        n_comm=float(n_comm[0]), n_done=n_done)
+
+    def mc(self, het: HetSpec, N: int, trials: int,
+           rng: np.random.Generator, keep_trials: bool = False,
+           backend: Optional[str] = None) -> MCReport:
+        validate_backend(backend)
+        t_comp, n_comm, _, spare, strag, _, _ = \
+            self._finish_times(het, N, trials, rng)
+        extra = {} if spare is None else {"spare": float(spare),
+                                          "straggler": float(strag)}
+        return _report(self.name, t_comp, np.ones(trials), n_comm,
+                       keep_trials, extra=extra)
+
+
 __all__ = [
     "MCReport", "Scheme", "SCHEME_REGISTRY", "register_scheme", "get_scheme",
     "list_schemes", "simulate_work_exchange_scalar",
@@ -1042,5 +1164,5 @@ __all__ = [
     "mds_time_samples",
     "OracleScheme", "FixedScheme", "UniformScheme", "MDSScheme",
     "WorkExchangeScheme", "WorkExchangeUnknownScheme", "HetMDSScheme",
-    "TraceReplayScheme", "GradientCodedScheme",
+    "TraceReplayScheme", "GradientCodedScheme", "HedgedScheme",
 ]

@@ -11,23 +11,34 @@ Terminology follows the paper (Attia & Tandon, 2017):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import hashlib
+from typing import Any, Dict, Optional
 
 import numpy as np
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class HetSpec:
-    """Heterogeneity description of a K-worker cluster."""
+    """Heterogeneity description of a K-worker cluster.
+
+    Value-semantic: two specs with the same rate vector compare equal,
+    hash equal, and round-trip losslessly through ``to_dict`` /
+    ``from_dict`` (floats survive JSON exactly -- shortest-repr
+    round-trip), so a spec can key a dict, live in a set, and address a
+    results-store entry (``canonical_hash``).
+    """
 
     lambdas: np.ndarray  # shape (K,), rates > 0 (units/sec)
 
     def __post_init__(self):
-        lam = np.asarray(self.lambdas, dtype=np.float64)
+        # always copy: the array is frozen below and must not alias (and
+        # thereby freeze) a caller-owned buffer
+        lam = np.array(self.lambdas, dtype=np.float64)
         if lam.ndim != 1 or lam.size == 0:
             raise ValueError("lambdas must be a non-empty 1-D array")
         if np.any(lam < 0) or not np.all(np.isfinite(lam)):
             raise ValueError("lambdas must be finite and non-negative")
+        lam.setflags(write=False)
         object.__setattr__(self, "lambdas", lam)
 
     @property
@@ -37,6 +48,35 @@ class HetSpec:
     @property
     def lambda_sum(self) -> float:
         return float(self.lambdas.sum())
+
+    # -- value semantics ----------------------------------------------------
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, HetSpec):
+            return NotImplemented
+        return (self.lambdas.shape == other.lambdas.shape
+                and bool(np.all(self.lambdas == other.lambdas)))
+
+    def __hash__(self) -> int:
+        return hash(self._canonical_bytes())
+
+    def _canonical_bytes(self) -> bytes:
+        # fixed endianness so the hash is platform-stable
+        return self.lambdas.astype(">f8").tobytes()
+
+    def canonical_hash(self) -> str:
+        """Stable content hash of the exact float64 rate vector."""
+        return hashlib.sha256(self._canonical_bytes()).hexdigest()
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-able dict; exact (float -> shortest repr -> same float)."""
+        return {"lambdas": [float(x) for x in self.lambdas]}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "HetSpec":
+        return cls(np.asarray(d["lambdas"], dtype=np.float64))
 
     @staticmethod
     def uniform_random(K: int, mu: float, sigma2: float,

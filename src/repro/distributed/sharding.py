@@ -16,6 +16,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 # weights whose (in, out) trailing dims shard (FSDP, model)
@@ -186,6 +187,31 @@ def maybe_shard(x, *spec):
     if not nontrivial:
         return x
     return jax.lax.with_sharding_constraint(x, P(*out))
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo grid sharding (the experiment engine's device axis)
+# ---------------------------------------------------------------------------
+
+GRID_AXIS = "grid"
+
+
+def grid_mesh(devices: Optional[int] = None) -> jax.sharding.Mesh:
+    """1-D device mesh over the ``'grid'`` axis for batch-sharded
+    Monte-Carlo grids (``repro.core.samplers.grid_sharding`` /
+    ``repro.experiments``).
+
+    The scenario x trials batch of a grid dispatch is embarrassingly
+    parallel, so the executor shards its leading axis over this mesh with
+    ``shard_map`` -- no collectives, one independent round pipeline per
+    device.  ``devices=None`` takes every available device; an int is
+    clamped to what the host offers, so a spec requesting 4 devices still
+    runs (on fewer) on a single-device host.
+    """
+    devs = jax.devices()
+    n = (len(devs) if devices is None
+         else max(1, min(int(devices), len(devs))))
+    return jax.sharding.Mesh(np.asarray(devs[:n]), (GRID_AXIS,))
 
 
 BATCH_AXES = ("pod", "data")

@@ -1,0 +1,41 @@
+"""Declarative experiment API: spec -> plan -> engine -> store.
+
+The one-stop surface for the paper's (and related work's) study shape --
+schemes x scenario grid x N x trials -- with multi-device sharded
+execution and a content-addressed results store:
+
+    from repro.experiments import (ExperimentSpec, ScenarioGrid,
+                                   scheme_spec, run_experiment,
+                                   default_store)
+
+    spec = ExperimentSpec(
+        name="demo",
+        grid=ScenarioGrid(K=50, points=[(mu, mu * mu / 6, int(mu))
+                                        for mu in (10.0, 50.0)]),
+        schemes=(scheme_spec("work_exchange"), scheme_spec("hedged")),
+        N=1_000_000, trials=100, seed=1234,
+        backend="jax", devices="auto")
+
+    result = run_experiment(spec, store=default_store())
+    result.report("work_exchange")[0].t_comp
+
+Module map:
+    spec.py    -- ExperimentSpec / ScenarioGrid / SchemeSpec (JSON + hash)
+    plan.py    -- compile_plan: resolve backend/devices, validate tasks
+    engine.py  -- run_experiment / execute_plan (sharded mc_grid dispatch)
+    store.py   -- ResultsStore: results/store/<spec-hash>.json
+    __main__   -- CLI: python -m repro.experiments [spec.json | --demo]
+"""
+from .engine import ExperimentResult, execute_plan, run_experiment
+from .plan import Plan, SHARDED_BACKENDS, Task, compile_plan
+from .spec import (SPEC_VERSION, ExperimentSpec, ScenarioGrid, SchemeSpec,
+                   scheme_spec)
+from .store import DEFAULT_STORE_ROOT, ResultsStore, default_store
+
+__all__ = [
+    "SPEC_VERSION", "ExperimentSpec", "ScenarioGrid", "SchemeSpec",
+    "scheme_spec",
+    "Plan", "Task", "SHARDED_BACKENDS", "compile_plan",
+    "ExperimentResult", "execute_plan", "run_experiment",
+    "DEFAULT_STORE_ROOT", "ResultsStore", "default_store",
+]

@@ -1,0 +1,123 @@
+"""CLI for the declarative experiment API.
+
+    # run a spec file end-to-end through the store
+    python -m repro.experiments path/to/spec.json
+
+    # built-in quick demo spec (what the experiments-smoke CI job runs)
+    python -m repro.experiments --demo quick
+
+    # sharded execution on the jax backend over 4 devices
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        python -m repro.experiments --demo quick --backend jax --devices 4
+
+    # prove the cache: second run must be a content-address hit
+    python -m repro.experiments --demo quick --check-cache
+
+Exit codes: 0 ok, 1 bad spec / failed --check-cache.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .engine import ExperimentResult, run_experiment
+from .spec import ExperimentSpec, ScenarioGrid, scheme_spec
+from .store import ResultsStore, default_store
+
+
+def demo_spec(kind: str) -> ExperimentSpec:
+    if kind != "quick":
+        raise SystemExit(f"unknown demo {kind!r}; have: quick")
+    return ExperimentSpec(
+        name="demo-quick",
+        grid=ScenarioGrid(K=16, points=[(mu, mu * mu / 6, int(mu))
+                                        for mu in (10.0, 30.0)]),
+        schemes=(scheme_spec("work_exchange"),
+                 scheme_spec("work_exchange_unknown"),
+                 scheme_spec("hedged"),
+                 scheme_spec("mds", opt_trials=16)),
+        N=20_000, trials=64, seed=1234)
+
+
+def show(result: ExperimentResult, store: ResultsStore) -> None:
+    spec = result.spec
+    status = "cache HIT" if result.cache_hit else "computed"
+    print(f"experiment {spec.name!r}: backend={spec.backend} "
+          f"devices={spec.devices} N={spec.N} trials={spec.trials} "
+          f"grid={len(spec.grid)} points")
+    print(f"  spec hash {result.spec_hash}")
+    print(f"  {status} in {result.wall_s:.3f}s -> "
+          f"{store.path_for(result.spec_hash)}")
+    for key, rows in result.reports.items():
+        for g, rep in enumerate(rows):
+            extra = "".join(f" {k}={v:g}" for k, v in rep.extra.items()
+                            if isinstance(v, (int, float)))
+            print(f"  {key:24s} point {g}: T_comp={rep.t_comp:10.4f} "
+                  f"+- {rep.t_comp_std:8.4f}  I={rep.iterations:6.2f}  "
+                  f"N_comm={rep.n_comm:10.1f}{extra}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.experiments",
+        description="run a declarative experiment spec through the "
+                    "content-addressed results store")
+    ap.add_argument("spec", nargs="?", help="path to an ExperimentSpec "
+                                            "JSON file")
+    ap.add_argument("--demo", help="built-in demo spec (quick)")
+    ap.add_argument("--backend", help="override the sampler backend")
+    ap.add_argument("--devices", help="override the device count "
+                                      "(int or 'auto')")
+    ap.add_argument("--trials", type=int, help="override the trial budget")
+    ap.add_argument("--n", type=int, help="override N (work units)")
+    ap.add_argument("--store", default=None,
+                    help="store root (default results/store)")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute even on a store hit")
+    ap.add_argument("--check-cache", action="store_true",
+                    help="run twice; fail unless the second run is a "
+                         "content-address hit")
+    args = ap.parse_args(argv)
+
+    if bool(args.spec) == bool(args.demo):
+        ap.error("give exactly one of: a spec file, or --demo")
+    if args.spec:
+        spec = ExperimentSpec.from_json(Path(args.spec).read_text())
+    else:
+        spec = demo_spec(args.demo)
+
+    overrides = {}
+    if args.backend:
+        overrides["backend"] = args.backend
+    if args.devices:
+        overrides["devices"] = (args.devices if args.devices == "auto"
+                                else int(args.devices))
+    if args.trials:
+        overrides["trials"] = args.trials
+    if args.n:
+        overrides["N"] = args.n
+    if overrides:
+        spec = spec.replace(**overrides)
+
+    store = ResultsStore(args.store) if args.store else default_store()
+    result = run_experiment(spec, store=store, force=args.force)
+    show(result, store)
+
+    if args.check_cache:
+        again = run_experiment(spec, store=store)
+        if not again.cache_hit:
+            print("check-cache: FAILED -- second run was not a store hit",
+                  file=sys.stderr)
+            return 1
+        if again.to_dict()["reports"] != result.to_dict()["reports"]:
+            print("check-cache: FAILED -- stored reports differ from the "
+                  "computed run", file=sys.stderr)
+            return 1
+        print("check-cache: OK (second run was a content-address hit with "
+              "identical reports)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

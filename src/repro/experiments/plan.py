@@ -1,0 +1,101 @@
+"""Spec -> Plan compilation: resolve every execution knob up front.
+
+``compile_plan`` turns a declarative ``ExperimentSpec`` into an
+execution ``Plan``:
+
+* the sampler backend is resolved (explicit field, else
+  ``REPRO_SAMPLER_BACKEND``, else numpy) and validated against the
+  registry;
+* the device count is normalized to a concrete int -- ``"auto"`` and
+  over-asks clamp to what the host offers, and backends without a
+  sharded executor (numpy: the bit-exact single-device oracle) pin to 1;
+* every scheme task is validated by instantiating it (unknown names and
+  bad params fail at compile time, not mid-run) and gets its concrete
+  rng seed;
+* the scenario grid is materialized into ``HetSpec`` rows.
+
+The plan's ``spec`` field is the *resolved* spec -- the value the store
+hashes, so a cache hit promises the stored numbers are what this exact
+execution would produce.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+from repro.core.schemes import get_scheme
+from repro.core.samplers import resolve_backend
+from repro.core.types import HetSpec
+
+from .spec import ExperimentSpec
+
+# backends with a sharded multi-device executor (repro.core.samplers
+# ``grid_sharding``); everything else runs single-device
+SHARDED_BACKENDS = ("jax", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """One resolved scheme run over the whole scenario grid."""
+
+    key: str
+    scheme: str
+    params: Tuple[Tuple[str, Any], ...]
+    seed: int
+
+    @property
+    def params_dict(self) -> Dict[str, Any]:
+        return dict(self.params)
+
+
+@dataclasses.dataclass
+class Plan:
+    """Compiled execution plan: resolved spec + materialized work."""
+
+    spec: ExperimentSpec          # backend/devices concrete
+    het_specs: List[HetSpec]
+    tasks: List[Task]
+
+    @property
+    def spec_hash(self) -> str:
+        return self.spec.spec_hash()
+
+    @property
+    def backend(self) -> str:
+        return self.spec.backend
+
+    @property
+    def devices(self) -> int:
+        return int(self.spec.devices)
+
+
+def _resolve_devices(requested, backend: str) -> int:
+    if backend not in SHARDED_BACKENDS:
+        return 1
+    if requested == "auto" or requested is None:
+        want = None
+    else:
+        want = int(requested)
+        if want <= 1:
+            return 1
+    import jax
+    have = len(jax.devices())
+    return have if want is None else max(1, min(want, have))
+
+
+def compile_plan(spec: ExperimentSpec) -> Plan:
+    """Resolve backend/devices, validate tasks, materialize the grid."""
+    backend = resolve_backend(spec.backend)
+    devices = _resolve_devices(spec.devices, backend)
+    tasks = []
+    for s in spec.schemes:
+        get_scheme(s.scheme, **s.params_dict)   # fail fast on bad specs
+        tasks.append(Task(key=s.report_key, scheme=s.scheme,
+                          params=s.params,
+                          seed=int(s.seed if s.seed is not None
+                                   else spec.seed)))
+    resolved = spec.replace(backend=backend, devices=devices)
+    return Plan(spec=resolved, het_specs=spec.grid.specs(), tasks=tasks)
+
+
+__all__ = ["SHARDED_BACKENDS", "Task", "Plan", "compile_plan"]

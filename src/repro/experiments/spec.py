@@ -1,0 +1,255 @@
+"""Declarative experiment specs: the whole study as one value.
+
+The paper's headline results are grid sweeps -- schemes x (mu, sigma^2)
+scenario panels x N x trials -- and every related-work direction
+(HCMM-style load optimization, per-worker coded allocation sweeps) has
+the same shape.  ``ExperimentSpec`` captures that shape declaratively:
+
+    spec = ExperimentSpec(
+        name="fig5",
+        grid=ScenarioGrid(K=50, points=[(mu, mu * mu / 6, int(mu))
+                                        for mu in (10, 20, 50, 100)]),
+        schemes=(scheme_spec("work_exchange"),
+                 scheme_spec("mds", opt_trials=64)),
+        N=1_000_000, trials=20, seed=1234)
+
+Specs are plain values: serializable to/from JSON losslessly (floats
+survive by shortest-repr round-trip), hashable via a canonical content
+hash (``spec_hash``), and therefore able to key the content-addressed
+results store (``repro.experiments.store``).  Execution knobs that
+change the sampled numbers -- backend, device count, seeds -- are part
+of the spec and hence of the hash: one hash, one set of numbers.
+
+``repro.experiments.plan`` compiles a spec into an execution ``Plan``;
+``repro.experiments.engine`` runs the plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, List, Mapping, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.types import HetSpec
+
+SPEC_VERSION = 1
+
+ScenarioPoint = Tuple[float, float, int]        # (mu, sigma2, seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioGrid:
+    """The scenario axis: one K-worker ``HetSpec`` per grid point.
+
+    Two point sources, used exclusively:
+
+    ``points``
+        ``(mu, sigma2, seed)`` triples; each materializes as
+        ``HetSpec.uniform_random(K, mu, sigma2, default_rng(seed))`` --
+        the paper's Section-7 scenario family, with the heterogeneity
+        draw pinned per point so the grid is a pure value.
+    ``explicit``
+        Literal ``HetSpec`` rate vectors (measured clusters, trace
+        corpora, adversarial layouts).  ``K`` is inferred.
+    """
+
+    K: int = 0
+    points: Tuple[ScenarioPoint, ...] = ()
+    explicit: Tuple[HetSpec, ...] = ()
+
+    def __post_init__(self):
+        pts = tuple((float(mu), float(s2), int(seed))
+                    for mu, s2, seed in self.points)
+        exp = tuple(self.explicit)
+        if bool(pts) == bool(exp):
+            raise ValueError("ScenarioGrid needs exactly one of points= "
+                             "or explicit=")
+        for h in exp:
+            if not isinstance(h, HetSpec):
+                raise TypeError(f"explicit entries must be HetSpec; "
+                                f"got {type(h).__name__}")
+        K = int(self.K) if pts else exp[0].K
+        if pts and K <= 0:
+            raise ValueError("points grids need K > 0")
+        if exp and any(h.K != K for h in exp):
+            raise ValueError("explicit HetSpecs must share K")
+        object.__setattr__(self, "points", pts)
+        object.__setattr__(self, "explicit", exp)
+        object.__setattr__(self, "K", K)
+
+    def __len__(self) -> int:
+        return len(self.points) or len(self.explicit)
+
+    def specs(self) -> List[HetSpec]:
+        """Materialize the grid, point order preserved."""
+        if self.explicit:
+            return list(self.explicit)
+        return [HetSpec.uniform_random(self.K, mu, s2,
+                                       np.random.default_rng(seed))
+                for mu, s2, seed in self.points]
+
+    def to_dict(self) -> Dict[str, Any]:
+        if self.explicit:
+            return {"explicit": [h.to_dict() for h in self.explicit]}
+        return {"K": self.K, "points": [list(p) for p in self.points]}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ScenarioGrid":
+        if "explicit" in d:
+            return cls(explicit=tuple(HetSpec.from_dict(h)
+                                      for h in d["explicit"]))
+        return cls(K=int(d["K"]),
+                   points=tuple(tuple(p) for p in d["points"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemeSpec:
+    """One scheme task: registry name + constructor params + report key.
+
+    ``params`` is stored as a sorted ``(key, value)`` tuple so the spec
+    stays hashable; build instances with :func:`scheme_spec` to pass
+    params as keyword arguments.  ``key`` names the task's row in the
+    result (defaults to the scheme name -- give explicit keys when the
+    same scheme appears twice with different params, e.g. a threshold
+    sweep).  ``seed`` overrides the experiment seed for this task; every
+    task draws from its own fresh ``default_rng(seed)``, so adding or
+    reordering tasks never perturbs another task's numbers.
+    """
+
+    scheme: str
+    params: Tuple[Tuple[str, Any], ...] = ()
+    key: Optional[str] = None
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        if isinstance(self.params, Mapping):
+            items = self.params.items()
+        else:
+            items = tuple(self.params)
+        object.__setattr__(self, "params",
+                           tuple(sorted((str(k), v) for k, v in items)))
+
+    @property
+    def params_dict(self) -> Dict[str, Any]:
+        return dict(self.params)
+
+    @property
+    def report_key(self) -> str:
+        return self.key if self.key is not None else self.scheme
+
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"scheme": self.scheme}
+        if self.params:
+            d["params"] = self.params_dict
+        if self.key is not None:
+            d["key"] = self.key
+        if self.seed is not None:
+            d["seed"] = int(self.seed)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SchemeSpec":
+        return cls(scheme=d["scheme"], params=tuple(d.get("params",
+                                                          {}).items()),
+                   key=d.get("key"), seed=d.get("seed"))
+
+
+def scheme_spec(scheme: str, *, key: Optional[str] = None,
+                seed: Optional[int] = None, **params) -> SchemeSpec:
+    """Ergonomic ``SchemeSpec`` constructor: params as kwargs."""
+    return SchemeSpec(scheme=scheme, params=tuple(params.items()), key=key,
+                      seed=seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """A complete declarative experiment.
+
+    ``backend=None`` means "resolve ``REPRO_SAMPLER_BACKEND`` (default
+    numpy) at compile time"; ``devices`` is ``1``, an int, or ``"auto"``
+    (every available device) and only applies to the sharded backends
+    (jax / pallas) -- compilation normalizes both into concrete values,
+    and the *resolved* spec is what the store hashes.
+    """
+
+    name: str
+    grid: ScenarioGrid
+    schemes: Tuple[SchemeSpec, ...]
+    N: int
+    trials: int
+    seed: int = 0
+    backend: Optional[str] = None
+    devices: Union[int, str] = 1
+    version: int = SPEC_VERSION
+
+    def __post_init__(self):
+        object.__setattr__(self, "schemes", tuple(self.schemes))
+        if not self.schemes:
+            raise ValueError("ExperimentSpec needs at least one scheme")
+        keys = [s.report_key for s in self.schemes]
+        if len(set(keys)) != len(keys):
+            dupes = sorted({k for k in keys if keys.count(k) > 1})
+            raise ValueError(f"duplicate scheme report keys {dupes}; give "
+                             f"distinct key= values")
+        if isinstance(self.devices, str) and self.devices != "auto":
+            raise ValueError(f"devices must be an int or 'auto'; "
+                             f"got {self.devices!r}")
+        if self.N <= 0 or self.trials <= 0:
+            raise ValueError("N and trials must be positive")
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "version": int(self.version),
+            "name": self.name,
+            "grid": self.grid.to_dict(),
+            "schemes": [s.to_dict() for s in self.schemes],
+            "N": int(self.N),
+            "trials": int(self.trials),
+            "seed": int(self.seed),
+            "backend": self.backend,
+            "devices": self.devices,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
+        return cls(name=d["name"], grid=ScenarioGrid.from_dict(d["grid"]),
+                   schemes=tuple(SchemeSpec.from_dict(s)
+                                 for s in d["schemes"]),
+                   N=int(d["N"]), trials=int(d["trials"]),
+                   seed=int(d.get("seed", 0)), backend=d.get("backend"),
+                   devices=d.get("devices", 1),
+                   version=int(d.get("version", SPEC_VERSION)))
+
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(text))
+
+    # -- content addressing -------------------------------------------------
+
+    def canonical_json(self) -> str:
+        """Key-sorted, whitespace-free JSON: the hashing preimage."""
+        return json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+
+    def spec_hash(self) -> str:
+        """sha256 of the canonical JSON -- the store address.  Covers
+        every field, execution knobs included: an unchanged hash promises
+        the stored numbers are what a re-run would produce."""
+        return hashlib.sha256(
+            self.canonical_json().encode("utf-8")).hexdigest()
+
+    def replace(self, **changes) -> "ExperimentSpec":
+        return dataclasses.replace(self, **changes)
+
+
+__all__ = [
+    "SPEC_VERSION", "ScenarioGrid", "SchemeSpec", "scheme_spec",
+    "ExperimentSpec",
+]

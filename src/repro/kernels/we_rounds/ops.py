@@ -69,10 +69,42 @@ def _jit_kernel(n0: float, threshold: float, cap: float, known: bool,
                                      block_b=block_b, interpret=interpret))
 
 
+@functools.lru_cache(maxsize=None)
+def _jit_sharded(mesh, n0: float, threshold: float, cap: float, known: bool,
+                 max_iter: int, block_b: int, mode: str):
+    """shard_map wrapper over the per-mode fn, cached per (mesh, config).
+
+    Each device runs the whole pipeline on its block of rows with its own
+    seed pair (one ``(D, 2)`` seed matrix, one row per device), so shards
+    never synchronize; ``check_rep=False`` because jax<=0.4 has no
+    replication rule for ``while``.
+    """
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    if mode == "reference":
+        fn = _jit_reference(n0, threshold, cap, known, max_iter)
+
+        def block(seeds_b, lam_b):
+            return fn(lam_b, seeds_b[0])
+    else:
+        fn = _jit_kernel(n0, threshold, cap, known, max_iter, block_b,
+                         mode == "interpret")
+
+        def block(seeds_b, lam_b):
+            out = fn(lam_b, seeds_b)
+            return out[:, 0], out[:, 1], out[:, 2]
+
+    spec = PartitionSpec(mesh.axis_names[0])
+    return jax.jit(shard_map(block, mesh=mesh, in_specs=(spec, spec),
+                             out_specs=spec, check_rep=False))
+
+
 def we_rounds_grid(lam_rows: np.ndarray, seed, *, n0: float,
                    threshold: float, cap: float, known: bool,
                    max_iter: int, mode: Optional[str] = None,
-                   block_b: int = DEFAULT_BLOCK_B
+                   block_b: int = DEFAULT_BLOCK_B, mesh=None
                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Fused round pipeline over ``(B, K)`` rate rows -> per-row
     ``(t_comp, iterations, n_comm)`` float64 numpy arrays.
@@ -80,6 +112,12 @@ def we_rounds_grid(lam_rows: np.ndarray, seed, *, n0: float,
     ``seed`` is a pair of uint32 (any sequence of two ints).  ``B`` is
     padded to a multiple of ``block_b`` with copies of row 0 (counters are
     per global row, so padding never alters real rows).
+
+    ``mesh`` (a 1-D jax Mesh, e.g. from ``grid_sharding``) shards the row
+    axis across its devices via ``shard_map``; ``seed`` must then be a
+    ``(mesh.size, 2)`` matrix, one independent seed pair per device.
+    Sharded runs are NOT bit-identical to single-device runs (different
+    counter keying), but every mode agrees bitwise at a fixed layout.
     """
     import jax.numpy as jnp
 
@@ -88,6 +126,21 @@ def we_rounds_grid(lam_rows: np.ndarray, seed, *, n0: float,
         raise ValueError(f"lam_rows must be (B, K); got {lam_rows.shape}")
     B = lam_rows.shape[0]
     mode = resolve_mode(mode)
+    if mesh is not None and mesh.size > 1:
+        D = int(mesh.size)
+        seed_arr = np.asarray(seed, dtype=np.uint32).reshape(D, 2)
+        # every device block must be a whole number of kernel tiles
+        quantum = D if mode == "reference" else D * block_b
+        pad = (-B) % quantum
+        if pad:
+            lam_rows = np.concatenate(
+                [lam_rows, np.repeat(lam_rows[:1], pad, axis=0)])
+        fn = _jit_sharded(mesh, float(n0), float(threshold), float(cap),
+                          bool(known), int(max_iter), int(block_b), mode)
+        t, it, cm = fn(jnp.asarray(seed_arr), jnp.asarray(lam_rows))
+        return (np.asarray(t, dtype=np.float64)[:B],
+                np.asarray(it, dtype=np.float64)[:B],
+                np.asarray(cm, dtype=np.float64)[:B])
     seed_arr = np.asarray(seed, dtype=np.uint32).reshape(2)
 
     pad = (-B) % block_b

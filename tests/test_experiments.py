@@ -1,0 +1,416 @@
+"""Declarative experiment API: spec round-trip + hash stability, the
+content-addressed store's hit/miss contract, engine semantics (per-task
+seeding, numpy bit-reproducibility, figure-driver bit-identity), and
+sharded-vs-single-device statistical equivalence over every registered
+sampler backend (subprocess with simulated devices)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.schemes import MCReport, get_scheme
+from repro.core.samplers import active_grid_mesh, grid_sharding
+from repro.core.types import HetSpec
+from repro.experiments import (ExperimentResult, ExperimentSpec, Plan,
+                               ResultsStore, ScenarioGrid, compile_plan,
+                               run_experiment, scheme_spec)
+
+RNG = lambda s=0: np.random.default_rng(s)  # noqa: E731
+
+
+def quick_spec(**overrides) -> ExperimentSpec:
+    base = dict(
+        name="test-quick",
+        grid=ScenarioGrid(K=8, points=[(10.0, 10.0 ** 2 / 6, 1),
+                                       (20.0, 0.0, 2)]),
+        schemes=(scheme_spec("work_exchange"),
+                 scheme_spec("hedged"),
+                 scheme_spec("work_exchange_unknown", key="we-th",
+                             threshold_frac=0.05, seed=99)),
+        N=5_000, trials=8, seed=42)
+    base.update(overrides)
+    return ExperimentSpec(**base)
+
+
+class TestHetSpecValue:
+    """Satellite: HetSpec is hashable + serializable."""
+
+    def test_round_trip_exact(self):
+        het = HetSpec.uniform_random(17, 33.3, 33.3 ** 2 / 6, RNG(5))
+        back = HetSpec.from_dict(json.loads(json.dumps(het.to_dict())))
+        assert back == het
+        np.testing.assert_array_equal(back.lambdas, het.lambdas)
+
+    def test_hash_and_eq(self):
+        a = HetSpec(np.array([1.0, 2.0, 3.0]))
+        b = HetSpec(np.array([1.0, 2.0, 3.0]))
+        c = HetSpec(np.array([1.0, 2.0, 3.5]))
+        assert a == b and hash(a) == hash(b)
+        assert a != c and a != "not a spec"
+        assert len({a, b, c}) == 2
+        assert a.canonical_hash() == b.canonical_hash()
+        assert a.canonical_hash() != c.canonical_hash()
+
+    def test_canonical_hash_pinned(self):
+        # platform-stable (big-endian float64 bytes): a changed preimage
+        # would silently orphan every stored result
+        assert HetSpec(np.array([1.0, 2.0])).canonical_hash() == (
+            "f814737da80b11b6d6e54c254b9d7e71"
+            "1669462c0e53585f776afea6ea073afc")
+
+    def test_rates_frozen(self):
+        het = HetSpec(np.array([1.0, 2.0]))
+        with pytest.raises(ValueError):
+            het.lambdas[0] = 9.0
+
+    def test_no_aliasing_of_caller_buffer(self):
+        buf = np.array([1.0, 2.0])
+        HetSpec(buf)
+        buf[0] = 5.0                    # caller's array stays writable
+
+
+class TestSpecRoundTrip:
+    def test_json_round_trip_and_hash_stability(self):
+        spec = quick_spec()
+        back = ExperimentSpec.from_json(spec.to_json())
+        assert back == spec
+        assert back.to_dict() == spec.to_dict()
+        assert back.spec_hash() == spec.spec_hash()
+
+    def test_hash_covers_every_knob(self):
+        base = quick_spec()
+        seen = {base.spec_hash()}
+        for changed in (base.replace(N=6_000),
+                        base.replace(trials=9),
+                        base.replace(seed=43),
+                        base.replace(backend="numpy"),
+                        base.replace(devices=4),
+                        base.replace(schemes=base.schemes[:2]),
+                        base.replace(grid=ScenarioGrid(
+                            K=8, points=[(10.0, 10.0 ** 2 / 6, 1)]))):
+            h = changed.spec_hash()
+            assert h not in seen, changed
+            seen.add(h)
+
+    def test_scheme_params_reach_the_hash(self):
+        a = quick_spec()
+        b = quick_spec(schemes=(scheme_spec("work_exchange"),
+                                scheme_spec("hedged"),
+                                scheme_spec("work_exchange_unknown",
+                                            key="we-th",
+                                            threshold_frac=0.2, seed=99)))
+        assert a.spec_hash() != b.spec_hash()
+
+    def test_explicit_grid_round_trip(self):
+        hets = (HetSpec(np.array([1.0, 2.0, 3.0])),
+                HetSpec(np.array([2.0, 2.0, 2.0])))
+        grid = ScenarioGrid(explicit=hets)
+        assert grid.K == 3 and len(grid) == 2
+        back = ScenarioGrid.from_dict(json.loads(json.dumps(grid.to_dict())))
+        assert back == grid
+        assert back.specs() == list(hets)
+
+    def test_points_grid_materializes_deterministically(self):
+        grid = ScenarioGrid(K=8, points=[(10.0, 5.0, 3)])
+        np.testing.assert_array_equal(grid.specs()[0].lambdas,
+                                      grid.specs()[0].lambdas)
+        want = HetSpec.uniform_random(8, 10.0, 5.0, RNG(3))
+        assert grid.specs()[0] == want
+
+    def test_invalid_specs_rejected(self):
+        with pytest.raises(ValueError, match="exactly one"):
+            ScenarioGrid(K=4)
+        with pytest.raises(ValueError, match="exactly one"):
+            ScenarioGrid(K=4, points=[(1.0, 0.0, 1)],
+                         explicit=(HetSpec(np.array([1.0])),))
+        with pytest.raises(ValueError, match="share K"):
+            ScenarioGrid(explicit=(HetSpec(np.array([1.0])),
+                                   HetSpec(np.array([1.0, 2.0]))))
+        with pytest.raises(ValueError, match="at least one scheme"):
+            quick_spec(schemes=())
+        with pytest.raises(ValueError, match="duplicate"):
+            quick_spec(schemes=(scheme_spec("work_exchange"),
+                                scheme_spec("work_exchange")))
+        with pytest.raises(ValueError, match="devices"):
+            quick_spec(devices="many")
+
+    def test_compile_validates_scheme_names_and_params(self):
+        with pytest.raises(KeyError, match="no_such"):
+            compile_plan(quick_spec(schemes=(scheme_spec("no_such"),)))
+        with pytest.raises(TypeError):
+            compile_plan(quick_spec(
+                schemes=(scheme_spec("work_exchange", bogus_param=1),)))
+
+    def test_compile_resolves_backend_and_devices(self):
+        plan = compile_plan(quick_spec())
+        assert isinstance(plan, Plan)
+        assert plan.backend == "numpy"
+        assert plan.devices == 1            # numpy pins to 1 device
+        assert plan.spec.backend == "numpy"
+        # unknown env/kwarg backends fail at compile
+        with pytest.raises(KeyError, match="nope"):
+            compile_plan(quick_spec(backend="nope"))
+        # per-task seeds: explicit override beats the spec seed
+        assert [t.seed for t in plan.tasks] == [42, 42, 99]
+
+    def test_devices_clamp_to_host(self):
+        # jax backend with an over-ask clamps to the attached device count
+        plan = compile_plan(quick_spec(backend="jax", devices=512))
+        import jax
+        assert plan.devices == len(jax.devices())
+
+
+class TestStore:
+    def test_miss_then_hit(self, tmp_path):
+        store = ResultsStore(tmp_path / "store")
+        spec = quick_spec()
+        assert store.get(spec) is None
+        first = run_experiment(spec, store=store)
+        assert not first.cache_hit
+        path = store.path_for(first.spec_hash)
+        assert path.is_file()
+        second = run_experiment(spec, store=store)
+        assert second.cache_hit
+        assert second.to_dict()["reports"] == first.to_dict()["reports"]
+        assert store.entries() == [first.spec_hash]
+        assert not list((tmp_path / "store").glob("*.tmp"))
+
+    def test_changed_spec_is_a_miss(self, tmp_path):
+        store = ResultsStore(tmp_path)
+        run_experiment(quick_spec(), store=store)
+        assert store.get(quick_spec(trials=9)) is None
+        assert not run_experiment(quick_spec(trials=9),
+                                  store=store).cache_hit
+
+    def test_corrupt_entry_reads_as_miss(self, tmp_path):
+        store = ResultsStore(tmp_path)
+        result = run_experiment(quick_spec(), store=store)
+        store.path_for(result.spec_hash).write_text("{not json")
+        assert store.get(quick_spec()) is None
+        # the engine recomputes and heals the entry
+        healed = run_experiment(quick_spec(), store=store)
+        assert not healed.cache_hit
+        assert store.get(quick_spec()) is not None
+
+    def test_structurally_wrong_entry_reads_as_miss(self, tmp_path):
+        store = ResultsStore(tmp_path)
+        result = run_experiment(quick_spec(), store=store)
+        for junk in ('{"spec": null}', "[1, 2, 3]", '{"spec": {"grid": 7}}'):
+            store.path_for(result.spec_hash).write_text(junk)
+            assert store.get(quick_spec()) is None, junk
+
+    def test_clamped_device_overask_still_hits(self, tmp_path):
+        # devices=8 on a 1-device host stores under the clamped hash;
+        # spec-keyed lookups must resolve the same way
+        store = ResultsStore(tmp_path)
+        spec = quick_spec(backend="jax", devices=8)
+        result = run_experiment(spec, store=store)
+        assert result.spec.devices >= 1        # concrete after compile
+        assert spec in store
+        assert store.get(spec) is not None
+        assert run_experiment(spec, store=store).cache_hit
+
+    def test_mismatched_address_reads_as_miss(self, tmp_path):
+        store = ResultsStore(tmp_path)
+        result = run_experiment(quick_spec(), store=store)
+        # copy the valid record to a wrong address: content hash disagrees
+        (tmp_path / ("0" * 64 + ".json")).write_text(
+            store.path_for(result.spec_hash).read_text())
+        assert store.get("0" * 64) is None
+
+    def test_force_recomputes_and_rewrites(self, tmp_path):
+        store = ResultsStore(tmp_path)
+        first = run_experiment(quick_spec(), store=store)
+        forced = run_experiment(quick_spec(), store=store, force=True)
+        assert not forced.cache_hit
+        # numpy backend is bit-reproducible: identical stored numbers
+        assert forced.to_dict()["reports"] == first.to_dict()["reports"]
+
+
+class TestEngine:
+    def test_result_round_trip(self, tmp_path):
+        result = run_experiment(quick_spec())
+        back = ExperimentResult.from_dict(
+            json.loads(json.dumps(result.to_dict())))
+        assert back.spec_hash == result.spec_hash
+        assert back.spec == result.spec
+        for key in result.keys():
+            for a, b in zip(result.report(key), back.report(key)):
+                assert isinstance(b, MCReport)
+                assert (a.t_comp, a.t_comp_std, a.extra) == \
+                    (b.t_comp, b.t_comp_std, b.extra)
+
+    def test_per_task_seeding_is_order_independent(self):
+        full = run_experiment(quick_spec())
+        solo = run_experiment(quick_spec(
+            schemes=(scheme_spec("hedged"),)))
+        a = full.report("hedged")
+        b = solo.report("hedged")
+        assert [r.t_comp for r in a] == [r.t_comp for r in b]
+
+    def test_matches_direct_mc_grid(self):
+        spec = quick_spec()
+        result = run_experiment(spec)
+        hets = spec.grid.specs()
+        direct = get_scheme("work_exchange_unknown",
+                            threshold_frac=0.05).mc_grid(
+            hets, spec.N, trials=spec.trials, rng=RNG(99))
+        assert [r.t_comp for r in result.report("we-th")] == \
+            [r.t_comp for r in direct]
+
+
+class TestFigureDriversBitIdentical:
+    """Acceptance: fig5/6/7 via ExperimentSpec == the pre-spec drivers,
+    seed-for-seed on the numpy backend (small budgets, same seeds)."""
+
+    N = 20_000
+
+    def test_fig5(self):
+        from benchmarks import fig5
+        from benchmarks.common import FIG_SCHEMES
+        rows = fig5.run(trials=3, n=self.N, quick=True)
+        specs = fig5.grid_specs(quick=True)
+        for name in FIG_SCHEMES:
+            reports = get_scheme(name).mc_grid(specs, self.N, trials=3,
+                                               rng=RNG(1234))
+            for row, rep in zip(rows, reports):
+                assert row[name] == rep.t_comp, name
+        assert rows[0]["mds_opt"] == rows[0]["mds"]      # legacy columns
+
+    def test_fig6(self):
+        from benchmarks import fig6
+        from benchmarks.common import THRESHOLD_FRAC, make_het
+        rows = fig6.run(n=self.N, trials=2, quick=True)
+        sigma2s = fig6.SIGMA2S[::2]
+        n_draws = max(4, 20 // 4)
+        specs = [make_het(fig6.MU, s2, seed=1000 + d)
+                 for s2 in sigma2s for d in range(n_draws)]
+        reps = get_scheme("work_exchange_unknown",
+                          threshold_frac=THRESHOLD_FRAC).mc_grid(
+            specs, self.N, trials=2, rng=RNG(2024))
+        for i, s2 in enumerate(sigma2s):
+            cell = reps[i * n_draws:(i + 1) * n_draws]
+            want = float(np.mean([r.n_comm / self.N for r in cell]))
+            assert rows[i]["comm_unknown"] == want
+
+    def test_fig7(self):
+        from benchmarks import fig7
+        from benchmarks.common import make_het
+        rows = fig7.run(n=self.N, trials=2, quick=True)
+        fracs = fig7.THRESH_FRACS[::2]
+        sigma2s = fig7.SIGMA2S[::2]
+        specs = [make_het(fig7.MU, s2, seed=int(s2) + 7) for s2 in sigma2s]
+        i = 0
+        for frac in fracs:
+            reps = get_scheme("work_exchange_unknown",
+                              threshold_frac=frac).mc_grid(
+                specs, self.N, trials=2, rng=RNG(int(frac * 1e6)))
+            for rep in reps:
+                assert rows[i]["iters"] == rep.iterations
+                i += 1
+
+    def test_store_round_trip_preserves_rows(self, tmp_path):
+        from benchmarks import fig5
+        store = ResultsStore(tmp_path)
+        fresh = fig5.run(trials=2, n=self.N, quick=True, store=store)
+        cached = fig5.run(trials=2, n=self.N, quick=True, store=store)
+        assert fresh == cached
+
+
+class TestGridShardingContext:
+    def test_single_device_context_is_noop(self):
+        # the main test process has 1 CPU device: the context must not
+        # install a mesh, and results must be unchanged
+        spec = HetSpec.uniform_random(8, 10.0, 10.0 ** 2 / 6, RNG(0))
+        ref = get_scheme("work_exchange").mc(spec, 5_000, 16, RNG(1),
+                                             keep_trials=True)
+        with grid_sharding(4):
+            assert active_grid_mesh() is None
+            rep = get_scheme("work_exchange").mc(spec, 5_000, 16, RNG(1),
+                                                 keep_trials=True)
+        np.testing.assert_array_equal(rep.t_comp_trials, ref.t_comp_trials)
+        assert active_grid_mesh() is None
+
+
+SHARDED_PROBE = textwrap.dedent("""
+    import os, json, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    from repro.core.samplers import (SAMPLER_BACKENDS, get_backend,
+                                     grid_sharding, active_grid_mesh)
+    from repro.core.schemes import get_scheme
+    from repro.core.types import HetSpec
+
+    K, N, T = 15, 50_000, 256
+    specs = [HetSpec.uniform_random(K, mu, mu * mu / 6,
+                                    np.random.default_rng(s))
+             for s, mu in enumerate((10.0, 20.0))]
+    out = {}
+    for name in sorted(SAMPLER_BACKENDS):
+        if not get_backend(name).available():
+            continue
+        single = get_scheme("work_exchange").mc_grid(
+            specs, N, T, np.random.default_rng(5), backend=name,
+            keep_trials=True)
+        with grid_sharding(4):
+            assert active_grid_mesh() is not None
+            shard = get_scheme("work_exchange").mc_grid(
+                specs, N, T, np.random.default_rng(5), backend=name,
+                keep_trials=True)
+        rows = []
+        for a, b in zip(single, shard):
+            se = float(np.hypot(a.t_comp_std, b.t_comp_std) / np.sqrt(T))
+            rows.append({
+                "single": a.t_comp, "sharded": b.t_comp, "se": se,
+                "bitwise": bool(np.array_equal(a.t_comp_trials,
+                                               b.t_comp_trials)),
+            })
+        out[name] = rows
+    json.dump(out, sys.stdout)
+""")
+
+
+class TestShardedEquivalence:
+    """Acceptance: 4-device sharded execution agrees with single-device
+    at 6 combined standard errors, under list(SAMPLER_BACKENDS).
+
+    Runs in a subprocess because simulated host devices require XLA_FLAGS
+    before the first jax import, and the main pytest process has already
+    imported jax on one device.
+    """
+
+    @pytest.fixture(scope="class")
+    def verdicts(self):
+        env = dict(os.environ)
+        env.pop("XLA_FLAGS", None)
+        env.pop("REPRO_SAMPLER_BACKEND", None)
+        src = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run([sys.executable, "-c", SHARDED_PROBE],
+                              capture_output=True, text=True, env=env,
+                              timeout=900)
+        assert proc.returncode == 0, proc.stderr[-4000:]
+        return json.loads(proc.stdout)
+
+    def test_numpy_oracle_is_untouched_by_sharding(self, verdicts):
+        for row in verdicts["numpy"]:
+            assert row["bitwise"], row
+
+    def test_backends_agree_at_six_se(self, verdicts):
+        assert set(verdicts) >= {"numpy"}
+        for name, rows in verdicts.items():
+            for row in rows:
+                drift = abs(row["single"] - row["sharded"])
+                assert drift < 6.0 * row["se"] + 1e-12, (name, row)
+
+    def test_sharded_backends_actually_resharded(self, verdicts):
+        # jax/pallas shard with fresh per-device key streams: identical
+        # trial vectors would mean the mesh was silently ignored
+        for name in ("jax", "pallas"):
+            if name in verdicts:
+                assert not all(r["bitwise"] for r in verdicts[name]), name

@@ -22,7 +22,7 @@ RNG = lambda s=0: np.random.default_rng(s)
 
 PAPER_SCHEMES = ("fixed", "uniform", "oracle", "mds", "work_exchange",
                  "work_exchange_unknown")
-NEW_SCHEMES = ("het_mds", "trace_replay", "gradient_coded")
+NEW_SCHEMES = ("het_mds", "trace_replay", "gradient_coded", "hedged")
 
 
 def make_het(K=10, mu=10.0, sigma2=10.0 ** 2 / 6, seed=3):
@@ -132,6 +132,83 @@ class TestWorkConservation:
             assert int(stats.n_done.sum()) >= N
         else:
             stats.check_work_conserved(N)
+
+
+class TestHedged:
+    """Satellite: replication-on-slowest (hedged requests)."""
+
+    def test_layout(self):
+        het = make_het(K=8)
+        scheme = get_scheme("hedged")
+        loads, spare, strag = scheme._layout(het, 2_000)
+        assert spare == int(np.argmax(het.lambdas))
+        assert loads[spare] == 0                 # spare holds no primary
+        assert loads.sum() == 2_000
+        loaded = np.flatnonzero(loads)
+        assert strag in loaded
+        assert het.lambdas[strag] == het.lambdas[loaded].min()
+        sizes = scheme.initial_sizes(het, 2_000)
+        assert sizes[spare] == loads[strag]      # the duplicated shard
+        assert sizes.sum() == 2_000 + loads[strag]
+
+    def test_hedge_never_slower_than_unhedged_straggler(self):
+        """With the same primary draws, min(T_strag, T_spare) can only
+        shrink the straggler's column, so per-trial completion is <= the
+        completion of the same assignment without the hedge."""
+        het = make_het(K=8, seed=5)
+        scheme = get_scheme("hedged")
+        loads, spare, strag = scheme._layout(het, 2_000)
+        rng = RNG(7)
+        t_comp, _, _, _, _, t_strag, t_spare = scheme._finish_times(
+            het, 2_000, 200, rng)
+        # reproduce the unhedged max with the identical primary draws
+        rng = RNG(7)
+        busy = loads > 0
+        t_k = np.full((200, het.K), -np.inf)
+        t_k[:, busy] = rng.gamma(shape=loads[busy],
+                                 scale=1.0 / het.lambdas[busy],
+                                 size=(200, int(busy.sum())))
+        unhedged = t_k.max(axis=1)
+        assert (t_comp <= unhedged + 1e-12).all()
+        assert (t_comp < unhedged).any()         # the hedge fires sometimes
+
+    def test_credit_goes_to_earlier_replica(self):
+        # homogeneous cluster: the two replicas run the same load at the
+        # same rate, so each wins ~half the time -- both credit paths fire
+        het = HetSpec(np.full(6, 10.0))
+        scheme = get_scheme("hedged")
+        loads, spare, strag = scheme._layout(het, 1_000)
+        saw = set()
+        for seed in range(40):
+            stats = scheme.simulate(het, 1_000, RNG(seed))
+            assert stats.n_done.sum() == 1_000
+            assert stats.n_done[spare] in (0, loads[strag])
+            saw.add("spare" if stats.n_done[spare] else "straggler")
+        assert saw == {"spare", "straggler"}     # both outcomes occur
+
+    def test_fast_spare_usually_beats_slow_straggler(self):
+        # heterogeneous cluster: the spare runs the straggler's load at
+        # the fastest rate, so it should win the duplicate race nearly
+        # always
+        het = make_het(K=6, seed=9)
+        scheme = get_scheme("hedged")
+        _, spare, _ = scheme._layout(het, 1_000)
+        wins = sum(bool(scheme.simulate(het, 1_000, RNG(s)).n_done[spare])
+                   for s in range(30))
+        assert wins >= 25
+
+    def test_k1_degenerates_to_fixed(self):
+        het = HetSpec(np.array([3.0]))
+        rep = get_scheme("hedged").mc(het, 1_000, 16, RNG(1))
+        assert rep.n_comm == 0 and rep.extra == {}
+
+    def test_mc_matches_simulate_distribution(self):
+        het = make_het(K=8, seed=3)
+        rep = get_scheme("hedged").mc(het, 2_000, 400, RNG(2))
+        sim = [get_scheme("hedged").simulate(het, 2_000, RNG(100 + i)).t_comp
+               for i in range(400)]
+        se = np.hypot(rep.t_comp_std, np.std(sim)) / np.sqrt(400)
+        assert abs(rep.t_comp - np.mean(sim)) < 6 * se
 
 
 class TestShimEquivalence:
