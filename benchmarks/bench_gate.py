@@ -40,6 +40,7 @@ WALL_KEYS_GRID = ("pr1_numpy_loop_s", "numpy_grid_s", "jax_grid_s",
 WALL_KEYS_MDS = ("pr2_loop_s", "numpy_grid_s", "jax_grid_s",
                  "pallas_grid_s")
 WALL_KEYS_SHARDED = ("single_jax_s", "sharded_jax_s")
+WALL_KEYS_DRIFTING = ("numpy_grid_s", "jax_grid_s", "pallas_grid_s")
 
 
 def load(path: str) -> dict:
@@ -68,6 +69,10 @@ def collect_walls(report: dict) -> dict:
         if key in sharded:
             walls[f"fig5_sharded.{key}@{sharded.get('devices')}dev"] = \
                 float(sharded[key])
+    drifting = report.get("fig5_drifting", {})
+    for key in WALL_KEYS_DRIFTING:
+        if key in drifting:
+            walls[f"fig5_drifting.{key}"] = float(drifting[key])
     return walls
 
 

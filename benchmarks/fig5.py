@@ -49,6 +49,27 @@ def experiment(trials: int = TRIALS, n: int = N_PAPER, quick: bool = False,
         N=n, trials=trials, seed=1234, backend=backend, devices=devices)
 
 
+def drifting_experiment(trials: int = TRIALS, n: int = N_PAPER,
+                        quick: bool = False, backend: str | None = None,
+                        kind: str = "ar1") -> ExperimentSpec:
+    """The fig5 panel under drifting heterogeneity: same ``(mu,
+    sigma^2)`` points, but the rates evolve across exchange rounds
+    (``repro.scenarios.DriftingScenario``) -- the stress test of the
+    unknown-heterogeneity claim that a once-drawn grid cannot provide.
+    Only the exchange schemes appear: they are the ones whose inner
+    loop consumes the per-round schedule.
+    """
+    from repro.scenarios import DriftingScenario
+    points = [(mu, sigma2, int(mu)) for mu, _, sigma2 in grid_points(quick)]
+    return ExperimentSpec(
+        name="fig5-drifting-quick" if quick else "fig5-drifting",
+        grid=DriftingScenario(K=K_PAPER, points=tuple(points), kind=kind,
+                              rounds=48),
+        schemes=(scheme_spec("work_exchange"),
+                 scheme_spec("work_exchange_unknown")),
+        N=n, trials=trials, seed=1234, backend=backend)
+
+
 def rows_from(result: ExperimentResult):
     """Legacy row dicts (CSV schema) from an experiment result."""
     points = result.spec.grid.points

@@ -345,6 +345,78 @@ def _bench_fig5_sharded(n: int, trials: int = 1000, reps: int = 5):
     }
 
 
+def _bench_fig5_drifting(n: int, trials: int = 1000, reps: int = 3):
+    """The scenario-diversity lever: fig5's work-exchange panel under a
+    drifting-heterogeneity grid (``repro.scenarios.DriftingScenario``),
+    timed on every registered sampler backend.
+
+    The per-round rate schedule changes the engines' inner-loop contract
+    (one extra rate read per round), so this section both tracks the
+    drift path's wall-clock and records the cross-backend agreement of
+    the drifted means (max |mean - numpy mean| in combined standard
+    errors over schemes x grid points): the numpy engine is the exact
+    reference, jax/pallas run the fluid relaxation with the same
+    schedule.
+    """
+    if QUICK:
+        trials, reps = 200, 1
+    import numpy as np
+
+    from repro.core.schemes import get_scheme
+    from . import fig5
+
+    spec = fig5.drifting_experiment(quick=QUICK)
+    fam = spec.grid
+    specs, sched = fam.specs(), fam.rate_schedules()
+    schemes = ("work_exchange", "work_exchange_unknown")
+
+    def sweep(backend, keep=False):
+        out = {}
+        for name in schemes:
+            out[name] = get_scheme(name).mc_grid(
+                specs, n, trials=trials, rng=np.random.default_rng(1234),
+                backend=backend, rate_schedule=sched, keep_trials=keep)
+        return out
+
+    # warm jit (compilation cached per batch-shape bucket) and collect
+    # the agreement picture against the exact numpy engine
+    reports = {b: sweep(b, keep=True) for b in ("numpy", "jax", "pallas")}
+    drift_se = {}
+    for backend in ("jax", "pallas"):
+        worst = 0.0
+        for name in schemes:
+            for a, b in zip(reports["numpy"][name], reports[backend][name]):
+                se = float(np.hypot(a.t_comp_std, b.t_comp_std)
+                           / np.sqrt(trials))
+                worst = max(worst, abs(a.t_comp - b.t_comp) / se)
+        drift_se[backend] = round(worst, 2)
+
+    walls = {"numpy": [], "jax": [], "pallas": []}
+    for _ in range(reps):
+        for key in walls:
+            t0 = time.perf_counter()
+            sweep(key)
+            walls[key].append(time.perf_counter() - t0)
+    numpy_s = min(walls["numpy"])
+    jax_s = min(walls["jax"])
+    pallas_s = min(walls["pallas"])
+    return {
+        "N": n, "trials": trials, "grid_points": len(specs),
+        "K": int(specs[0].K), "rounds": int(sched.shape[1]),
+        "kind": "ar1", "wall_reps": reps, "schemes": list(schemes),
+        "numpy_grid_s": round(numpy_s, 4),
+        "jax_grid_s": round(jax_s, 4),
+        "pallas_grid_s": round(pallas_s, 4),
+        "speedup_jax_vs_numpy": round(numpy_s / jax_s, 2),
+        "max_mean_drift_se_jax": drift_se["jax"],
+        "max_mean_drift_se_pallas": drift_se["pallas"],
+        "note": "fig5 work-exchange panel under the drifting scenario "
+                "family (AR(1) per-round rate schedule threaded through "
+                "every backend); agreement is vs the exact numpy engine "
+                "at MC tolerance",
+    }
+
+
 def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     """Per-scheme MC means + engine/grid wall-clock, machine-readable."""
     import numpy as np
@@ -358,7 +430,7 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     report = {"config": {"K": K_PAPER, "N": n, "mu": 50.0,
                          "sigma2": "mu^2/6", "trials": trials},
               "schemes": {}, "mc_engine": {}, "fig5_grid": {},
-              "mds_grid": {}, "fig5_sharded": {}}
+              "mds_grid": {}, "fig5_sharded": {}, "fig5_drifting": {}}
 
     # per-trial-loop schemes walk unit ids in Python: bound their budget
     # (the JSON records the actual N/trials used -- no silent caps)
@@ -408,12 +480,14 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     report["fig5_grid"] = _bench_fig5_grid(n)
     report["mds_grid"] = _bench_mds_grid(n)
     report["fig5_sharded"] = _bench_fig5_sharded(n)
+    report["fig5_drifting"] = _bench_fig5_drifting(n)
 
     out_path.parent.mkdir(parents=True, exist_ok=True)
     out_path.write_text(json.dumps(report, indent=2))
     g = report["fig5_grid"]
     m = report["mds_grid"]
     s = report["fig5_sharded"]
+    d = report["fig5_drifting"]
     shard_note = (f"sharded {s['speedup_sharded_vs_single']}x on "
                   f"{s['devices']} devices"
                   if "speedup_sharded_vs_single" in s
@@ -423,7 +497,9 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
           f"{g['speedup_jax_vs_pr1_loop']}x vs PR1 loop, "
           f"{g['speedup_jax_vs_pr1_loop_incl_compile']}x incl compile, "
           f"pallas {g['speedup_pallas_vs_pr1_loop']}x; mds grid: best "
-          f"{m['speedup_best_vs_pr2_loop']}x vs PR2 loop; {shard_note})",
+          f"{m['speedup_best_vs_pr2_loop']}x vs PR2 loop; {shard_note}; "
+          f"drifting: jax {d['speedup_jax_vs_numpy']}x vs numpy, "
+          f"agreement <= {max(d['max_mean_drift_se_jax'], d['max_mean_drift_se_pallas'])} SE)",
           file=sys.stderr)
     return []
 

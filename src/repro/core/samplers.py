@@ -68,8 +68,16 @@ DEFAULT_BACKEND = "numpy"
 
 # (t_comp, iterations, n_comm), each shape (G * trials,), grid-major
 GridArrays = Tuple[np.ndarray, np.ndarray, np.ndarray]
-WEGridFn = Callable[[np.ndarray, int, ExchangeConfig, int,
-                     np.random.Generator, str], GridArrays]
+# backend contract: (lam (G, K), N, cfg, trials, rng,
+#                    capped_mode: "carry"|"waterfill",
+#                    rate_schedule: Optional[(G, R, K)]) -> GridArrays.
+# rate_schedule is the optional per-exchange-round service-rate schedule
+# (scenario drift): round r >= R holds the last row, assignment rates
+# stay nominal (known) / estimated (unknown) -- only the realized
+# service draws follow the schedule.  (Callable[...] because the last
+# two parameters are keyword-or-defaulted; the registered backends are
+# the normative signatures.)
+WEGridFn = Callable[..., GridArrays]
 # (shape_rows, scale_rows, rng) -> (R, K) Gamma(shape) * scale draws
 GammaRowsFn = Callable[[np.ndarray, np.ndarray, np.random.Generator],
                        np.ndarray]
@@ -204,7 +212,9 @@ def active_grid_mesh():
 def work_exchange_grid_numpy(lam: np.ndarray, N: int, cfg: ExchangeConfig,
                              trials: int, rng: np.random.Generator,
                              capped_mode: Literal["carry", "waterfill"]
-                             = "carry") -> GridArrays:
+                             = "carry",
+                             rate_schedule: Optional[np.ndarray] = None
+                             ) -> GridArrays:
     """Exact batched engine over a ``(G, K)`` heterogeneity grid.
 
     Every row of the ``(G * trials, K)`` state is one independent run of
@@ -212,6 +222,14 @@ def work_exchange_grid_numpy(lam: np.ndarray, N: int, cfg: ExchangeConfig,
     ``G == 1`` the randomness is consumed in exactly the order of the
     PR-1 trial-batched engine (and hence, at ``trials == 1``, of the
     scalar reference) -- the bit-identity the tests pin down.
+
+    ``rate_schedule`` (optional, ``(G, R, K)``) drives scenario drift:
+    the service draws of exchange round ``r`` use row ``min(r, R - 1)``
+    of the point's schedule while the *assignment* keeps using the
+    nominal ``lam`` (known) or the online estimate (unknown), exactly
+    the scheduler-sees-nominal / reality-drifts split of the drifting
+    and trace-corpus scenario families.  With ``rate_schedule=None``
+    this path is byte-for-byte the stationary engine.
     """
     lam = np.asarray(lam, dtype=np.float64)
     if lam.ndim != 2:
@@ -225,6 +243,13 @@ def work_exchange_grid_numpy(lam: np.ndarray, N: int, cfg: ExchangeConfig,
            else int(np.ceil(cfg.storage_cap_frac * N / K)))
     lam_rows = np.repeat(lam, T, axis=0)          # (B, K), grid-major
     inv_lam = 1.0 / lam_rows
+    inv_sched = None
+    if rate_schedule is not None:
+        sched = np.asarray(rate_schedule, dtype=np.float64)
+        if sched.ndim != 3 or sched.shape[0] != G or sched.shape[2] != K:
+            raise ValueError(f"rate_schedule must be (G={G}, R, K={K}); "
+                             f"got shape {sched.shape}")
+        inv_sched = 1.0 / np.repeat(sched, T, axis=0)   # (B, R, K)
 
     est_done = np.zeros((B, K))
     est_time = np.zeros(B)
@@ -271,7 +296,11 @@ def work_exchange_grid_numpy(lam: np.ndarray, N: int, cfg: ExchangeConfig,
         n_comm[idx] += np.where(started, comm_add, 0.0)
 
         # batched iteration outcome (same draw order as the scalar path)
-        scale = inv_lam[idx]
+        if inv_sched is None:
+            scale = inv_lam[idx]
+        else:        # service rates of THIS round (clamped to the last row)
+            r_idx = np.minimum(iters[idx], inv_sched.shape[1] - 1)
+            scale = inv_sched[idx, r_idx]
         busy = assign > 0
         if busy.all():      # the common case: draw the full matrix directly
             t_k = rng.gamma(shape=assign, scale=scale)
@@ -313,7 +342,11 @@ def work_exchange_grid_numpy(lam: np.ndarray, N: int, cfg: ExchangeConfig,
         assign = largest_remainder_round_batch(rates, n_rem[idx])
         comm_add = np.maximum(assign - n_left_prev[idx], 0).sum(axis=1)
         n_comm[idx] += np.where(iters[idx] > 0, comm_add, 0.0)
-        scale = inv_lam[idx]
+        if inv_sched is None:
+            scale = inv_lam[idx]
+        else:
+            r_idx = np.minimum(iters[idx], inv_sched.shape[1] - 1)
+            scale = inv_sched[idx, r_idx]
         busy = assign > 0
         if busy.all():
             t_k = rng.gamma(shape=assign, scale=scale)
@@ -366,7 +399,7 @@ def _jax_available() -> bool:
 
 
 _JAX_TX = None               # transform-sampler namespace, built once
-_JAX_ENGINE = None           # built once; jax.jit caches per (B, K) shape
+_JAX_ENGINES: Dict[bool, Callable] = {}   # drift? -> jitted engine
 
 
 def _jax_transforms():
@@ -430,8 +463,16 @@ def _jax_transforms():
     return _JAX_TX
 
 
-def _build_jax_engine():
-    """Construct the jitted grid engine (imports jax lazily)."""
+def _build_jax_engine(drift: bool = False):
+    """Construct the jitted grid engine (imports jax lazily).
+
+    ``drift=True`` builds the drifting-rates variant: an extra traced
+    ``(B, R, K)`` schedule argument supplies each round's true service
+    rates (row ``min(round, R - 1)``); the assignment shares keep using
+    the nominal ``lam`` / online estimate.  ``drift=False`` compiles to
+    exactly the stationary PR-4 engine (no schedule argument, no
+    gathers).
+    """
     import jax
     import jax.numpy as jnp
 
@@ -441,18 +482,29 @@ def _build_jax_engine():
     gamma_mt = tx.gamma_mt
     binomial_normal = tx.binomial_normal
 
-    def engine(key, lam, n0, threshold, cap, known, max_iter):
+    def engine(key, lam, sched, n0, threshold, cap, known, max_iter):
         # ``known`` is STATIC: the known-heterogeneity engine compiles
         # with the whole online-estimator block dead-code-eliminated
         B, K = lam.shape
-        inv_lam = 1.0 / lam
+        inv_lam0 = 1.0 / lam
         lam_sum = lam.sum(1)
+        R = sched.shape[1] if drift else 1
+
+        def inv_lam_at(iters):
+            """1/rate in effect at each row's current round."""
+            if not drift:
+                return inv_lam0
+            r_idx = jnp.minimum(iters, R - 1)
+            cur = jnp.take_along_axis(sched, r_idx[:, None, None],
+                                      axis=1)[:, 0, :]
+            return 1.0 / cur
 
         def cond(st):
             return st["active"].any()
 
         def body(st):
             key, kg, kb = jax.random.split(st["key"], 3)
+            inv_lam = inv_lam_at(st["iters"])
             if known:
                 share = lam * (st["n_rem"] / lam_sum)[:, None]
             else:
@@ -535,6 +587,7 @@ def _build_jax_engine():
         kf = jax.random.split(st["key"])[0]
         has_rem = st["n_rem"] > 1e-6
         rates = lam if known else st["lam_hat"]
+        inv_lam = inv_lam_at(st["iters"])
         share = rates * (st["n_rem"] / rates.sum(1))[:, None]
         comm = jnp.maximum(share - st["n_left"], 0.0).sum(1)
         t_k = jnp.where(share > 1e-9, gamma_mt(kf, share, inv_lam), 0.0)
@@ -544,49 +597,71 @@ def _build_jax_engine():
         iters = st["iters"] + has_rem
         return t_comp, iters, n_comm
 
-    return jax.jit(engine, static_argnames=("known",))
+    if drift:
+        return jax.jit(engine, static_argnames=("known",))
+
+    def stationary(key, lam, n0, threshold, cap, known, max_iter):
+        return engine(key, lam, None, n0, threshold, cap, known, max_iter)
+
+    return jax.jit(stationary, static_argnames=("known",))
 
 
-_JAX_SHARDED: Dict[object, Callable] = {}    # Mesh -> jitted shard_map engine
+def _get_jax_engine(drift: bool = False):
+    if drift not in _JAX_ENGINES:
+        _JAX_ENGINES[drift] = _build_jax_engine(drift)
+    return _JAX_ENGINES[drift]
 
 
-def _sharded_jax_engine(mesh):
+_JAX_SHARDED: Dict[Tuple[object, bool], Callable] = {}   # (Mesh, drift?)
+
+
+def _sharded_jax_engine(mesh, drift: bool = False):
     """Jitted shard_map wrapper of the fused engine, cached per mesh.
 
     Each device runs the whole ``lax.while_loop`` pipeline on its own
     block of batch rows with its own rbg key -- no collectives, so the
     shards never synchronize until the final gather.  ``check_rep=False``
-    because jax<=0.4 has no replication rule for ``while``.
+    because jax<=0.4 has no replication rule for ``while``.  The drift
+    variant also shards the ``(B, R, K)`` rate schedule along the batch
+    rows, so each device carries only its own rows' schedules.
     """
-    if mesh in _JAX_SHARDED:
-        return _JAX_SHARDED[mesh]
+    if (mesh, drift) in _JAX_SHARDED:
+        return _JAX_SHARDED[(mesh, drift)]
     import jax
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec
 
-    global _JAX_ENGINE
-    if _JAX_ENGINE is None:
-        _JAX_ENGINE = _build_jax_engine()
-    eng = _JAX_ENGINE
+    eng = _get_jax_engine(drift)
     spec = PartitionSpec(mesh.axis_names[0])
 
-    def sharded(keys, lam, n0, threshold, cap, known, max_iter):
-        def block(keys_b, lam_b):
-            return eng(keys_b[0], lam_b, n0, threshold, cap, known,
-                       max_iter)
-        return shard_map(block, mesh=mesh, in_specs=(spec, spec),
-                         out_specs=spec, check_rep=False)(keys, lam)
+    if drift:
+        def sharded(keys, lam, sched, n0, threshold, cap, known, max_iter):
+            def block(keys_b, lam_b, sched_b):
+                return eng(keys_b[0], lam_b, sched_b, n0, threshold, cap,
+                           known, max_iter)
+            return shard_map(block, mesh=mesh, in_specs=(spec, spec, spec),
+                             out_specs=spec, check_rep=False)(keys, lam,
+                                                              sched)
+    else:
+        def sharded(keys, lam, n0, threshold, cap, known, max_iter):
+            def block(keys_b, lam_b):
+                return eng(keys_b[0], lam_b, n0, threshold, cap, known,
+                           max_iter)
+            return shard_map(block, mesh=mesh, in_specs=(spec, spec),
+                             out_specs=spec, check_rep=False)(keys, lam)
 
     fn = jax.jit(sharded, static_argnames=("n0", "threshold", "cap",
                                            "known", "max_iter"))
-    _JAX_SHARDED[mesh] = fn
+    _JAX_SHARDED[(mesh, drift)] = fn
     return fn
 
 
 def work_exchange_grid_jax(lam: np.ndarray, N: int, cfg: ExchangeConfig,
                            trials: int, rng: np.random.Generator,
                            capped_mode: Literal["carry", "waterfill"]
-                           = "carry") -> GridArrays:
+                           = "carry",
+                           rate_schedule: Optional[np.ndarray] = None
+                           ) -> GridArrays:
     """Fused fluid-relaxation engine: one device dispatch per grid call.
 
     The jitted function is cached per ``(G * trials, K)`` shape and
@@ -595,15 +670,15 @@ def work_exchange_grid_jax(lam: np.ndarray, N: int, cfg: ExchangeConfig,
     (two compilations per shape bucket, each reused by every later call);
     threshold, cap and N stay traced.  The numpy ``rng`` only seeds the
     JAX key stream (one draw), keeping call sites generator-driven like
-    every other scheme.
+    every other scheme.  ``rate_schedule`` (``(G, R, K)``) selects the
+    drift engine variant: per-round service rates follow the schedule
+    while assignments stay nominal/estimated (same contract as the numpy
+    backend, statistically -- not bitwise -- equivalent to it).
     """
     if capped_mode != "carry":
         raise ValueError(
             "the jax sampler backend implements the paper-faithful 'carry' "
             "storage mode only; use backend='numpy' for 'waterfill'")
-    global _JAX_ENGINE
-    if _JAX_ENGINE is None:
-        _JAX_ENGINE = _build_jax_engine()
     import jax
 
     lam = np.asarray(lam, dtype=np.float32)
@@ -619,6 +694,15 @@ def work_exchange_grid_jax(lam: np.ndarray, N: int, cfg: ExchangeConfig,
     # caches per shape, so fig5/fig6/fig7-sized grids land in a handful
     # of compilations per process instead of one per panel shape
     lam_rows, B = _pad_rows(lam_rows)
+    drift = rate_schedule is not None
+    sched_rows = None
+    if drift:
+        sched = np.asarray(rate_schedule, dtype=np.float32)
+        if sched.ndim != 3 or sched.shape[0] != G or sched.shape[2] != K:
+            raise ValueError(f"rate_schedule must be (G={G}, R, K={K}); "
+                             f"got shape {sched.shape}")
+        sched_rows = np.repeat(sched, int(trials), axis=0)
+        sched_rows = _pad_rows_like(sched_rows, lam_rows.shape[0])
     mesh = active_grid_mesh()
     if mesh is not None:
         # sharded executor: one independent engine per device over its
@@ -632,15 +716,27 @@ def work_exchange_grid_jax(lam: np.ndarray, N: int, cfg: ExchangeConfig,
                 [lam_rows, np.repeat(lam_rows[:1], extra, axis=0)])
         keys = jax.random.split(
             jax.random.key(int(rng.integers(2 ** 63 - 1)), impl="rbg"), D)
-        t, it, cm = _sharded_jax_engine(mesh)(
-            keys, lam_rows, float(N), float(threshold), cap, bool(known),
-            int(cfg.max_iterations))
+        if drift:
+            sched_rows = _pad_rows_like(sched_rows, lam_rows.shape[0])
+            t, it, cm = _sharded_jax_engine(mesh, drift=True)(
+                keys, lam_rows, sched_rows, float(N), float(threshold),
+                cap, bool(known), int(cfg.max_iterations))
+        else:
+            t, it, cm = _sharded_jax_engine(mesh)(
+                keys, lam_rows, float(N), float(threshold), cap,
+                bool(known), int(cfg.max_iterations))
     else:
         # rbg keys: counter-based bit generation is ~3x faster than
         # threefry on CPU and ample for Monte Carlo
         key = jax.random.key(int(rng.integers(2 ** 63 - 1)), impl="rbg")
-        t, it, cm = _JAX_ENGINE(key, lam_rows, float(N), float(threshold),
-                                cap, bool(known), int(cfg.max_iterations))
+        if drift:
+            t, it, cm = _get_jax_engine(drift=True)(
+                key, lam_rows, sched_rows, float(N), float(threshold),
+                cap, bool(known), int(cfg.max_iterations))
+        else:
+            t, it, cm = _get_jax_engine()(
+                key, lam_rows, float(N), float(threshold), cap,
+                bool(known), int(cfg.max_iterations))
     return (np.asarray(t, dtype=np.float64)[:B],
             np.asarray(it, dtype=np.float64)[:B],
             np.asarray(cm, dtype=np.float64)[:B])
@@ -660,6 +756,16 @@ def _pad_rows(rows: np.ndarray, bucket: int = 64) -> Tuple[np.ndarray, int]:
         rows = np.concatenate([rows, np.repeat(rows[:1], target - R,
                                                axis=0)])
     return rows, R
+
+
+def _pad_rows_like(rows: np.ndarray, target: int) -> np.ndarray:
+    """Pad the leading axis to an already-chosen target length with
+    copies of row 0 (the schedule companion of ``_pad_rows``: schedule
+    rows must stay aligned with the padded rate rows)."""
+    extra = target - rows.shape[0]
+    if extra > 0:
+        rows = np.concatenate([rows, np.repeat(rows[:1], extra, axis=0)])
+    return rows
 
 
 def _pad_rows_to(rows: np.ndarray, R: int) -> np.ndarray:
@@ -734,7 +840,9 @@ def gamma_rows_jax(shape_rows: np.ndarray, scale_rows: np.ndarray,
 def work_exchange_grid_pallas(lam: np.ndarray, N: int, cfg: ExchangeConfig,
                               trials: int, rng: np.random.Generator,
                               capped_mode: Literal["carry", "waterfill"]
-                              = "carry") -> GridArrays:
+                              = "carry",
+                              rate_schedule: Optional[np.ndarray] = None
+                              ) -> GridArrays:
     """One fused Pallas pass over the ``(G * trials, K)`` grid.
 
     Same fluid relaxation as the ``jax`` backend but with counter-based
@@ -760,11 +868,20 @@ def work_exchange_grid_pallas(lam: np.ndarray, N: int, cfg: ExchangeConfig,
     threshold = cfg.threshold_frac * N / K
     cap = (np.inf if cfg.storage_cap_frac is None or known
            else float(np.ceil(cfg.storage_cap_frac * N / K)))
+    G = lam.shape[0]
     lam_rows = np.repeat(lam, int(trials), axis=0)       # (B, K), grid-major
     # power-of-two bucket >= 128 (the kernel's tile height): panel-sized
     # grids share a handful of compilations per process, and the bucket
     # is always a whole number of tiles
     lam_rows, B = _pad_rows(lam_rows, bucket=128)
+    sched_rows = None
+    if rate_schedule is not None:
+        sched = np.asarray(rate_schedule, dtype=np.float32)
+        if sched.ndim != 3 or sched.shape[0] != G or sched.shape[2] != K:
+            raise ValueError(f"rate_schedule must be (G={G}, R, K={K}); "
+                             f"got shape {sched.shape}")
+        sched_rows = _pad_rows_like(np.repeat(sched, int(trials), axis=0),
+                                    lam_rows.shape[0])
     mesh = active_grid_mesh()
     if mesh is not None:
         # sharded executor: one independent seed pair per device (each
@@ -776,7 +893,8 @@ def work_exchange_grid_pallas(lam: np.ndarray, N: int, cfg: ExchangeConfig,
     t, it, cm = we_rounds_grid(lam_rows, seed, n0=float(N),
                                threshold=float(threshold), cap=cap,
                                known=bool(known),
-                               max_iter=int(cfg.max_iterations), mesh=mesh)
+                               max_iter=int(cfg.max_iterations), mesh=mesh,
+                               rate_schedule=sched_rows)
     return t[:B], it[:B], cm[:B]
 
 

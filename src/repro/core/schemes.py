@@ -197,6 +197,10 @@ class Scheme:
     name: str = "abstract"
     redundant: bool = False
     plan_wait_all: bool = True    # static schemes wait for the max
+    # schemes whose mc/mc_grid accept a per-exchange-round rate_schedule
+    # (drifting scenario families); single-shot schemes run at the
+    # nominal (round-0) rates and leave this False
+    supports_rate_schedule: bool = False
 
     # -- planning -----------------------------------------------------------
 
@@ -306,10 +310,25 @@ def _final_phase(assign: np.ndarray, lambdas: np.ndarray,
 def simulate_work_exchange_scalar(het: HetSpec, N: int, cfg: ExchangeConfig,
                                   rng: np.random.Generator,
                                   capped_mode: Literal["carry", "waterfill"]
-                                  = "carry") -> RunStats:
-    """Algorithms 1 (known het) and 3 (unknown het), single trial."""
+                                  = "carry",
+                                  rate_schedule: Optional[np.ndarray] = None
+                                  ) -> RunStats:
+    """Algorithms 1 (known het) and 3 (unknown het), single trial.
+
+    ``rate_schedule`` (optional ``(R, K)``) drives drifting scenarios:
+    round ``r``'s service draws use row ``min(r, R - 1)`` while the
+    assignment keeps using the nominal ``het.lambdas`` (known) or the
+    online estimate (unknown) -- the exact per-trial reference the
+    batched drift engines are validated against.
+    """
     lam = het.lambdas
     K = het.K
+    sched = None
+    if rate_schedule is not None:
+        sched = np.asarray(rate_schedule, dtype=np.float64)
+        if sched.ndim != 2 or sched.shape[1] != K:
+            raise ValueError(f"rate_schedule must be (R, K={K}); "
+                             f"got shape {sched.shape}")
     threshold = cfg.threshold_frac * N / K
     cap = (np.inf if cfg.storage_cap_frac is None or cfg.known_heterogeneity
            else int(np.ceil(cfg.storage_cap_frac * N / K)))
@@ -342,7 +361,9 @@ def simulate_work_exchange_scalar(het: HetSpec, N: int, cfg: ExchangeConfig,
         # communication overhead, eq. (1): only units beyond the leftover
         if iters > 0:
             n_comm += float(np.maximum(assign - n_left_prev, 0).sum())
-        t_star, done = _iteration_outcome(assign, lam, rng)
+        lam_t = (lam if sched is None
+                 else sched[min(iters, sched.shape[0] - 1)])
+        t_star, done = _iteration_outcome(assign, lam_t, rng)
         iters += 1
         t_iter.append(t_star)
         t_comp += t_star
@@ -360,7 +381,9 @@ def simulate_work_exchange_scalar(het: HetSpec, N: int, cfg: ExchangeConfig,
         assign = proportional_assignment(rates, n_rem)
         if iters > 0:
             n_comm += float(np.maximum(assign - n_left_prev, 0).sum())
-        t_comp += _final_phase(assign, lam, rng)
+        lam_t = (lam if sched is None
+                 else sched[min(iters, sched.shape[0] - 1)])
+        t_comp += _final_phase(assign, lam_t, rng)
         n_done += assign
         iters += 1
         t_iter.append(t_iter[-1] if t_iter else t_comp)
@@ -380,7 +403,9 @@ def work_exchange_mc_batched(het: HetSpec, N: int, cfg: ExchangeConfig,
                              capped_mode: Literal["carry", "waterfill"]
                              = "carry", keep_trials: bool = False,
                              scheme_name: str = "work_exchange",
-                             backend: Optional[str] = None) -> MCReport:
+                             backend: Optional[str] = None,
+                             rate_schedule: Optional[np.ndarray] = None
+                             ) -> MCReport:
     """All ``trials`` work-exchange runs at once through a sampler backend.
 
     The heavy lifting lives in ``repro.core.samplers``: the ``numpy``
@@ -388,11 +413,18 @@ def work_exchange_mc_batched(het: HetSpec, N: int, cfg: ExchangeConfig,
     single trial it consumes randomness in exactly the order of
     ``simulate_work_exchange_scalar``, which the tests exploit for
     seed-for-seed validation); the ``jax`` backend fuses the same pipeline
-    into one jitted dispatch.
+    into one jitted dispatch.  ``rate_schedule`` (optional ``(R, K)``) is
+    the per-exchange-round service-rate schedule of the drifting
+    scenarios, threaded through every backend.
     """
     name = resolve_backend(backend)
+    kwargs = {}
+    if rate_schedule is not None:   # only drift-aware backends see the kwarg
+        kwargs["rate_schedule"] = np.asarray(rate_schedule,
+                                             dtype=np.float64)[None, :, :]
     ts, its, cs = get_backend(name).work_exchange_grid(
-        het.lambdas[None, :], N, cfg, int(trials), rng, capped_mode)
+        het.lambdas[None, :], N, cfg, int(trials), rng, capped_mode,
+        **kwargs)
     return _report(scheme_name, ts, its, cs, keep_trials,
                    extra={"backend": name})
 
@@ -772,6 +804,7 @@ class _WorkExchangeBase(Scheme):
 
     known: bool = True
     plan_wait_all = False
+    supports_rate_schedule = True   # drifting scenarios thread through
 
     def __init__(self, threshold_frac: float = 0.01,
                  storage_cap_frac: Optional[float] = 1.0,
@@ -803,41 +836,68 @@ class _WorkExchangeBase(Scheme):
         return sizes
 
     def simulate(self, het: HetSpec, N: int,
-                 rng: np.random.Generator) -> RunStats:
+                 rng: np.random.Generator,
+                 rate_schedule: Optional[np.ndarray] = None) -> RunStats:
         return simulate_work_exchange_scalar(het, N, self.config(), rng,
-                                             self.capped_mode)
+                                             self.capped_mode,
+                                             rate_schedule=rate_schedule)
 
     def mc(self, het: HetSpec, N: int, trials: int,
            rng: np.random.Generator, keep_trials: bool = False,
-           backend: Optional[str] = None) -> MCReport:
+           backend: Optional[str] = None,
+           rate_schedule: Optional[np.ndarray] = None) -> MCReport:
         if self.engine == "loop":    # the per-trial validation reference
             # backend is unused by the scalar loop but still validated,
             # so a typo'd name fails fast here like everywhere else
-            return super().mc(het, N, trials, rng, keep_trials,
-                              backend=backend)
+            if rate_schedule is None:
+                return super().mc(het, N, trials, rng, keep_trials,
+                                  backend=backend)
+            validate_backend(backend)
+            ts, its, cs = (np.empty(trials) for _ in range(3))
+            for i in range(trials):
+                s = self.simulate(het, N, rng, rate_schedule=rate_schedule)
+                ts[i], its[i], cs[i] = s.t_comp, s.iterations, s.n_comm
+            return _report(self.name, ts, its, cs, keep_trials)
         return work_exchange_mc_batched(het, N, self.config(), trials, rng,
                                         self.capped_mode, keep_trials,
                                         scheme_name=self.name,
-                                        backend=backend)
+                                        backend=backend,
+                                        rate_schedule=rate_schedule)
 
     def mc_grid(self, het_specs: Sequence[HetSpec], N: int, trials: int,
                 rng: np.random.Generator, keep_trials: bool = False,
-                backend: Optional[str] = None) -> List[MCReport]:
+                backend: Optional[str] = None,
+                rate_schedule: Optional[np.ndarray] = None
+                ) -> List[MCReport]:
         """One engine dispatch for the whole ``(het_specs) x trials`` batch.
 
         Requires every spec to share K (one rate matrix row per spec);
         mixed-K grids and the ``engine="loop"`` reference fall back to the
-        per-spec loop.
+        per-spec loop.  ``rate_schedule`` (optional ``(G, R, K)``, one
+        per-round schedule per spec) is the drifting-scenario contract:
+        service draws follow the schedule, assignments stay nominal /
+        estimated.
         """
         specs = list(het_specs)
         if (self.engine == "loop" or not specs
                 or len({h.K for h in specs}) != 1):
-            return super().mc_grid(specs, N, trials, rng,
-                                   keep_trials=keep_trials, backend=backend)
+            if rate_schedule is None:
+                return super().mc_grid(specs, N, trials, rng,
+                                       keep_trials=keep_trials,
+                                       backend=backend)
+            sched = np.asarray(rate_schedule, dtype=np.float64)
+            return [self.mc(het, N, trials, rng, keep_trials=keep_trials,
+                            backend=backend, rate_schedule=sched[g])
+                    for g, het in enumerate(specs)]
         name = resolve_backend(backend)
         lam = np.stack([h.lambdas for h in specs])
+        kwargs = {}
+        if rate_schedule is not None:
+            kwargs["rate_schedule"] = np.asarray(rate_schedule,
+                                                 dtype=np.float64)
         arrays = get_backend(name).work_exchange_grid(
-            lam, N, self.config(), int(trials), rng, self.capped_mode)
+            lam, N, self.config(), int(trials), rng, self.capped_mode,
+            **kwargs)
         return _grid_reports(self.name, specs, int(trials), arrays,
                              keep_trials, name)
 
@@ -965,22 +1025,42 @@ class TraceReplayScheme(Scheme):
     master protocol (``MasterScheduler`` + ``VirtualWorkerPool``'s
     measured-trace path).
 
-    ``traces`` is a (K, E) array of observed rates (wrapping after E
-    epochs).  Without one, a synthetic drift profile perturbs the HetSpec
-    rates by +-``drift`` over ``period`` epochs, phase-shifted per worker --
-    a stand-in for thermal throttling / co-tenancy traces.  The scheduler
-    sees only the *nominal* rates; realized epochs run at the trace rates.
+    Trace sources, in precedence order:
+
+    ``traces``
+        A literal (K, E) array of observed rates (wrapping after E
+        epochs).
+    ``corpus``
+        A named measured-trace corpus under ``results/traces/``
+        (``repro.scenarios.traces``): the scheme replays the corpus
+        window selected by ``worker_offset`` / ``epoch_start`` /
+        ``epochs`` -- the same windowing the ``trace_corpus`` scenario
+        family uses, so ``scheme_spec("trace_replay", corpus=...)``
+        inside an experiment replays exactly the grid point's trace.
+    *(neither)*
+        A synthetic drift profile perturbs the HetSpec rates by
+        +-``drift`` over ``period`` epochs, phase-shifted per worker --
+        the pre-corpus stand-in, kept for back-compat.
+
+    The scheduler sees only the *nominal* rates; realized epochs run at
+    the trace rates.
     """
 
     plan_wait_all = False
 
     def __init__(self, traces: Optional[np.ndarray] = None,
                  drift: float = 0.3, period: int = 8,
-                 threshold_frac: float = 0.05):
+                 threshold_frac: float = 0.05,
+                 corpus: Optional[str] = None, worker_offset: int = 0,
+                 epoch_start: int = 0, epochs: Optional[int] = None):
         self.traces = None if traces is None else np.asarray(traces, float)
         self.drift = float(drift)
         self.period = int(period)
         self.threshold_frac = float(threshold_frac)
+        self.corpus = corpus
+        self.worker_offset = int(worker_offset)
+        self.epoch_start = int(epoch_start)
+        self.epochs = None if epochs is None else int(epochs)
 
     def _traces_for(self, het: HetSpec) -> np.ndarray:
         if self.traces is not None:
@@ -988,6 +1068,10 @@ class TraceReplayScheme(Scheme):
                 raise ValueError(f"traces have {self.traces.shape[0]} "
                                  f"workers; het has {het.K}")
             return self.traces
+        if self.corpus is not None:
+            from repro.scenarios.traces import load_corpus
+            return load_corpus(self.corpus).window(
+                het.K, self.worker_offset, self.epoch_start, self.epochs)
         e = np.arange(self.period)
         k = np.arange(het.K)[:, None]
         profile = 1.0 + self.drift * np.sin(

@@ -62,7 +62,9 @@ class HetTrainer:
                  estimator_kind: str = "cumulative",
                  coded_stragglers: int = 1,
                  threshold_frac: float = 0.05,
-                 compressor=None):
+                 compressor=None,
+                 traces: Optional[np.ndarray] = None,
+                 trace_corpus: Optional[str] = None):
         if policy not in POLICIES:
             raise ValueError(f"policy {policy!r} not in {POLICIES}")
         self.model = model
@@ -73,7 +75,18 @@ class HetTrainer:
         self.units_per_step = units_per_step
         self.store = store
         self.loader = HetShardedLoader(store, self.K)
-        self.pool = VirtualWorkerPool(self.rates, seed=seed)
+        # trace-driven pool: realized epochs run at measured per-epoch
+        # rates (a literal (K, E) matrix, or a results/traces corpus by
+        # name) while every policy keeps scheduling by the nominal
+        # ``rates`` -- the same scheduler-sees-nominal split as the
+        # trace_corpus scenario family
+        if trace_corpus is not None:
+            if traces is not None:
+                raise ValueError("give either traces= or trace_corpus=, "
+                                 "not both")
+            from repro.scenarios.traces import load_corpus
+            traces = load_corpus(trace_corpus).window(self.K)
+        self.pool = VirtualWorkerPool(self.rates, seed=seed, traces=traces)
         self.estimator_kind = estimator_kind
         self.coded_stragglers = coded_stragglers
         self.threshold_frac = threshold_frac

@@ -24,8 +24,17 @@ Module map:
     plan.py    -- compile_plan: resolve backend/devices, validate tasks
     engine.py  -- run_experiment / execute_plan (sharded mc_grid dispatch)
     store.py   -- ResultsStore: results/store/<spec-hash>.json
-    __main__   -- CLI: python -m repro.experiments [spec.json | --demo]
+    __main__   -- CLI: python -m repro.experiments [spec.json | --demo |
+                  ls | compare <hash-a> <hash-b>]
+
+The scenario axis (``grid=``) is pluggable: any family registered in
+``repro.scenarios.SCENARIO_REGISTRY`` (uniform_random / explicit /
+trace_corpus / drifting / hcmm_sweep) -- ``ScenarioGrid`` remains the
+PR-4 constructor facade for the first two.
 """
+from repro.scenarios import (SCENARIO_REGISTRY, ScenarioFamily, get_family,
+                             list_families)
+
 from .engine import ExperimentResult, execute_plan, run_experiment
 from .plan import Plan, SHARDED_BACKENDS, Task, compile_plan
 from .spec import (SPEC_VERSION, ExperimentSpec, ScenarioGrid, SchemeSpec,
@@ -35,6 +44,7 @@ from .store import DEFAULT_STORE_ROOT, ResultsStore, default_store
 __all__ = [
     "SPEC_VERSION", "ExperimentSpec", "ScenarioGrid", "SchemeSpec",
     "scheme_spec",
+    "SCENARIO_REGISTRY", "ScenarioFamily", "get_family", "list_families",
     "Plan", "Task", "SHARDED_BACKENDS", "compile_plan",
     "ExperimentResult", "execute_plan", "run_experiment",
     "DEFAULT_STORE_ROOT", "ResultsStore", "default_store",

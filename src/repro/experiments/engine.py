@@ -97,10 +97,23 @@ def execute_plan(plan: Plan) -> ExperimentResult:
     with shard:
         for task in plan.tasks:
             scheme = get_scheme(task.scheme, **task.params_dict)
+            kwargs = {}
+            if (plan.rate_schedules is not None
+                    and scheme.supports_rate_schedule):
+                # drifting / trace-corpus scenarios: the exchange-round
+                # engines follow the schedule; single-shot schemes run
+                # at the nominal (round-0 / window-mean) rates
+                kwargs["rate_schedule"] = plan.rate_schedules
             reports[task.key] = scheme.mc_grid(
                 plan.het_specs, spec.N, trials=spec.trials,
                 rng=np.random.default_rng(task.seed),
-                backend=plan.backend)
+                backend=plan.backend, **kwargs)
+            if plan.rate_schedules is not None and not kwargs:
+                # the grid drifts but this scheme cannot follow it:
+                # stamp the rows so stored results (and the CLI table)
+                # never read as if the scheme ran under the drift
+                for rep in reports[task.key]:
+                    rep.extra["nominal_rates_only"] = 1
     return ExperimentResult(spec=spec, spec_hash=plan.spec_hash,
                             reports=reports, env=_environment(plan),
                             wall_s=time.perf_counter() - t0)

@@ -21,7 +21,9 @@ execution would produce.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.schemes import get_scheme
 from repro.core.samplers import resolve_backend
@@ -50,11 +52,18 @@ class Task:
 
 @dataclasses.dataclass
 class Plan:
-    """Compiled execution plan: resolved spec + materialized work."""
+    """Compiled execution plan: resolved spec + materialized work.
+
+    ``rate_schedules`` is the scenario family's optional ``(G, R, K)``
+    per-exchange-round service-rate schedule (drifting / trace-corpus
+    grids), handed to every scheme task whose scheme declares
+    ``supports_rate_schedule``.
+    """
 
     spec: ExperimentSpec          # backend/devices concrete
     het_specs: List[HetSpec]
     tasks: List[Task]
+    rate_schedules: Optional[np.ndarray] = None
 
     @property
     def spec_hash(self) -> str:
@@ -95,7 +104,8 @@ def compile_plan(spec: ExperimentSpec) -> Plan:
                           seed=int(s.seed if s.seed is not None
                                    else spec.seed)))
     resolved = spec.replace(backend=backend, devices=devices)
-    return Plan(spec=resolved, het_specs=spec.grid.specs(), tasks=tasks)
+    return Plan(spec=resolved, het_specs=spec.grid.specs(), tasks=tasks,
+                rate_schedules=spec.grid.rate_schedules())
 
 
 __all__ = ["SHARDED_BACKENDS", "Task", "Plan", "compile_plan"]

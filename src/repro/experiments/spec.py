@@ -13,12 +13,22 @@ the same shape.  ``ExperimentSpec`` captures that shape declaratively:
                  scheme_spec("mds", opt_trials=64)),
         N=1_000_000, trials=20, seed=1234)
 
+The scenario axis is pluggable (``repro.scenarios``): ``grid`` accepts
+any registered ``ScenarioFamily`` -- the paper's ``uniform_random``
+points and ``explicit`` rate vectors (for which ``ScenarioGrid`` stays
+as the PR-4 constructor facade), measured ``trace_corpus`` windows,
+``drifting`` AR(1)/regime-switch rate evolution (whose per-round rate
+schedule threads through every sampler backend), and ``hcmm_sweep``
+load-optimized coded operating points.
+
 Specs are plain values: serializable to/from JSON losslessly (floats
 survive by shortest-repr round-trip), hashable via a canonical content
 hash (``spec_hash``), and therefore able to key the content-addressed
 results store (``repro.experiments.store``).  Execution knobs that
 change the sampled numbers -- backend, device count, seeds -- are part
-of the spec and hence of the hash: one hash, one set of numbers.
+of the spec and hence of the hash: one hash, one set of numbers.  The
+two PR-4 families serialize in their original shape, so pre-refactor
+hashes and store addresses survive.
 
 ``repro.experiments.plan`` compiles a spec into an execution ``Plan``;
 ``repro.experiments.engine`` runs the plan.
@@ -28,80 +38,41 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
-from typing import Any, Dict, List, Mapping, Optional, Tuple, Union
-
-import numpy as np
+from typing import Any, Dict, Mapping, Optional, Tuple, Union
 
 from repro.core.types import HetSpec
+from repro.scenarios import (ExplicitScenario, ScenarioFamily,
+                             ScenarioPoint, UniformRandomScenario,
+                             scenario_from_dict)
 
 SPEC_VERSION = 1
 
-ScenarioPoint = Tuple[float, float, int]        # (mu, sigma2, seed)
 
-
-@dataclasses.dataclass(frozen=True)
 class ScenarioGrid:
-    """The scenario axis: one K-worker ``HetSpec`` per grid point.
+    """PR-4 constructor facade over the two original scenario families.
 
-    Two point sources, used exclusively:
-
-    ``points``
-        ``(mu, sigma2, seed)`` triples; each materializes as
-        ``HetSpec.uniform_random(K, mu, sigma2, default_rng(seed))`` --
-        the paper's Section-7 scenario family, with the heterogeneity
-        draw pinned per point so the grid is a pure value.
-    ``explicit``
-        Literal ``HetSpec`` rate vectors (measured clusters, trace
-        corpora, adversarial layouts).  ``K`` is inferred.
+    ``ScenarioGrid(K=, points=)`` builds a ``uniform_random`` family,
+    ``ScenarioGrid(explicit=)`` an ``explicit`` one -- exactly the PR-4
+    surface, returning the registered family instances that now carry
+    the behaviour.  ``ScenarioGrid.from_dict`` deserializes *any*
+    registered family (``repro.scenarios.scenario_from_dict``),
+    including the key-less PR-4 shapes; unknown family names or unknown
+    keys raise ``KeyError`` listing the registered families.
     """
 
-    K: int = 0
-    points: Tuple[ScenarioPoint, ...] = ()
-    explicit: Tuple[HetSpec, ...] = ()
-
-    def __post_init__(self):
-        pts = tuple((float(mu), float(s2), int(seed))
-                    for mu, s2, seed in self.points)
-        exp = tuple(self.explicit)
-        if bool(pts) == bool(exp):
+    def __new__(cls, K: int = 0,
+                points: Tuple[ScenarioPoint, ...] = (),
+                explicit: Tuple[HetSpec, ...] = ()):
+        if bool(tuple(points)) == bool(tuple(explicit)):
             raise ValueError("ScenarioGrid needs exactly one of points= "
                              "or explicit=")
-        for h in exp:
-            if not isinstance(h, HetSpec):
-                raise TypeError(f"explicit entries must be HetSpec; "
-                                f"got {type(h).__name__}")
-        K = int(self.K) if pts else exp[0].K
-        if pts and K <= 0:
-            raise ValueError("points grids need K > 0")
-        if exp and any(h.K != K for h in exp):
-            raise ValueError("explicit HetSpecs must share K")
-        object.__setattr__(self, "points", pts)
-        object.__setattr__(self, "explicit", exp)
-        object.__setattr__(self, "K", K)
+        if points:
+            return UniformRandomScenario(K=K, points=tuple(points))
+        return ExplicitScenario(explicit=tuple(explicit))
 
-    def __len__(self) -> int:
-        return len(self.points) or len(self.explicit)
-
-    def specs(self) -> List[HetSpec]:
-        """Materialize the grid, point order preserved."""
-        if self.explicit:
-            return list(self.explicit)
-        return [HetSpec.uniform_random(self.K, mu, s2,
-                                       np.random.default_rng(seed))
-                for mu, s2, seed in self.points]
-
-    def to_dict(self) -> Dict[str, Any]:
-        if self.explicit:
-            return {"explicit": [h.to_dict() for h in self.explicit]}
-        return {"K": self.K, "points": [list(p) for p in self.points]}
-
-    @classmethod
-    def from_dict(cls, d: Mapping[str, Any]) -> "ScenarioGrid":
-        if "explicit" in d:
-            return cls(explicit=tuple(HetSpec.from_dict(h)
-                                      for h in d["explicit"]))
-        return cls(K=int(d["K"]),
-                   points=tuple(tuple(p) for p in d["points"]))
+    @staticmethod
+    def from_dict(d: Mapping[str, Any]) -> ScenarioFamily:
+        return scenario_from_dict(d)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -175,7 +146,7 @@ class ExperimentSpec:
     """
 
     name: str
-    grid: ScenarioGrid
+    grid: ScenarioFamily
     schemes: Tuple[SchemeSpec, ...]
     N: int
     trials: int
@@ -185,6 +156,10 @@ class ExperimentSpec:
     version: int = SPEC_VERSION
 
     def __post_init__(self):
+        if not isinstance(self.grid, ScenarioFamily):
+            raise TypeError(f"grid must be a registered ScenarioFamily "
+                            f"(or built via ScenarioGrid); got "
+                            f"{type(self.grid).__name__}")
         object.__setattr__(self, "schemes", tuple(self.schemes))
         if not self.schemes:
             raise ValueError("ExperimentSpec needs at least one scheme")
@@ -250,6 +225,6 @@ class ExperimentSpec:
 
 
 __all__ = [
-    "SPEC_VERSION", "ScenarioGrid", "SchemeSpec", "scheme_spec",
-    "ExperimentSpec",
+    "SPEC_VERSION", "ScenarioGrid", "ScenarioFamily", "SchemeSpec",
+    "scheme_spec", "ExperimentSpec",
 ]

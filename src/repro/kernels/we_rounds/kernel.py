@@ -30,10 +30,28 @@ DEFAULT_BLOCK_B = 128
 def _we_rounds_kernel(seed_ref, lam_ref, out_ref, *, K: int, block_b: int,
                       n0: float, threshold: float, cap: float, known: bool,
                       max_iter: int):
+    _we_rounds_body(seed_ref, lam_ref, None, out_ref, K=K, block_b=block_b,
+                    n0=n0, threshold=threshold, cap=cap, known=known,
+                    max_iter=max_iter)
+
+
+def _we_rounds_drift_kernel(seed_ref, lam_ref, sched_ref, out_ref, *,
+                            K: int, block_b: int, n0: float,
+                            threshold: float, cap: float, known: bool,
+                            max_iter: int):
+    _we_rounds_body(seed_ref, lam_ref, sched_ref, out_ref, K=K,
+                    block_b=block_b, n0=n0, threshold=threshold, cap=cap,
+                    known=known, max_iter=max_iter)
+
+
+def _we_rounds_body(seed_ref, lam_ref, sched_ref, out_ref, *, K: int,
+                    block_b: int, n0: float, threshold: float, cap: float,
+                    known: bool, max_iter: int):
     k0 = seed_ref[0, 0]
     k1 = seed_ref[0, 1]
     lam = lam_ref[...]
     inv_lam = 1.0 / lam
+    sched = None if sched_ref is None else sched_ref[...]
     base = pl.program_id(0) * block_b
     row_ids = base + jax.lax.broadcasted_iota(jnp.int32, (block_b, 1), 0)
 
@@ -43,16 +61,17 @@ def _we_rounds_kernel(seed_ref, lam_ref, out_ref, *, K: int, block_b: int,
     def body(st):
         return ref.round_body(st, lam, inv_lam, row_ids, k0, k1, K=K,
                               cap=cap, threshold=threshold, known=known,
-                              max_iter=max_iter)
+                              max_iter=max_iter, sched=sched)
 
     st = jax.lax.while_loop(
         cond, body, ref.init_state(block_b, K, n0, threshold, known))
     t, it, cm = ref.final_phase(st, lam, inv_lam, row_ids, k0, k1, K=K,
-                                known=known, max_iter=max_iter)
+                                known=known, max_iter=max_iter, sched=sched)
     out_ref[...] = jnp.stack([t, it, cm], axis=1)
 
 
-def we_rounds_pallas(lam_rows: jnp.ndarray, seed: jnp.ndarray, *,
+def we_rounds_pallas(lam_rows: jnp.ndarray, seed: jnp.ndarray,
+                     sched_rows: jnp.ndarray = None, *,
                      n0: float, threshold: float, cap: float, known: bool,
                      max_iter: int, block_b: int = DEFAULT_BLOCK_B,
                      interpret: bool = False) -> jnp.ndarray:
@@ -61,21 +80,40 @@ def we_rounds_pallas(lam_rows: jnp.ndarray, seed: jnp.ndarray, *,
 
     ``B`` must be a multiple of ``block_b`` (callers pad -- see
     ``ops.we_rounds_grid``); ``seed`` is a ``(1, 2)`` uint32 array shared
-    by every tile.
+    by every tile.  ``sched_rows`` (optional ``(B, R, K)``) adds the
+    drifting-scenario per-round rate schedule as a third input: each
+    program carries its tile's ``(block_b, R, K)`` schedule in VMEM and
+    reads the current round's rates with a one-hot masked sum (counters
+    are untouched, so drift runs stay bit-identical to the reference).
     """
     B, K = lam_rows.shape
     assert B % block_b == 0, f"pad B={B} to a multiple of {block_b}"
-    kernel = functools.partial(_we_rounds_kernel, K=K, block_b=block_b,
-                               n0=n0, threshold=threshold, cap=cap,
-                               known=known, max_iter=max_iter)
+    if sched_rows is None:
+        kernel = functools.partial(_we_rounds_kernel, K=K, block_b=block_b,
+                                   n0=n0, threshold=threshold, cap=cap,
+                                   known=known, max_iter=max_iter)
+        in_specs = [
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+        ]
+        args = (seed, lam_rows)
+    else:
+        R = sched_rows.shape[1]
+        kernel = functools.partial(_we_rounds_drift_kernel, K=K,
+                                   block_b=block_b, n0=n0,
+                                   threshold=threshold, cap=cap,
+                                   known=known, max_iter=max_iter)
+        in_specs = [
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, R, K), lambda i: (i, 0, 0)),
+        ]
+        args = (seed, lam_rows, sched_rows)
     return pl.pallas_call(
         kernel,
         grid=(B // block_b,),
-        in_specs=[
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
-            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, 3), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, 3), jnp.float32),
         interpret=interpret,
-    )(seed, lam_rows)
+    )(*args)

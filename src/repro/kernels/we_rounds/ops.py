@@ -71,13 +71,15 @@ def _jit_kernel(n0: float, threshold: float, cap: float, known: bool,
 
 @functools.lru_cache(maxsize=None)
 def _jit_sharded(mesh, n0: float, threshold: float, cap: float, known: bool,
-                 max_iter: int, block_b: int, mode: str):
+                 max_iter: int, block_b: int, mode: str,
+                 drift: bool = False):
     """shard_map wrapper over the per-mode fn, cached per (mesh, config).
 
     Each device runs the whole pipeline on its block of rows with its own
     seed pair (one ``(D, 2)`` seed matrix, one row per device), so shards
     never synchronize; ``check_rep=False`` because jax<=0.4 has no
-    replication rule for ``while``.
+    replication rule for ``while``.  ``drift`` adds the per-round rate
+    schedule as a third batch-sharded input.
     """
     import jax
     from jax.experimental.shard_map import shard_map
@@ -88,6 +90,9 @@ def _jit_sharded(mesh, n0: float, threshold: float, cap: float, known: bool,
 
         def block(seeds_b, lam_b):
             return fn(lam_b, seeds_b[0])
+
+        def block_drift(seeds_b, lam_b, sched_b):
+            return fn(lam_b, seeds_b[0], sched_b)
     else:
         fn = _jit_kernel(n0, threshold, cap, known, max_iter, block_b,
                          mode == "interpret")
@@ -96,15 +101,30 @@ def _jit_sharded(mesh, n0: float, threshold: float, cap: float, known: bool,
             out = fn(lam_b, seeds_b)
             return out[:, 0], out[:, 1], out[:, 2]
 
+        def block_drift(seeds_b, lam_b, sched_b):
+            out = fn(lam_b, seeds_b, sched_b)
+            return out[:, 0], out[:, 1], out[:, 2]
+
     spec = PartitionSpec(mesh.axis_names[0])
+    if drift:
+        return jax.jit(shard_map(block_drift, mesh=mesh,
+                                 in_specs=(spec, spec, spec),
+                                 out_specs=spec, check_rep=False))
     return jax.jit(shard_map(block, mesh=mesh, in_specs=(spec, spec),
                              out_specs=spec, check_rep=False))
+
+
+def _pad_rows(rows: Optional[np.ndarray], pad: int) -> Optional[np.ndarray]:
+    if rows is None or pad == 0:
+        return rows
+    return np.concatenate([rows, np.repeat(rows[:1], pad, axis=0)])
 
 
 def we_rounds_grid(lam_rows: np.ndarray, seed, *, n0: float,
                    threshold: float, cap: float, known: bool,
                    max_iter: int, mode: Optional[str] = None,
-                   block_b: int = DEFAULT_BLOCK_B, mesh=None
+                   block_b: int = DEFAULT_BLOCK_B, mesh=None,
+                   rate_schedule: Optional[np.ndarray] = None
                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Fused round pipeline over ``(B, K)`` rate rows -> per-row
     ``(t_comp, iterations, n_comm)`` float64 numpy arrays.
@@ -118,6 +138,11 @@ def we_rounds_grid(lam_rows: np.ndarray, seed, *, n0: float,
     ``(mesh.size, 2)`` matrix, one independent seed pair per device.
     Sharded runs are NOT bit-identical to single-device runs (different
     counter keying), but every mode agrees bitwise at a fixed layout.
+
+    ``rate_schedule`` (optional ``(B, R, K)``, row-aligned with
+    ``lam_rows``) is the drifting-scenario per-round schedule; every mode
+    (kernel / interpret / reference) consumes it identically, so drift
+    runs keep the cross-mode bit-identity.
     """
     import jax.numpy as jnp
 
@@ -125,6 +150,12 @@ def we_rounds_grid(lam_rows: np.ndarray, seed, *, n0: float,
     if lam_rows.ndim != 2:
         raise ValueError(f"lam_rows must be (B, K); got {lam_rows.shape}")
     B = lam_rows.shape[0]
+    sched = None
+    if rate_schedule is not None:
+        sched = np.asarray(rate_schedule, dtype=np.float32)
+        if sched.ndim != 3 or sched.shape[0] != B:
+            raise ValueError(f"rate_schedule must be (B={B}, R, K); "
+                             f"got {sched.shape}")
     mode = resolve_mode(mode)
     if mesh is not None and mesh.size > 1:
         D = int(mesh.size)
@@ -132,12 +163,15 @@ def we_rounds_grid(lam_rows: np.ndarray, seed, *, n0: float,
         # every device block must be a whole number of kernel tiles
         quantum = D if mode == "reference" else D * block_b
         pad = (-B) % quantum
-        if pad:
-            lam_rows = np.concatenate(
-                [lam_rows, np.repeat(lam_rows[:1], pad, axis=0)])
+        lam_rows = _pad_rows(lam_rows, pad)
+        sched = _pad_rows(sched, pad)
         fn = _jit_sharded(mesh, float(n0), float(threshold), float(cap),
-                          bool(known), int(max_iter), int(block_b), mode)
-        t, it, cm = fn(jnp.asarray(seed_arr), jnp.asarray(lam_rows))
+                          bool(known), int(max_iter), int(block_b), mode,
+                          drift=sched is not None)
+        args = (jnp.asarray(seed_arr), jnp.asarray(lam_rows))
+        if sched is not None:
+            args += (jnp.asarray(sched),)
+        t, it, cm = fn(*args)
         return (np.asarray(t, dtype=np.float64)[:B],
                 np.asarray(it, dtype=np.float64)[:B],
                 np.asarray(cm, dtype=np.float64)[:B])
@@ -145,18 +179,26 @@ def we_rounds_grid(lam_rows: np.ndarray, seed, *, n0: float,
 
     pad = (-B) % block_b
     if pad and mode != "reference":
-        lam_rows = np.concatenate(
-            [lam_rows, np.repeat(lam_rows[:1], pad, axis=0)])
+        lam_rows = _pad_rows(lam_rows, pad)
+        sched = _pad_rows(sched, pad)
 
     if mode == "reference":
         fn = _jit_reference(float(n0), float(threshold), float(cap),
                             bool(known), int(max_iter))
-        t, it, cm = fn(jnp.asarray(lam_rows), jnp.asarray(seed_arr))
+        if sched is None:
+            t, it, cm = fn(jnp.asarray(lam_rows), jnp.asarray(seed_arr))
+        else:
+            t, it, cm = fn(jnp.asarray(lam_rows), jnp.asarray(seed_arr),
+                           jnp.asarray(sched))
     else:
         fn = _jit_kernel(float(n0), float(threshold), float(cap),
                          bool(known), int(max_iter), int(block_b),
                          mode == "interpret")
-        out = fn(jnp.asarray(lam_rows), jnp.asarray(seed_arr[None, :]))
+        if sched is None:
+            out = fn(jnp.asarray(lam_rows), jnp.asarray(seed_arr[None, :]))
+        else:
+            out = fn(jnp.asarray(lam_rows), jnp.asarray(seed_arr[None, :]),
+                     jnp.asarray(sched))
         t, it, cm = out[:, 0], out[:, 1], out[:, 2]
     return (np.asarray(t, dtype=np.float64)[:B],
             np.asarray(it, dtype=np.float64)[:B],

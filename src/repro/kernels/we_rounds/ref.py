@@ -138,21 +138,42 @@ def init_state(rows: int, K: int, n0: float, threshold: float,
     return st
 
 
+def sched_inv_rates(sched: jnp.ndarray, iters: jnp.ndarray) -> jnp.ndarray:
+    """1/rate in effect at each row's current round, from a
+    ``(rows, R, K)`` per-round schedule (round >= R holds the last row).
+
+    Implemented as a one-hot masked sum rather than a gather so the same
+    code lowers inside the Pallas kernel and under plain jit.
+    """
+    R = sched.shape[1]
+    r_idx = jnp.minimum(iters, R - 1)                       # (rows, 1)
+    rounds = jax.lax.broadcasted_iota(jnp.int32, (1, R), 1)
+    sel = (r_idx == rounds).astype(sched.dtype)             # (rows, R)
+    return 1.0 / (sched * sel[:, :, None]).sum(1)           # (rows, K)
+
+
 def round_body(st: Dict[str, jnp.ndarray], lam: jnp.ndarray,
                inv_lam: jnp.ndarray, row_ids: jnp.ndarray, k0, k1, *,
                K: int, cap: float, threshold: float, known: bool,
-               max_iter: int) -> Dict[str, jnp.ndarray]:
+               max_iter: int, sched: jnp.ndarray = None
+               ) -> Dict[str, jnp.ndarray]:
     """One fluid exchange round on a tile (shared by kernel and oracle).
 
     The RNG round index is the row's own ``iters`` (== the global loop
     count while a row is active), so frozen rows recompute already-spent
     counters into fully-masked lanes and the result is independent of how
     many extra trips the surrounding ``while_loop`` makes.
+
+    ``sched`` (optional ``(rows, R, K)``) supplies each round's true
+    service rates (drifting scenarios): the Gamma draws use them, the
+    assignment shares keep using ``lam`` / the online estimate.
     """
     worker = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
     c1 = ((st["iters"] * K + worker) * N_PAIRS).astype(jnp.uint32)
     z_g, u0, u1, u2, z_b = round_uniforms(k0, k1, row_ids, c1)
 
+    if sched is not None:
+        inv_lam = sched_inv_rates(sched, st["iters"])
     rates = lam if known else st["lam_hat"]
     share = rates * (st["n_rem"] / rates.sum(1, keepdims=True))
     assign = jnp.minimum(share, jnp.float32(cap))
@@ -195,7 +216,8 @@ def round_body(st: Dict[str, jnp.ndarray], lam: jnp.ndarray,
 
 def final_phase(st: Dict[str, jnp.ndarray], lam: jnp.ndarray,
                 inv_lam: jnp.ndarray, row_ids: jnp.ndarray, k0, k1, *,
-                K: int, known: bool, max_iter: int):
+                K: int, known: bool, max_iter: int,
+                sched: jnp.ndarray = None):
     """Below the threshold: assign the remainder, wait for all workers.
     Uses the reserved round index ``max_iter`` (the loop never reaches it:
     in-loop draws happen at ``iters < max_iter``)."""
@@ -204,6 +226,8 @@ def final_phase(st: Dict[str, jnp.ndarray], lam: jnp.ndarray,
     z_g, u0, u1, u2, _ = round_uniforms(
         k0, k1, jnp.broadcast_to(row_ids, (row_ids.shape[0], 1)), c1)
     has_rem = st["n_rem"] > 1e-6
+    if sched is not None:
+        inv_lam = sched_inv_rates(sched, st["iters"])
     rates = lam if known else st["lam_hat"]
     share = rates * (st["n_rem"] / rates.sum(1, keepdims=True))
     comm = jnp.maximum(share - st["n_left"], 0.0).sum(1, keepdims=True)
@@ -222,14 +246,18 @@ def final_phase(st: Dict[str, jnp.ndarray], lam: jnp.ndarray,
 # full-batch jnp oracle (the pallas backend's CPU execution path)
 # ---------------------------------------------------------------------------
 
-def we_rounds_reference(lam_rows: jnp.ndarray, seed: jnp.ndarray, *,
+def we_rounds_reference(lam_rows: jnp.ndarray, seed: jnp.ndarray,
+                        sched: jnp.ndarray = None, *,
                         n0: float, threshold: float, cap: float,
                         known: bool, max_iter: int):
     """The whole ``(B, K)`` batch through one ``lax.while_loop``.
 
     Bit-identical to the Pallas kernel (interpret or compiled) on shared
     rows for any tiling, because every draw is a pure function of
-    ``(seed, row, worker, round, slot)``.
+    ``(seed, row, worker, round, slot)``.  ``sched`` (optional
+    ``(B, R, K)``) is the per-round service-rate schedule of the
+    drifting scenarios -- the RNG keying is unchanged, so kernel and
+    reference stay bit-identical with or without drift.
     """
     B, K = lam_rows.shape
     lam = lam_rows.astype(jnp.float32)
@@ -243,12 +271,12 @@ def we_rounds_reference(lam_rows: jnp.ndarray, seed: jnp.ndarray, *,
     def body(st):
         return round_body(st, lam, inv_lam, row_ids, k0, k1, K=K, cap=cap,
                           threshold=threshold, known=known,
-                          max_iter=max_iter)
+                          max_iter=max_iter, sched=sched)
 
     st = jax.lax.while_loop(cond, body,
                             init_state(B, K, n0, threshold, known))
     return final_phase(st, lam, inv_lam, row_ids, k0, k1, K=K, known=known,
-                       max_iter=max_iter)
+                       max_iter=max_iter, sched=sched)
 
 
 # ---------------------------------------------------------------------------

@@ -158,6 +158,32 @@ class TestWeRounds:
                         self._run(256, "reference", known)):
             np.testing.assert_array_equal(a, b)
 
+    @pytest.mark.parametrize("known", [True, False])
+    def test_drift_schedule_bitwise_across_modes(self, known):
+        """The per-round rate schedule (drifting scenarios) keeps the
+        kernel/reference bit-identity: counters are untouched, the
+        schedule only re-scales the Gamma draws -- including on odd
+        batches where the schedule rows are padded alongside."""
+        for B in (256, 100):
+            lam = self._lam_rows(B)
+            rng = np.random.default_rng(17)
+            sched = (lam[:, None, :]
+                     * np.exp(0.15 * rng.standard_normal((B, 6, self.K))))
+            cap = np.inf if known else float(np.ceil(self.N / self.K))
+            out = [we_rounds_grid(lam, (11, 22), n0=self.N,
+                                  threshold=self.THRESHOLD, cap=cap,
+                                  known=known, max_iter=10_000, mode=mode,
+                                  rate_schedule=sched)
+                   for mode in ("interpret", "reference")]
+            for a, b in zip(*out):
+                np.testing.assert_array_equal(a, b)
+            # and the schedule actually changed the outcome
+            plain = we_rounds_grid(lam, (11, 22), n0=self.N,
+                                   threshold=self.THRESHOLD, cap=cap,
+                                   known=known, max_iter=10_000,
+                                   mode="reference")
+            assert not np.array_equal(out[1][0], plain[0])
+
     @pytest.mark.parametrize("B", [1, 77, 130, 200])
     def test_padding_path_odd_batches(self, B):
         """Odd / non-power-of-two trial counts pad to the tile multiple;

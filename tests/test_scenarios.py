@@ -1,0 +1,429 @@
+"""Scenario-family subsystem: registry contract (round-trip + the hash
+covers every knob, per registered family), PR-4 spec-hash back-compat
+pins, strict unknown-key/unknown-family errors, the measured-trace
+corpus loader, drifting schedules (incl. scalar-reference bit-identity
+through the numpy engine), HCMM load sweeps, and the experiment-engine
+integration that threads per-round schedules to the schemes."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.schemes import get_scheme, simulate_work_exchange_scalar
+from repro.core.types import ExchangeConfig, HetSpec
+from repro.experiments import (ExperimentSpec, ScenarioGrid, compile_plan,
+                               run_experiment, scheme_spec)
+from repro.scenarios import (SCENARIO_REGISTRY, DriftingScenario,
+                             ExplicitScenario, HCMMSweepScenario,
+                             ScenarioFamily, TraceCorpusScenario,
+                             UniformRandomScenario, get_family,
+                             list_families, load_corpus, register_family,
+                             scenario_from_dict)
+
+RNG = lambda s=0: np.random.default_rng(s)  # noqa: E731
+
+# one representative instance per registered family (a new family must
+# add itself here or the registry-coverage test fails)
+SAMPLES = {
+    "uniform_random": UniformRandomScenario(
+        K=8, points=((10.0, 10.0 ** 2 / 6, 1), (20.0, 0.0, 2))),
+    "explicit": ExplicitScenario(
+        explicit=(HetSpec(np.array([1.0, 2.0, 3.0])),
+                  HetSpec(np.array([2.5, 2.5, 2.5])))),
+    "drifting": DriftingScenario(
+        K=8, points=((20.0, 20.0 ** 2 / 6, 3),), kind="ar1", rounds=12),
+    "trace_corpus": TraceCorpusScenario(
+        corpus="default_64x48", K=12, windows=((0, 0), (24, 16)),
+        epochs=10),
+    "hcmm_sweep": HCMMSweepScenario(
+        K=10, mu=30.0, sigma2=30.0 ** 2 / 6, seed=3, loads=(4, 64),
+        opt_trials=32),
+}
+
+# per-family knob tweaks that MUST move the serialized dict (and hence
+# the spec hash): every materialization-relevant field appears here
+KNOB_VARIANTS = {
+    "uniform_random": [dict(K=9), dict(points=((10.0, 5.0, 1),))],
+    "explicit": [dict(explicit=(HetSpec(np.array([1.0, 2.0, 3.5])),))],
+    "drifting": [dict(K=9), dict(points=((21.0, 0.0, 3),)),
+                 dict(kind="regime"), dict(rounds=13), dict(rho=0.5),
+                 dict(drift_sigma=0.3), dict(regime_prob=0.2),
+                 dict(regime_scale=0.9), dict(recover_prob=0.5)],
+    "trace_corpus": [dict(corpus="other_corpus"), dict(K=13),
+                     dict(windows=((1, 0),)), dict(epochs=11)],
+    "hcmm_sweep": [dict(K=11), dict(mu=31.0), dict(sigma2=100.0),
+                   dict(seed=4), dict(loads=(8, 64)),
+                   dict(redundancies=(1.0, 1.5)), dict(opt_trials=33)],
+}
+
+
+def canon(fam: ScenarioFamily) -> str:
+    return json.dumps(fam.to_dict(), sort_keys=True)
+
+
+class TestRegistry:
+    def test_all_families_registered(self):
+        assert list_families() == sorted(
+            ("uniform_random", "explicit", "drifting", "trace_corpus",
+             "hcmm_sweep"))
+
+    def test_samples_cover_the_registry(self):
+        assert set(SAMPLES) == set(SCENARIO_REGISTRY)
+        assert set(KNOB_VARIANTS) == set(SCENARIO_REGISTRY)
+
+    def test_get_family_unknown_raises(self):
+        with pytest.raises(KeyError, match="registered|have"):
+            get_family("nope")
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_family("drifting")(DriftingScenario)
+
+
+@pytest.mark.parametrize("name", sorted(SAMPLES))
+class TestFamilyContract:
+    """The per-family value contract, over every registered family."""
+
+    def test_round_trip_lossless(self, name):
+        fam = SAMPLES[name]
+        back = scenario_from_dict(json.loads(json.dumps(fam.to_dict())))
+        assert back == fam
+        assert back.to_dict() == fam.to_dict()
+        assert type(back) is type(fam)
+
+    def test_specs_deterministic_value(self, name):
+        fam = SAMPLES[name]
+        if name == "trace_corpus" and fam.corpus == "other_corpus":
+            pytest.skip("needs the committed corpus")
+        a, b = fam.specs(), fam.specs()
+        assert a == b
+        assert len(fam) == len(a) > 0
+        assert all(h.K == fam.K for h in a)
+        sched = fam.rate_schedules()
+        if sched is not None:
+            assert sched.shape[0] == len(fam)
+            assert sched.shape[2] == fam.K
+            assert (sched > 0).all()
+            np.testing.assert_array_equal(sched, fam.rate_schedules())
+
+    def test_hash_covers_every_knob(self, name):
+        base = SAMPLES[name]
+        seen = {canon(base)}
+        for changes in KNOB_VARIANTS[name]:
+            variant = type(base)(**{**_fields(base), **changes})
+            c = canon(variant)
+            assert c not in seen, (name, changes)
+            seen.add(c)
+
+    def test_unknown_key_raises_keyerror(self, name):
+        d = dict(SAMPLES[name].to_dict())
+        d["bogus_knob"] = 1
+        with pytest.raises(KeyError, match="bogus_knob"):
+            scenario_from_dict(d)
+
+
+def _fields(fam):
+    import dataclasses
+    return {f.name: getattr(fam, f.name)
+            for f in dataclasses.fields(fam)}
+
+
+class TestBackCompat:
+    """PR-4 specs keep their hashes and store addresses (acceptance)."""
+
+    def test_uniform_random_spec_hash_pinned(self):
+        spec = ExperimentSpec(
+            name="pin-uniform",
+            grid=ScenarioGrid(K=8, points=[(10.0, 10.0 ** 2 / 6, 1),
+                                           (20.0, 0.0, 2)]),
+            schemes=(scheme_spec("work_exchange"),),
+            N=5000, trials=8, seed=42, backend="numpy", devices=1)
+        # literal PR-4 hash: a change here orphans every stored result
+        assert spec.spec_hash() == (
+            "5a1f47511f756d8832ec4d975a58a840"
+            "d31fdba8c55412fde64066b0a98e06e0")
+
+    def test_explicit_spec_hash_pinned(self):
+        spec = ExperimentSpec(
+            name="pin-explicit",
+            grid=ScenarioGrid(explicit=(HetSpec(np.array([1.0, 2.0, 3.0])),
+                                        HetSpec(np.array([2.5, 2.5,
+                                                          2.5])))),
+            schemes=(scheme_spec("hedged"),),
+            N=2000, trials=4, seed=7, backend="numpy", devices=1)
+        assert spec.spec_hash() == (
+            "237e6cf1ca324c4e1ce41938893e79b9"
+            "8f59e2c928ac5c21b45eb0c338bbd2f8")
+
+    def test_committed_store_entries_still_addressable(self):
+        from repro.experiments import default_store
+        store = default_store()
+        entries = store.entries()
+        assert entries, "committed results/store entries missing"
+        for h in entries:
+            result = store.get(h)
+            assert result is not None, h
+            assert result.spec.spec_hash() == h
+
+    def test_facade_builds_registered_families(self):
+        g = ScenarioGrid(K=4, points=[(10.0, 0.0, 1)])
+        assert isinstance(g, UniformRandomScenario)
+        e = ScenarioGrid(explicit=(HetSpec(np.array([1.0])),))
+        assert isinstance(e, ExplicitScenario)
+        with pytest.raises(ValueError, match="exactly one"):
+            ScenarioGrid(K=4)
+        with pytest.raises(ValueError, match="exactly one"):
+            ScenarioGrid(K=4, points=[(1.0, 0.0, 1)],
+                         explicit=(HetSpec(np.array([1.0])),))
+
+    def test_legacy_dict_shapes_still_deserialize(self):
+        u = ScenarioGrid.from_dict({"K": 4, "points": [[10.0, 0.0, 1]]})
+        assert isinstance(u, UniformRandomScenario)
+        e = ScenarioGrid.from_dict({"explicit": [{"lambdas": [1.0, 2.0]}]})
+        assert isinstance(e, ExplicitScenario)
+
+
+class TestStrictKeys:
+    """Satellite: unknown scenario/family keys raise KeyError listing
+    the registered families (the validate_backend behaviour)."""
+
+    def test_legacy_shape_with_extra_key_raises(self):
+        # PR-4 ScenarioGrid silently swallowed extra keys; now: KeyError
+        with pytest.raises(KeyError) as ei:
+            ScenarioGrid.from_dict({"K": 4, "points": [[10.0, 0.0, 1]],
+                                    "bogus": 1})
+        msg = str(ei.value)
+        assert "bogus" in msg and "uniform_random" in msg
+
+    def test_unknown_family_lists_registered(self):
+        with pytest.raises(KeyError) as ei:
+            scenario_from_dict({"family": "no_such_family"})
+        assert "drifting" in str(ei.value)
+
+    def test_shapeless_dict_lists_registered(self):
+        with pytest.raises(KeyError) as ei:
+            scenario_from_dict({"Ks": 4})
+        assert "trace_corpus" in str(ei.value)
+
+    def test_spec_from_dict_propagates(self):
+        spec = ExperimentSpec(
+            name="x", grid=ScenarioGrid(K=4, points=[(10.0, 0.0, 1)]),
+            schemes=(scheme_spec("fixed"),), N=100, trials=2)
+        d = spec.to_dict()
+        d["grid"]["mystery"] = True
+        with pytest.raises(KeyError, match="mystery"):
+            ExperimentSpec.from_dict(d)
+
+
+class TestTraceCorpus:
+    def test_loader_and_window_wrapping(self):
+        c = load_corpus("default_64x48")
+        assert c.rates.shape == (64, 48)
+        assert (c.rates > 0).all()
+        w = c.window(K=8, worker_offset=60, epoch_start=44, epochs=10)
+        assert w.shape == (8, 10)
+        # wrapped rows/cols come from the same matrix
+        np.testing.assert_array_equal(w[0, :4], c.rates[60, 44:48])
+        np.testing.assert_array_equal(w[4:], c.window(8, 60, 44, 10)[4:])
+        np.testing.assert_array_equal(c.window(8, 64, 0, 48),
+                                      c.rates[:8])   # offsets wrap too
+
+    def test_missing_corpus_raises(self):
+        with pytest.raises(FileNotFoundError, match="no_such_corpus"):
+            load_corpus("no_such_corpus")
+
+    def test_nominal_is_window_mean_and_schedule_is_window(self):
+        fam = SAMPLES["trace_corpus"]
+        c = load_corpus(fam.corpus)
+        for g, (w, e) in enumerate(fam.windows):
+            win = c.window(fam.K, w, e, fam.epochs)
+            np.testing.assert_allclose(fam.specs()[g].lambdas,
+                                       win.mean(axis=1))
+            np.testing.assert_array_equal(fam.rate_schedules()[g], win.T)
+
+    def test_trace_replay_scheme_replays_the_same_window(self):
+        fam = SAMPLES["trace_corpus"]
+        params = fam.trace_replay_params(0)
+        scheme = get_scheme("trace_replay", **params)
+        het = fam.specs()[0]
+        np.testing.assert_array_equal(
+            scheme._traces_for(het),
+            load_corpus(fam.corpus).window(fam.K, *fam.windows[0],
+                                           fam.epochs))
+        stats = scheme.simulate(het, 2_000, RNG(1))
+        stats.check_work_conserved(2_000)
+
+    def test_trace_replay_synthetic_fallback_unchanged(self):
+        # no corpus, no traces: the PR-1 synthetic drift profile
+        het = HetSpec.uniform_random(6, 20.0, 10.0, RNG(2))
+        scheme = get_scheme("trace_replay")
+        prof = scheme._traces_for(het)
+        assert prof.shape == (6, scheme.period)
+        stats = scheme.simulate(het, 1_000, RNG(3))
+        stats.check_work_conserved(1_000)
+
+
+class TestDrifting:
+    def test_round0_is_nominal(self):
+        for kind in ("ar1", "regime"):
+            fam = DriftingScenario(K=8, points=((20.0, 20.0 ** 2 / 6, 3),),
+                                   kind=kind, rounds=6)
+            np.testing.assert_allclose(
+                fam.rate_schedules()[:, 0, :],
+                np.stack([h.lambdas for h in fam.specs()]))
+
+    def test_regime_switching_hits_the_throttled_state(self):
+        fam = DriftingScenario(K=16, points=((20.0, 0.0, 5),),
+                               kind="regime", rounds=40, regime_prob=0.3,
+                               regime_scale=0.5)
+        sched = fam.rate_schedules()[0]
+        base = fam.specs()[0].lambdas
+        ratio = sched / base[None, :]
+        assert set(np.round(np.unique(ratio), 6)) <= {0.5, 1.0}
+        assert (ratio == 0.5).any() and (ratio == 1.0).any()
+
+    def test_invalid_knobs_rejected(self):
+        good = dict(K=4, points=((10.0, 0.0, 1),))
+        with pytest.raises(ValueError, match="kind"):
+            DriftingScenario(kind="brownian", **good)
+        with pytest.raises(ValueError, match="rounds"):
+            DriftingScenario(rounds=0, **good)
+        with pytest.raises(ValueError, match="rho"):
+            DriftingScenario(rho=1.0, **good)
+
+    def test_scalar_reference_bit_identical_to_batched_numpy(self):
+        """The exact scalar drift path == the batched numpy engine at
+        trials=1 (same stream), for both WE variants."""
+        fam = SAMPLES["drifting"]
+        het = fam.specs()[0]
+        sched = fam.rate_schedules()[0]
+        for name, known in (("work_exchange", True),
+                            ("work_exchange_unknown", False)):
+            cfg = ExchangeConfig(known_heterogeneity=known)
+            ref = simulate_work_exchange_scalar(het, 10_000, cfg, RNG(7),
+                                                rate_schedule=sched)
+            rep = get_scheme(name).mc(het, 10_000, 1, RNG(7),
+                                      keep_trials=True,
+                                      rate_schedule=sched)
+            assert rep.t_comp_trials[0] == ref.t_comp, name
+            assert rep.iterations_trials[0] == ref.iterations
+            assert rep.n_comm_trials[0] == ref.n_comm
+
+    def test_drift_changes_the_numbers(self):
+        het = HetSpec.uniform_random(8, 20.0, 20.0 ** 2 / 6, RNG(3))
+        # nominal round 0, then the whole cluster throttled to 40%
+        sched = np.concatenate([het.lambdas[None, :],
+                                np.repeat(het.lambdas[None, :] * 0.4, 23,
+                                          axis=0)])
+        still = get_scheme("work_exchange").mc(het, 20_000, 64, RNG(9))
+        drift = get_scheme("work_exchange").mc(het, 20_000, 64, RNG(9),
+                                               rate_schedule=sched)
+        # heavy throttling must slow completion beyond MC noise
+        assert drift.t_comp > still.t_comp + 4 * still.t_comp_std
+
+    def test_loop_engine_accepts_schedules(self):
+        fam = SAMPLES["drifting"]
+        het = fam.specs()[0]
+        sched = fam.rate_schedules()
+        rep = get_scheme("work_exchange", engine="loop").mc_grid(
+            [het], 5_000, 2, RNG(1), rate_schedule=sched)
+        assert rep[0].trials == 2
+
+
+class TestHCMMSweep:
+    def test_operating_points_move_with_load(self):
+        fam = HCMMSweepScenario(K=20, mu=30.0, sigma2=30.0 ** 2 / 6,
+                                seed=3, loads=(4, 256), opt_trials=96)
+        (het_a, n_a, r_a), (het_b, n_b, r_b) = fam.operating_points()
+        assert n_a == 4 * 20 and n_b == 256 * 20
+        # light per-worker loads want redundancy; heavy loads don't
+        assert r_a > 1.0
+        assert r_b <= r_a
+        assert fam.het_mds_params(0) == {"redundancy": r_a}
+
+    def test_points_are_independent_draws(self):
+        fam = SAMPLES["hcmm_sweep"]
+        specs = fam.specs()
+        assert specs[0] != specs[1]
+        # derived seeds: adding a load point never perturbs the others
+        wider = HCMMSweepScenario(**{**_fields(fam),
+                                     "loads": fam.loads + (1024,)})
+        assert wider.specs()[:2] == specs
+
+    def test_validation(self):
+        good = dict(K=4, mu=10.0, sigma2=0.0, seed=1)
+        with pytest.raises(ValueError, match="redundancy"):
+            HCMMSweepScenario(redundancies=(0.9,), **good)
+        with pytest.raises(ValueError, match="loads"):
+            HCMMSweepScenario(loads=(), **good)
+
+
+class TestEngineIntegration:
+    """Schedules thread spec -> plan -> engine -> schemes."""
+
+    def drift_spec(self, **overrides):
+        base = dict(
+            name="drift-int",
+            grid=DriftingScenario(K=8, points=((20.0, 20.0 ** 2 / 6, 3),
+                                               (40.0, 0.0, 4)),
+                                  rounds=12),
+            schemes=(scheme_spec("work_exchange"),
+                     scheme_spec("work_exchange_unknown"),
+                     scheme_spec("hedged")),
+            N=5_000, trials=8, seed=42)
+        base.update(overrides)
+        return ExperimentSpec(**base)
+
+    def test_plan_carries_schedules(self):
+        plan = compile_plan(self.drift_spec())
+        assert plan.rate_schedules is not None
+        assert plan.rate_schedules.shape == (2, 12, 8)
+        # stationary grids carry none
+        plain = compile_plan(ExperimentSpec(
+            name="s", grid=ScenarioGrid(K=4, points=[(10.0, 0.0, 1)]),
+            schemes=(scheme_spec("fixed"),), N=100, trials=2))
+        assert plain.rate_schedules is None
+
+    def test_engine_matches_direct_mc_grid_with_schedule(self):
+        spec = self.drift_spec()
+        result = run_experiment(spec)
+        fam = spec.grid
+        direct = get_scheme("work_exchange").mc_grid(
+            fam.specs(), spec.N, trials=spec.trials, rng=RNG(42),
+            rate_schedule=fam.rate_schedules())
+        assert [r.t_comp for r in result.report("work_exchange")] == \
+            [r.t_comp for r in direct]
+
+    def test_schedule_reaches_only_schedule_aware_schemes(self):
+        # hedged (single-shot) must run exactly as without a schedule
+        spec = self.drift_spec()
+        result = run_experiment(spec)
+        fam = spec.grid
+        direct = get_scheme("hedged").mc_grid(
+            fam.specs(), spec.N, trials=spec.trials, rng=RNG(42))
+        assert [r.t_comp for r in result.report("hedged")] == \
+            [r.t_comp for r in direct]
+
+    def test_store_round_trip(self, tmp_path):
+        from repro.experiments import ResultsStore
+        store = ResultsStore(tmp_path)
+        spec = self.drift_spec()
+        first = run_experiment(spec, store=store)
+        assert not first.cache_hit
+        second = run_experiment(spec, store=store)
+        assert second.cache_hit
+        assert second.to_dict()["reports"] == first.to_dict()["reports"]
+
+    def test_trace_corpus_spec_end_to_end(self, tmp_path):
+        from repro.experiments import ResultsStore
+        grid = SAMPLES["trace_corpus"]
+        spec = ExperimentSpec(
+            name="trace-int", grid=grid,
+            schemes=(scheme_spec("work_exchange_unknown"),
+                     scheme_spec("trace_replay", key="replay",
+                                 **grid.trace_replay_params(0))),
+            N=2_000, trials=4, seed=7)
+        result = run_experiment(spec, store=ResultsStore(tmp_path))
+        assert len(result.report("work_exchange_unknown")) == len(grid)
+        assert run_experiment(spec,
+                              store=ResultsStore(tmp_path)).cache_hit
