@@ -41,6 +41,8 @@ WALL_KEYS_MDS = ("pr2_loop_s", "numpy_grid_s", "jax_grid_s",
                  "pallas_grid_s")
 WALL_KEYS_SHARDED = ("single_jax_s", "sharded_jax_s")
 WALL_KEYS_DRIFTING = ("numpy_grid_s", "jax_grid_s", "pallas_grid_s")
+WALL_KEYS_SERVE = ("engine_wall_s",)
+WALL_KEYS_JAX_CACHE = ("cold_first_call_s", "warm_first_call_s")
 
 
 def load(path: str) -> dict:
@@ -73,6 +75,14 @@ def collect_walls(report: dict) -> dict:
     for key in WALL_KEYS_DRIFTING:
         if key in drifting:
             walls[f"fig5_drifting.{key}"] = float(drifting[key])
+    serve = report.get("serve_load", {})
+    for key in WALL_KEYS_SERVE:
+        if key in serve:
+            walls[f"serve_load.{key}"] = float(serve[key])
+    jax_cache = report.get("jax_cache", {})
+    for key in WALL_KEYS_JAX_CACHE:
+        if key in jax_cache:
+            walls[f"jax_cache.{key}"] = float(jax_cache[key])
     return walls
 
 

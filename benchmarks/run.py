@@ -12,9 +12,12 @@ through the registry, wall-clock of the work-exchange MC engine
 (per-trial loop vs vectorized), the fig5 scenario-grid benchmark (PR-1
 per-point ``mc()`` loop vs one-dispatch ``mc_grid`` on the numpy / jax /
 pallas sampler backends), the ``mds_grid`` benchmark (batched MDS
-L-sweep vs the PR-2 per-L loop), and the ``fig5_sharded`` benchmark
+L-sweep vs the PR-2 per-L loop), the ``fig5_sharded`` benchmark
 (single-device vs shard_map multi-device jax execution of the fig5 WE
-grid), so the perf trajectory is tracked across PRs
+grid), the ``serve_load`` section (streaming-arrival engine wall +
+per-policy p99 at a pinned load -- see ``benchmarks.fig_load``), and the
+``jax_cache`` section (cold vs warm first-call wall with the persistent
+compilation cache), so the perf trajectory is tracked across PRs
 (see ``benchmarks.bench_gate``).
 
 Set REPRO_BENCH_QUICK=1 for a fast smoke pass.  The sampler backend for
@@ -110,6 +113,22 @@ def run_fig7():
               f"{r['iters']:.2f}",
               f"T/oracle={r['t_comp_over_oracle']:.3f}")
     return fig7.validate(rows)
+
+
+def run_fig_load():
+    from . import fig_load
+    rows = _stored_result(fig_load)
+    rows += _stored_result(fig_load, scenario="drifting")
+    for r in rows:
+        tag = (f"fig_load[{r['scenario']},{r['scheme']},"
+               f"load={r['load']:g}]")
+        _emit(f"{tag}.sojourn_s", f"{r['sojourn']:.4f}",
+              f"p99={r['p99']:.4f};thru={r['throughput_jobs']:.3f}/s;"
+              f"slo_miss={r['slo_miss']:.3f}")
+    for (scen, scheme), knee in sorted(fig_load.knees(rows).items()):
+        _emit(f"fig_load[{scen},{scheme}].knee_load",
+              "none" if knee is None else f"{knee:g}")
+    return fig_load.validate(rows, quick=QUICK)
 
 
 def _bench_fig5_grid(n: int, trials: int = 1000, reps: int = 5):
@@ -417,6 +436,107 @@ def _bench_fig5_drifting(n: int, trials: int = 1000, reps: int = 3):
     }
 
 
+def _bench_serve_load(reps: int = 2):
+    """The serving engine at the fig_load operating point: wall-clock of
+    one load cell (the sweep's unit of work) plus per-scheme p99 sojourn
+    at the pinned load, so dispatch-policy latency is tracked across PRs
+    alongside the batch-mode T_comp means.
+    """
+    import dataclasses
+
+    import numpy as np
+
+    from repro.core.types import HetSpec
+    from repro.serving import simulate_serving
+    from . import fig_load
+
+    het = HetSpec.uniform_random(fig_load.K_SERVE, fig_load.MU,
+                                 fig_load.SIGMA2,
+                                 np.random.default_rng(fig_load.HET_SEED))
+    load = 0.85
+    cfg = dataclasses.replace(fig_load.serving_config(quick=QUICK),
+                              loads=(load,))
+    trials = 4 if QUICK else fig_load.TRIALS
+
+    wall = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        rep = simulate_serving(het, "work_exchange", {}, cfg,
+                               fig_load.N_SERVE, load, trials,
+                               np.random.default_rng(0))
+        wall = min(wall, time.perf_counter() - t0)
+    p99 = {"work_exchange": round(rep.extra["p99"], 4)}
+    for name in fig_load.SERVE_SCHEMES:
+        if name in p99:
+            continue
+        rep = simulate_serving(het, name, {}, cfg, fig_load.N_SERVE, load,
+                               trials, np.random.default_rng(0))
+        p99[name] = round(rep.extra["p99"], 4)
+    return {
+        "K": fig_load.K_SERVE, "N": fig_load.N_SERVE, "load": load,
+        "slots": cfg.slots, "trials": trials, "wall_reps": reps,
+        "deadline_slo": cfg.deadline_slo,
+        "engine_wall_s": round(wall, 4),
+        "p99_sojourn_s": p99,
+        "note": "one fig_load cell (work_exchange, load 0.85) for the "
+                "wall; p99 sojourn per dispatch policy at that load, "
+                "fixed seeds",
+    }
+
+
+def _bench_jax_cache():
+    """Cold vs warm first-call wall with the persistent jax compilation
+    cache (``REPRO_JAX_CACHE_DIR``): two fresh subprocesses share one
+    cache dir, so the second pays a disk read instead of XLA compilation.
+    Each subprocess prints its first ``mc_grid`` call's wall; the warm/
+    cold ratio is the knob's value on CI runners that re-enter python per
+    job step.
+    """
+    import subprocess
+    import tempfile
+
+    prog = (
+        "import time\n"
+        "import numpy as np\n"
+        "from repro.experiments.engine import "
+        "_maybe_enable_jax_compilation_cache\n"
+        "_maybe_enable_jax_compilation_cache()\n"
+        "from repro.core.schemes import get_scheme\n"
+        "from repro.core.types import HetSpec\n"
+        "het = HetSpec.uniform_random(8, 20.0, 20.0 ** 2 / 6,"
+        " np.random.default_rng(3))\n"
+        "t0 = time.perf_counter()\n"
+        "get_scheme('work_exchange').mc_grid([het], 2000, trials=16,"
+        " rng=np.random.default_rng(0), backend='jax')\n"
+        "print(f'FIRST_CALL {time.perf_counter() - t0:.4f}')\n"
+    )
+    walls = []
+    with tempfile.TemporaryDirectory(prefix="repro-jax-cache-") as cache:
+        for phase in ("cold", "warm"):
+            env = dict(os.environ, REPRO_JAX_CACHE_DIR=cache)
+            try:
+                out = subprocess.run([sys.executable, "-c", prog],
+                                     env=env, capture_output=True,
+                                     text=True, timeout=300)
+            except subprocess.TimeoutExpired:
+                return {"skipped": f"{phase} subprocess timed out"}
+            if out.returncode != 0:
+                return {"skipped": f"{phase} subprocess failed: "
+                                   f"{out.stderr.strip()[-300:]}"}
+            line = next(ln for ln in out.stdout.splitlines()
+                        if ln.startswith("FIRST_CALL "))
+            walls.append(float(line.split()[1]))
+    cold, warm = walls
+    return {
+        "cold_first_call_s": round(cold, 4),
+        "warm_first_call_s": round(warm, 4),
+        "speedup_warm_vs_cold": round(cold / warm, 2),
+        "note": "first work_exchange jax mc_grid call in a fresh "
+                "process, REPRO_JAX_CACHE_DIR shared between the two "
+                "runs (cold populates the cache, warm reads it)",
+    }
+
+
 def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     """Per-scheme MC means + engine/grid wall-clock, machine-readable."""
     import numpy as np
@@ -430,7 +550,8 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     report = {"config": {"K": K_PAPER, "N": n, "mu": 50.0,
                          "sigma2": "mu^2/6", "trials": trials},
               "schemes": {}, "mc_engine": {}, "fig5_grid": {},
-              "mds_grid": {}, "fig5_sharded": {}, "fig5_drifting": {}}
+              "mds_grid": {}, "fig5_sharded": {}, "fig5_drifting": {},
+              "serve_load": {}, "jax_cache": {}}
 
     # per-trial-loop schemes walk unit ids in Python: bound their budget
     # (the JSON records the actual N/trials used -- no silent caps)
@@ -481,6 +602,8 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     report["mds_grid"] = _bench_mds_grid(n)
     report["fig5_sharded"] = _bench_fig5_sharded(n)
     report["fig5_drifting"] = _bench_fig5_drifting(n)
+    report["serve_load"] = _bench_serve_load()
+    report["jax_cache"] = _bench_jax_cache()
 
     out_path.parent.mkdir(parents=True, exist_ok=True)
     out_path.write_text(json.dumps(report, indent=2))
@@ -492,6 +615,11 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
                   f"{s['devices']} devices"
                   if "speedup_sharded_vs_single" in s
                   else f"sharded: {s.get('skipped', 'n/a')}")
+    sv = report["serve_load"]
+    jc = report["jax_cache"]
+    cache_note = (f"jax cache warm {jc['speedup_warm_vs_cold']}x vs cold"
+                  if "speedup_warm_vs_cold" in jc
+                  else f"jax cache: {jc.get('skipped', 'n/a')}")
     print(f"# wrote {out_path} (engine speedup "
           f"{report['mc_engine']['speedup']}x; fig5 grid: jax "
           f"{g['speedup_jax_vs_pr1_loop']}x vs PR1 loop, "
@@ -499,7 +627,8 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
           f"pallas {g['speedup_pallas_vs_pr1_loop']}x; mds grid: best "
           f"{m['speedup_best_vs_pr2_loop']}x vs PR2 loop; {shard_note}; "
           f"drifting: jax {d['speedup_jax_vs_numpy']}x vs numpy, "
-          f"agreement <= {max(d['max_mean_drift_se_jax'], d['max_mean_drift_se_pallas'])} SE)",
+          f"agreement <= {max(d['max_mean_drift_se_jax'], d['max_mean_drift_se_pallas'])} SE; "
+          f"serve cell {sv['engine_wall_s']}s; {cache_note})",
           file=sys.stderr)
     return []
 
@@ -521,8 +650,8 @@ def run_roofline():
 def main() -> None:
     checks = []
     crashed = []
-    for step in (run_fig5, run_fig6, run_fig7, run_schemes_json,
-                 run_roofline):
+    for step in (run_fig5, run_fig6, run_fig7, run_fig_load,
+                 run_schemes_json, run_roofline):
         try:
             checks += step()
         except Exception:

@@ -31,11 +31,18 @@ The scenario axis (``grid=``) is pluggable: any family registered in
 ``repro.scenarios.SCENARIO_REGISTRY`` (uniform_random / explicit /
 trace_corpus / drifting / hcmm_sweep) -- ``ScenarioGrid`` remains the
 PR-4 constructor facade for the first two.
+
+The arrival axis is pluggable too: ``ExperimentSpec(serving=
+ServingConfig(loads=(0.5, 0.8, 0.95)))`` sweeps offered load through the
+streaming-arrival engine (``repro.serving``), one report row per
+(grid point x load) with latency percentiles in ``extra``.
 """
 from repro.scenarios import (SCENARIO_REGISTRY, ScenarioFamily, get_family,
                              list_families)
+from repro.serving import ServingConfig
 
-from .engine import ExperimentResult, execute_plan, run_experiment
+from .engine import (JAX_CACHE_ENV, ExperimentResult, execute_plan,
+                     run_experiment)
 from .plan import Plan, SHARDED_BACKENDS, Task, compile_plan
 from .spec import (SPEC_VERSION, ExperimentSpec, ScenarioGrid, SchemeSpec,
                    scheme_spec)
@@ -43,9 +50,9 @@ from .store import DEFAULT_STORE_ROOT, ResultsStore, default_store
 
 __all__ = [
     "SPEC_VERSION", "ExperimentSpec", "ScenarioGrid", "SchemeSpec",
-    "scheme_spec",
+    "scheme_spec", "ServingConfig",
     "SCENARIO_REGISTRY", "ScenarioFamily", "get_family", "list_families",
     "Plan", "Task", "SHARDED_BACKENDS", "compile_plan",
-    "ExperimentResult", "execute_plan", "run_experiment",
+    "ExperimentResult", "execute_plan", "run_experiment", "JAX_CACHE_ENV",
     "DEFAULT_STORE_ROOT", "ResultsStore", "default_store",
 ]

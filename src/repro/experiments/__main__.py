@@ -39,11 +39,13 @@ from repro.scenarios import (DriftingScenario, ExplicitScenario,
                              HCMMSweepScenario)
 from repro.scenarios.traces import DEFAULT_CORPUS, TraceCorpusScenario
 
+from repro.serving import ServingConfig
+
 from .engine import ExperimentResult, run_experiment
 from .spec import ExperimentSpec, ScenarioGrid, scheme_spec
 from .store import ResultsStore, default_store
 
-DEMOS = ("quick", "drifting", "trace", "hcmm")
+DEMOS = ("quick", "drifting", "trace", "hcmm", "serving", "serving-trace")
 
 
 def demo_spec(kind: str) -> ExperimentSpec:
@@ -83,6 +85,33 @@ def demo_spec(kind: str) -> ExperimentSpec:
                      scheme_spec("trace_replay", key="trace_replay@w0",
                                  **grid.trace_replay_params(0))),
             N=8_000, trials=8, seed=1234)
+    if kind == "serving":
+        # streaming arrivals: the same schemes as dispatch policies,
+        # swept over offered load (the serving-smoke CI spec)
+        return ExperimentSpec(
+            name="demo-serving",
+            grid=ScenarioGrid(K=8, points=[(20.0, 20.0 ** 2 / 6, 5)]),
+            schemes=(scheme_spec("work_exchange"),
+                     scheme_spec("fixed"),
+                     scheme_spec("het_mds")),
+            N=100, trials=8, seed=1234,
+            serving=ServingConfig(loads=(0.6, 0.9), slots=600,
+                                  deadline_slo=4.0))
+    if kind == "serving-trace":
+        # measured rates AND measured demand: the trace corpus drives
+        # both the per-slot service rates (scenario schedule) and the
+        # arrival intensity (trace arrival process)
+        grid = TraceCorpusScenario(corpus=DEFAULT_CORPUS, K=16,
+                                   windows=((0, 0),), epochs=12)
+        return ExperimentSpec(
+            name="demo-serving-trace",
+            grid=grid,
+            schemes=(scheme_spec("work_exchange"),
+                     scheme_spec("work_exchange_unknown")),
+            N=100, trials=8, seed=1234,
+            serving=ServingConfig(loads=(0.7,), arrival="trace",
+                                  arrival_params={"epochs": 12},
+                                  slots=600))
     raise SystemExit(f"unknown demo {kind!r}; have: {', '.join(DEMOS)}")
 
 
@@ -118,6 +147,18 @@ def show(result: ExperimentResult, store: ResultsStore) -> None:
           f"{store.path_for(result.spec_hash)}")
     for key, rows in result.reports.items():
         for g, rep in enumerate(rows):
+            if rep.extra.get("serving"):
+                # serving rows: the latency surface, not batch T_comp
+                slo = (f" slo_miss={rep.extra['slo_miss_rate']:.3f}"
+                       if "slo_miss_rate" in rep.extra else "")
+                print(f"  {key:24s} pt {rep.extra.get('grid_point', 0):g} "
+                      f"load {rep.extra['offered_load']:g}: "
+                      f"sojourn={rep.t_comp:8.4f} "
+                      f"p50={rep.extra['p50']:.4f} "
+                      f"p99={rep.extra['p99']:.4f} "
+                      f"thru={rep.extra['throughput_jobs']:.2f}/s "
+                      f"reject={rep.extra['reject_rate']:.3f}{slo}")
+                continue
             extra = "".join(f" {k}={v:g}" for k, v in rep.extra.items()
                             if isinstance(v, (int, float)))
             print(f"  {key:24s} point {g}: T_comp={rep.t_comp:10.4f} "
@@ -177,6 +218,19 @@ def cmd_ls(argv) -> int:
               f"{len(spec.grid):4d} {shown:28s} {str(spec.backend):7s} "
               f"{spec.devices!s:>3s} {spec.N:9d} {spec.trials:6d} "
               f"{result.wall_s:8.3f}")
+        if spec.serving is not None:
+            # serving entries: per-scheme p99 at the heaviest swept load
+            top = max(spec.serving.loads)
+            parts = []
+            for key, rows in result.reports.items():
+                vals = [r.extra["p99"] for r in rows
+                        if "p99" in r.extra
+                        and r.extra.get("offered_load") == top]
+                if vals:
+                    parts.append(f"{key}={sum(vals) / len(vals):.3g}")
+            if parts:
+                print(f"{'':18s}serving p99@load={top:g}: "
+                      + "  ".join(parts))
     return 0
 
 
@@ -238,6 +292,14 @@ def cmd_compare(argv) -> int:
                 mark = "  <-- differs, no SE (trials too small)"
             print(f"  {key:24s} {g:3d} {ra.t_comp:12.4f} {rb.t_comp:12.4f}"
                   f" {delta:+12.4f} {label}{mark}")
+            if ra.extra.get("serving") and rb.extra.get("serving"):
+                # serving rows carry a latency surface: surface the
+                # percentile / SLO deltas instead of dropping them
+                for field in ("p50", "p99", "slo_miss_rate"):
+                    if field in ra.extra and field in rb.extra:
+                        va, vb = ra.extra[field], rb.extra[field]
+                        print(f"    {field:>22s} {va:12.4f} {vb:12.4f}"
+                              f" {vb - va:+12.4f}")
         if len(rows_a) != len(rows_b):
             print(f"  {key:24s} (grids differ: {len(rows_a)} vs "
                   f"{len(rows_b)} points; compared the overlap)")

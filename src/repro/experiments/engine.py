@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 import platform
 import time
 from typing import Any, Dict, List, Optional
@@ -34,6 +35,27 @@ from .spec import ExperimentSpec
 from .store import ResultsStore
 
 RESULT_VERSION = 1
+
+# opt-in persistent jax compilation cache: point this env var at a
+# directory and every jit trace is written through to disk, so the
+# second process (CI rerun, warm benchmark) skips XLA compilation
+JAX_CACHE_ENV = "REPRO_JAX_CACHE_DIR"
+
+
+def _maybe_enable_jax_compilation_cache() -> Optional[str]:
+    """Enable jax's persistent compilation cache when ``REPRO_JAX_CACHE_DIR``
+    is set (idempotent; returns the directory, or None when off).  Only
+    touches jax config -- never imports jax when the knob is unset."""
+    cache_dir = os.environ.get(JAX_CACHE_ENV)
+    if not cache_dir:
+        return None
+    import jax
+    if jax.config.jax_compilation_cache_dir != cache_dir:
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        # cache every trace, however small/fast-to-compile
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    return cache_dir
 
 
 @dataclasses.dataclass
@@ -84,13 +106,38 @@ def _environment(plan: Plan) -> Dict[str, Any]:
         env["jax"] = jax.__version__
         env["jax_devices"] = len(jax.devices())
         env["jax_platform"] = jax.default_backend()
+        if os.environ.get(JAX_CACHE_ENV):
+            env["jax_compilation_cache"] = os.environ[JAX_CACHE_ENV]
     return env
+
+
+def _execute_serving(plan: Plan) -> Dict[str, List[MCReport]]:
+    """Serving specs: every scheme task becomes a dispatch policy run
+    through the slotted queueing engine -- one report row per (grid
+    point x offered load) instead of per grid point.  Always
+    single-device numpy (the queue state machine is inherently
+    sequential in time; trials are the batch axis)."""
+    from repro.serving import run_serving_grid
+    reports: Dict[str, List[MCReport]] = {}
+    for task in plan.tasks:
+        reports[task.key] = run_serving_grid(
+            task.scheme, task.params_dict, plan.het_specs,
+            plan.spec.serving, plan.spec.N, plan.spec.trials, task.seed,
+            rate_schedules=plan.rate_schedules)
+    return reports
 
 
 def execute_plan(plan: Plan) -> ExperimentResult:
     """Run a compiled plan (no store interaction)."""
     spec = plan.spec
     t0 = time.perf_counter()
+    if plan.backend in ("jax", "pallas"):
+        _maybe_enable_jax_compilation_cache()
+    if spec.serving is not None:
+        reports = _execute_serving(plan)
+        return ExperimentResult(spec=spec, spec_hash=plan.spec_hash,
+                                reports=reports, env=_environment(plan),
+                                wall_s=time.perf_counter() - t0)
     reports: Dict[str, List[MCReport]] = {}
     shard = (grid_sharding(plan.devices) if plan.devices > 1
              else contextlib.nullcontext())
@@ -140,5 +187,5 @@ def run_experiment(spec: ExperimentSpec,
     return result
 
 
-__all__ = ["RESULT_VERSION", "ExperimentResult", "execute_plan",
-           "run_experiment"]
+__all__ = ["RESULT_VERSION", "JAX_CACHE_ENV", "ExperimentResult",
+           "execute_plan", "run_experiment"]

@@ -96,6 +96,10 @@ def compile_plan(spec: ExperimentSpec) -> Plan:
     """Resolve backend/devices, validate tasks, materialize the grid."""
     backend = resolve_backend(spec.backend)
     devices = _resolve_devices(spec.devices, backend)
+    if spec.serving is not None:
+        # the queueing engine is sequential in time (trials are the
+        # batch axis) and runs single-device regardless of backend
+        devices = 1
     tasks = []
     for s in spec.schemes:
         get_scheme(s.scheme, **s.params_dict)   # fail fast on bad specs

@@ -44,6 +44,7 @@ from repro.core.types import HetSpec
 from repro.scenarios import (ExplicitScenario, ScenarioFamily,
                              ScenarioPoint, UniformRandomScenario,
                              scenario_from_dict)
+from repro.serving.config import ServingConfig
 
 SPEC_VERSION = 1
 
@@ -143,6 +144,13 @@ class ExperimentSpec:
     (every available device) and only applies to the sharded backends
     (jax / pallas) -- compilation normalizes both into concrete values,
     and the *resolved* spec is what the store hashes.
+
+    ``serving`` attaches a streaming-arrival axis
+    (``repro.serving.ServingConfig``): every scheme task then runs as a
+    dispatch policy through the slotted queueing engine at each offered
+    load, one report row per (grid point x load).  ``None`` (batch MC,
+    the default) serializes with the key omitted, so every pre-serving
+    spec hash and store address is unchanged.
     """
 
     name: str
@@ -153,6 +161,7 @@ class ExperimentSpec:
     seed: int = 0
     backend: Optional[str] = None
     devices: Union[int, str] = 1
+    serving: Optional[ServingConfig] = None
     version: int = SPEC_VERSION
 
     def __post_init__(self):
@@ -160,6 +169,10 @@ class ExperimentSpec:
             raise TypeError(f"grid must be a registered ScenarioFamily "
                             f"(or built via ScenarioGrid); got "
                             f"{type(self.grid).__name__}")
+        if self.serving is not None and not isinstance(self.serving,
+                                                       ServingConfig):
+            raise TypeError(f"serving must be a ServingConfig or None; "
+                            f"got {type(self.serving).__name__}")
         object.__setattr__(self, "schemes", tuple(self.schemes))
         if not self.schemes:
             raise ValueError("ExperimentSpec needs at least one scheme")
@@ -177,7 +190,7 @@ class ExperimentSpec:
     # -- serialization ------------------------------------------------------
 
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        d = {
             "version": int(self.version),
             "name": self.name,
             "grid": self.grid.to_dict(),
@@ -188,15 +201,22 @@ class ExperimentSpec:
             "backend": self.backend,
             "devices": self.devices,
         }
+        if self.serving is not None:
+            # key omitted when absent: pre-serving hashes stay valid
+            d["serving"] = self.serving.to_dict()
+        return d
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
+        serving = d.get("serving")
         return cls(name=d["name"], grid=ScenarioGrid.from_dict(d["grid"]),
                    schemes=tuple(SchemeSpec.from_dict(s)
                                  for s in d["schemes"]),
                    N=int(d["N"]), trials=int(d["trials"]),
                    seed=int(d.get("seed", 0)), backend=d.get("backend"),
                    devices=d.get("devices", 1),
+                   serving=(None if serving is None
+                            else ServingConfig.from_dict(serving)),
                    version=int(d.get("version", SPEC_VERSION)))
 
     def to_json(self, indent: Optional[int] = 2) -> str:

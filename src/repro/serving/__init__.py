@@ -1,0 +1,40 @@
+"""Streaming-arrival serving: the fourth subsystem.
+
+The paper's question is one batch of N units over K heterogeneous
+workers; this package asks the production question behind it -- jobs
+arrive continuously, what are p50/p99 latency, sustainable throughput,
+and SLO-miss rate per scheme, per offered load?  (The regime of
+Behrouzi-Far & Soljanin, arXiv:1808.02838, with HCMM-style loads from
+arXiv:1701.05973 as one of the contenders.)
+
+Three registries already cover *how work is split* (schemes), *how
+samples are drawn* (sampler backends), and *what the cluster looks like*
+(scenario families); ``ARRIVAL_REGISTRY`` adds *who sends jobs and
+when*.  Every registered scheme is recast as a dispatch policy
+(``repro.serving.policies``) and run through the slotted queueing engine
+(``repro.serving.engine``); ``repro.serving.queueing`` holds the
+closed-form M/M/K results the engine is validated against.
+
+Wiring: attach ``ServingConfig`` to ``ExperimentSpec(serving=...)`` and
+the ordinary ``run_experiment`` path -- compile, store, CLI -- sweeps
+offered load instead of running single-batch MC.
+"""
+from .arrivals import (ARRIVAL_REGISTRY, ArrivalProcess, ClosedLoopArrivals,
+                       PoissonArrivals, TraceArrivals, get_arrival,
+                       list_arrivals, register_arrival)
+from .config import AUTO_SLOTS_PER_JOB, ServingConfig
+from .engine import run_serving_grid, simulate_serving
+from .policies import (POLICY_ADAPTERS, DispatchPolicy, dispatch_policy,
+                       lr_round_rows, register_policy)
+from .queueing import erlang_b, erlang_c, mm1_sojourn, mmk_sojourn, mmk_wait
+
+__all__ = [
+    "ARRIVAL_REGISTRY", "ArrivalProcess", "PoissonArrivals",
+    "TraceArrivals", "ClosedLoopArrivals", "register_arrival",
+    "get_arrival", "list_arrivals",
+    "ServingConfig", "AUTO_SLOTS_PER_JOB",
+    "simulate_serving", "run_serving_grid",
+    "DispatchPolicy", "POLICY_ADAPTERS", "dispatch_policy",
+    "register_policy", "lr_round_rows",
+    "erlang_b", "erlang_c", "mmk_wait", "mmk_sojourn", "mm1_sojourn",
+]

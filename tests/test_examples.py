@@ -38,6 +38,16 @@ def test_serve_launcher():
     assert "tok/s" in out
 
 
+def test_serve_batch():
+    out = _run(["examples/serve_batch.py"])
+    assert "greedy, KV-cached" in out
+    assert "streaming prefill batches" in out
+    for policy in ("work_exchange", "work_exchange_unknown", "fixed",
+                   "uniform"):
+        assert f"  {policy} " in out
+    assert "SLO-miss" in out
+
+
 def test_paper_figures_quick(tmp_path):
     out = _run(["examples/paper_figures.py", "--quick",
                 "--out", str(tmp_path)])

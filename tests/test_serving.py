@@ -1,0 +1,397 @@
+"""The streaming-arrival serving subsystem (``repro.serving``).
+
+Engine physics (exact work conservation, the M/M/K closed-form anchor,
+seed determinism), the arrival registry, every registered scheme as a
+dispatch policy, the ``ServingConfig`` value discipline, the Experiment
+API integration (spec-hash back-compat, store round trip), and the CLI
+rendering of serving rows.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.schemes import MCReport, list_schemes
+from repro.core.types import HetSpec
+from repro.serving import (ServingConfig, erlang_b, erlang_c, get_arrival,
+                           list_arrivals, lr_round_rows, mm1_sojourn,
+                           mmk_sojourn, run_serving_grid, simulate_serving)
+
+RNG = np.random.default_rng
+
+
+def small_het(K=6, mu=20.0, seed=3):
+    return HetSpec.uniform_random(K, mu, mu * mu / 6.0, RNG(seed))
+
+
+def quick_cfg(**kw):
+    kw.setdefault("loads", (0.6,))
+    kw.setdefault("slots", 300)
+    return ServingConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# closed forms + largest-remainder rounding
+# ---------------------------------------------------------------------------
+
+class TestQueueingClosedForms:
+    def test_erlang_b_known_value(self):
+        # B(1, a) = a / (1 + a)
+        assert erlang_b(1, 0.5) == pytest.approx(0.5 / 1.5)
+
+    def test_erlang_c_reduces_to_mm1(self):
+        # K=1: probability of waiting is the utilization rho
+        assert erlang_c(1, 0.4) == pytest.approx(0.4)
+        assert mmk_sojourn(8.0, 20.0, 1) == pytest.approx(
+            mm1_sojourn(8.0, 20.0))
+
+    def test_erlang_c_requires_stability(self):
+        with pytest.raises(ValueError):
+            erlang_c(4, 4.0)
+        assert mmk_sojourn(100.0, 20.0, 4) == np.inf
+
+    def test_mmk_pooling_beats_parallel_mm1(self):
+        # classic result: one shared queue over K servers beats K
+        # independent M/M/1 queues at the same total load
+        lam, mu, K = 60.0, 20.0, 4
+        assert mmk_sojourn(lam, mu, K) < mm1_sojourn(lam / K, mu)
+
+
+class TestLrRoundRows:
+    def test_conserves_and_bounds_error(self):
+        rng = RNG(0)
+        w = rng.random((32, 7)) + 0.01
+        tot = rng.integers(0, 500, size=32)
+        out = lr_round_rows(w, tot)
+        assert out.dtype == np.int64 and (out >= 0).all()
+        np.testing.assert_array_equal(out.sum(axis=1), tot)
+        exact = w / w.sum(axis=1, keepdims=True) * tot[:, None]
+        assert np.abs(out - exact).max() < 1.0
+
+    def test_zero_weight_rows_fall_back_to_uniform(self):
+        out = lr_round_rows(np.zeros((2, 4)), np.array([8, 5]))
+        np.testing.assert_array_equal(out.sum(axis=1), [8, 5])
+        assert out.max() - out.min() <= 1 or (out[0] == 2).all()
+
+
+# ---------------------------------------------------------------------------
+# engine physics
+# ---------------------------------------------------------------------------
+
+class TestEnginePhysics:
+    def test_mmk_sojourn_matches_erlang_c(self):
+        """Homogeneous workers, 1-unit jobs, pooled work-exchange
+        dispatch: the engine IS an M/M/K simulator up to O(slot_dt), so
+        its mean sojourn must hit the closed form."""
+        K, mu, load = 4, 20.0, 0.65
+        het = HetSpec(np.full(K, mu))
+        cfg = ServingConfig(loads=(load,), slots=4000, slot_dt=0.0025,
+                            warmup_frac=0.25)
+        rep = simulate_serving(het, "work_exchange", {}, cfg, N=1,
+                               load=load, trials=16, rng=RNG(0))
+        expected = mmk_sojourn(load * K * mu, mu, K)
+        assert rep.t_comp == pytest.approx(expected, rel=0.15)
+
+    def test_mm1_sojourn(self):
+        mu, load = 20.0, 0.5
+        het = HetSpec(np.array([mu]))
+        cfg = ServingConfig(loads=(load,), slots=4000, slot_dt=0.0025,
+                            warmup_frac=0.25)
+        rep = simulate_serving(het, "work_exchange", {}, cfg, N=1,
+                               load=load, trials=16, rng=RNG(1))
+        assert rep.t_comp == pytest.approx(mm1_sojourn(load * mu, mu),
+                                           rel=0.15)
+
+    def test_conservation_ledger_in_extras(self):
+        # the engine asserts shipped == served + cancelled + backlog
+        # every slot; the report must expose the same closed ledger
+        for name in ("work_exchange", "het_mds", "hedged"):
+            rep = simulate_serving(small_het(), name, {}, quick_cfg(),
+                                   N=30, load=0.6, trials=4, rng=RNG(2))
+            e = rep.extra
+            assert e["units_admitted"] == pytest.approx(
+                e["units_served"] + e["units_cancelled"]
+                + e["units_backlog"])
+
+    def test_seed_determinism(self):
+        args = (small_het(), "work_exchange", {}, quick_cfg(), 30, 0.6, 4)
+        a = simulate_serving(*args, rng=RNG(7))
+        b = simulate_serving(*args, rng=RNG(7))
+        assert a.to_dict() == b.to_dict()
+        c = simulate_serving(*args, rng=RNG(8))
+        assert c.t_comp != a.t_comp
+
+    def test_rate_schedule_moves_true_rates(self):
+        # halving the TRUE rates (drift) at fixed believed rates must
+        # hurt: effective load doubles
+        het = small_het()
+        cfg = quick_cfg(slots=600)
+        base = simulate_serving(het, "fixed", {}, cfg, N=30, load=0.45,
+                                trials=8, rng=RNG(3))
+        sched = np.tile(het.lambdas * 0.5, (6, 1))
+        slow = simulate_serving(het, "fixed", {}, cfg, N=30, load=0.45,
+                                trials=8, rng=RNG(3), rate_schedule=sched)
+        assert slow.t_comp > base.t_comp
+
+    def test_grid_runner_tags_points_and_loads(self):
+        specs = [small_het(seed=1), small_het(seed=2)]
+        cfg = quick_cfg(loads=(0.5, 0.8))
+        reps = run_serving_grid("work_exchange", {}, specs, cfg, N=30,
+                                trials=3, seed=99)
+        assert len(reps) == 4
+        assert [r.extra["grid_point"] for r in reps] == [0, 0, 1, 1]
+        assert [r.extra["offered_load"] for r in reps] == [0.5, 0.8] * 2
+
+
+class TestPolicyBattery:
+    """Every registered scheme runs as a dispatch policy with a sane,
+    conservation-closed latency report."""
+
+    @pytest.mark.parametrize("name", list_schemes())
+    def test_scheme_serves(self, name):
+        rep = simulate_serving(small_het(), name, {}, quick_cfg(),
+                               N=30, load=0.6, trials=4, rng=RNG(11))
+        e = rep.extra
+        assert rep.trials == 4 and np.isfinite(rep.t_comp)
+        assert rep.t_comp > 0
+        assert e["completed_jobs"] > 0
+        assert e["p50"] <= e["p95"] + 1e-12 <= e["p99"] + 2e-12
+        assert 0.0 <= e["reject_rate"] <= 1.0
+        assert e["units_admitted"] == pytest.approx(
+            e["units_served"] + e["units_cancelled"] + e["units_backlog"])
+
+    def test_oracle_at_least_as_good_as_uniform(self):
+        het = small_het()
+        kw = dict(N=30, load=0.6, trials=8)
+        oracle = simulate_serving(het, "oracle", {}, quick_cfg(slots=600),
+                                  rng=RNG(5), **kw)
+        uniform = simulate_serving(het, "uniform", {}, quick_cfg(slots=600),
+                                   rng=RNG(5), **kw)
+        assert oracle.t_comp <= uniform.t_comp
+
+    def test_unknown_scheme_fails_loudly(self):
+        with pytest.raises(KeyError):
+            simulate_serving(small_het(), "nope", {}, quick_cfg(), N=30,
+                             load=0.5, trials=2, rng=RNG(0))
+
+
+# ---------------------------------------------------------------------------
+# arrival registry
+# ---------------------------------------------------------------------------
+
+class TestArrivals:
+    def test_registry_contents(self):
+        assert {"poisson", "trace", "closed_loop"} <= set(list_arrivals())
+
+    def test_unknown_name_and_params_fail_loudly(self):
+        with pytest.raises(KeyError, match="unknown arrival"):
+            get_arrival("weibull")
+        with pytest.raises(KeyError, match="allowed"):
+            get_arrival("poisson", burst=3)
+
+    def test_poisson_counts(self):
+        arr = get_arrival("poisson")
+        c = arr.job_counts(400, 50, 0.3, RNG(0))
+        assert c.shape == (400, 50) and (c >= 0).all()
+        assert c.mean() == pytest.approx(0.3, rel=0.1)
+
+    def test_trace_profile_mean_one(self):
+        arr = get_arrival("trace", epochs=12)
+        prof = arr.profile(500)
+        assert prof.shape == (500,)
+        assert prof.mean() == pytest.approx(1.0)
+        assert prof.std() > 0          # measured burstiness, not flat
+
+    def test_closed_loop_population(self):
+        arr = get_arrival("closed_loop")
+        assert arr.closed_loop
+        assert arr.population_for(0.75, 8) == 6
+        assert arr.population_for(0.01, 8) == 1
+        assert get_arrival("closed_loop",
+                           population=5).population_for(9.9, 8) == 5
+        np.testing.assert_array_equal(
+            arr.job_counts(2, 5, 1.0, RNG(0)), np.zeros((2, 5)))
+
+    def test_trace_arrivals_through_engine(self):
+        cfg = quick_cfg(arrival="trace", arrival_params={"epochs": 8},
+                        slots=400)
+        rep = simulate_serving(small_het(), "work_exchange", {}, cfg,
+                               N=30, load=0.6, trials=4, rng=RNG(4))
+        assert rep.extra["completed_jobs"] > 0
+
+    def test_closed_loop_through_engine(self):
+        cfg = quick_cfg(arrival="closed_loop",
+                        arrival_params={"think_slots": 2}, slots=400)
+        rep = simulate_serving(small_het(), "work_exchange", {}, cfg,
+                               N=30, load=0.5, trials=4, rng=RNG(4))
+        assert rep.extra["completed_jobs"] > 0
+        assert rep.extra["throughput_jobs"] > 0
+
+
+# ---------------------------------------------------------------------------
+# ServingConfig value discipline
+# ---------------------------------------------------------------------------
+
+class TestServingConfig:
+    def test_round_trip(self):
+        cfg = ServingConfig(loads=(0.5, 0.9), arrival="trace",
+                            arrival_params={"epochs": 6},
+                            job_units_dist="geometric", slots=500,
+                            deadline_slo=3.0, admission="deadline")
+        assert ServingConfig.from_dict(cfg.to_dict()) == cfg
+
+    def test_from_dict_rejects_unknown_keys(self):
+        with pytest.raises(KeyError, match="unknown serving key"):
+            ServingConfig.from_dict({"loads": [0.5], "burst": 2})
+
+    def test_params_sorted_for_hashing(self):
+        a = ServingConfig(arrival="trace",
+                          arrival_params={"epochs": 4, "epoch_start": 1})
+        b = ServingConfig(arrival="trace",
+                          arrival_params={"epoch_start": 1, "epochs": 4})
+        assert a == b and a.arrival_params == b.arrival_params
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            ServingConfig(loads=())
+        with pytest.raises(ValueError):
+            ServingConfig(loads=(-0.5,))
+        with pytest.raises(ValueError):
+            ServingConfig(admission="deadline")       # needs deadline_slo
+        with pytest.raises(ValueError):
+            ServingConfig(warmup_frac=1.0)
+        with pytest.raises(KeyError):
+            ServingConfig(arrival="weibull")          # fails at construction
+        with pytest.raises(KeyError):
+            ServingConfig(arrival="poisson",
+                          arrival_params={"burst": 2})
+
+
+class TestDeadlineAdmission:
+    def test_load_shedding_and_slo_accounting(self):
+        het = small_het()
+        cfg = quick_cfg(loads=(1.3,), slots=600, deadline_slo=1.5,
+                        admission="deadline")
+        rep = simulate_serving(het, "work_exchange", {}, cfg, N=30,
+                               load=1.3, trials=6, rng=RNG(6))
+        e = rep.extra
+        assert e["reject_rate"] > 0           # overload is shed, not queued
+        assert "slo_miss_rate" in e and 0.0 <= e["slo_miss_rate"] <= 1.0
+        assert e["deadline_s"] == pytest.approx(
+            1.5 * 30 / het.lambda_sum)
+
+    def test_queue_admission_never_sheds_below_capacity(self):
+        cfg = quick_cfg(loads=(0.4,), slots=400, deadline_slo=4.0)
+        rep = simulate_serving(small_het(), "work_exchange", {}, cfg,
+                               N=30, load=0.4, trials=4, rng=RNG(6))
+        assert rep.extra["reject_rate"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Experiment API integration
+# ---------------------------------------------------------------------------
+
+def serving_spec(tmp_name="serve-int", **serving_kw):
+    from repro.experiments import (ExperimentSpec, ScenarioGrid,
+                                   scheme_spec)
+    serving_kw.setdefault("loads", (0.6,))
+    serving_kw.setdefault("slots", 300)
+    return ExperimentSpec(
+        name=tmp_name,
+        grid=ScenarioGrid(K=6, points=[(20.0, 20.0 ** 2 / 6, 3)]),
+        schemes=(scheme_spec("work_exchange"), scheme_spec("fixed")),
+        N=30, trials=4, seed=77,
+        serving=ServingConfig(**serving_kw))
+
+
+class TestExperimentIntegration:
+    def test_spec_round_trip_and_hash(self):
+        from repro.experiments import ExperimentSpec
+        spec = serving_spec()
+        again = ExperimentSpec.from_json(spec.to_json())
+        assert again == spec
+        assert again.spec_hash() == spec.spec_hash()
+        # the serving axis is part of the address
+        assert spec.replace(serving=None).spec_hash() != spec.spec_hash()
+
+    def test_no_serving_key_preserves_pre_serving_hashes(self):
+        spec = serving_spec().replace(serving=None)
+        assert "serving" not in spec.to_dict()
+
+    def test_compile_pins_serving_to_one_device(self):
+        from repro.experiments import compile_plan
+        plan = compile_plan(serving_spec().replace(backend="jax",
+                                                   devices="auto"))
+        assert plan.devices == 1
+
+    def test_store_miss_then_hit_with_latency_rows(self, tmp_path):
+        from repro.experiments import ResultsStore, run_experiment
+        store = ResultsStore(tmp_path / "store")
+        spec = serving_spec()
+        first = run_experiment(spec, store=store)
+        assert not first.cache_hit
+        second = run_experiment(spec, store=store)
+        assert second.cache_hit
+        assert first.to_dict()["reports"] == second.to_dict()["reports"]
+        for key in ("work_exchange", "fixed"):
+            rows = second.report(key)
+            assert len(rows) == 1           # 1 grid point x 1 load
+            e = rows[0].extra
+            for field in ("serving", "offered_load", "p50", "p95", "p99",
+                          "throughput_jobs", "grid_point"):
+                assert field in e, (key, field)
+
+    def test_mcreport_serving_extras_round_trip(self):
+        rep = simulate_serving(small_het(), "work_exchange", {},
+                               quick_cfg(deadline_slo=3.0), N=30,
+                               load=0.6, trials=4, rng=RNG(9))
+        again = MCReport.from_dict(rep.to_dict())
+        assert again.extra == rep.extra
+        assert "slo_miss_rate" in again.extra
+        assert again.to_dict() == rep.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# CLI rendering (ls / compare / demo) -- subprocess, store under tmp
+# ---------------------------------------------------------------------------
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CLI_ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+
+
+def _cli(args, timeout=420):
+    out = subprocess.run([sys.executable, "-m", "repro.experiments"]
+                         + args, capture_output=True, text=True,
+                         timeout=timeout, cwd=REPO, env=CLI_ENV)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+class TestCLIServingRows:
+    @pytest.fixture(scope="class")
+    def demo_store(self, tmp_path_factory):
+        root = str(tmp_path_factory.mktemp("store"))
+        out = _cli(["--demo", "serving", "--trials", "4", "--store", root,
+                    "--check-cache"])
+        return root, out
+
+    def test_demo_renders_latency_surface(self, demo_store):
+        _, out = demo_store
+        assert "sojourn=" in out and "p99=" in out and "slo_miss=" in out
+        assert "check-cache: OK" in out
+
+    def test_ls_shows_p99_at_top_load(self, demo_store):
+        root, _ = demo_store
+        out = _cli(["ls", "--store", root])
+        assert "serving p99@load=0.9:" in out
+        assert "work_exchange=" in out
+
+    def test_compare_renders_percentile_deltas(self, demo_store):
+        root, out = demo_store
+        line = next(ln for ln in out.splitlines() if "spec hash" in ln)
+        h = line.split()[-1][:16]
+        cmp_out = _cli(["compare", h, h, "--store", root])
+        assert "p99" in cmp_out and "slo_miss_rate" in cmp_out
+        assert "within the 6-SE MC band" in cmp_out
