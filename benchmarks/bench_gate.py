@@ -43,6 +43,11 @@ WALL_KEYS_SHARDED = ("single_jax_s", "sharded_jax_s")
 WALL_KEYS_DRIFTING = ("numpy_grid_s", "jax_grid_s", "pallas_grid_s")
 WALL_KEYS_SERVE = ("engine_wall_s",)
 WALL_KEYS_JAX_CACHE = ("cold_first_call_s", "warm_first_call_s")
+# episode wall is pinned by LiveConfig.target_wall_s (time-scale solved),
+# so drift here means the coordinator itself got slower; the pure
+# coordination wall is tiny and usually falls under --min-wall (reported,
+# not gated)
+WALL_KEYS_CONTROL = ("episode_wall_s", "coordination_wall_s")
 
 
 def load(path: str) -> dict:
@@ -83,6 +88,10 @@ def collect_walls(report: dict) -> dict:
     for key in WALL_KEYS_JAX_CACHE:
         if key in jax_cache:
             walls[f"jax_cache.{key}"] = float(jax_cache[key])
+    control = report.get("control_plane", {})
+    for key in WALL_KEYS_CONTROL:
+        if key in control:
+            walls[f"control_plane.{key}"] = float(control[key])
     return walls
 
 

@@ -17,8 +17,10 @@ L-sweep vs the PR-2 per-L loop), the ``fig5_sharded`` benchmark
 grid), the ``serve_load`` section (streaming-arrival engine wall +
 per-policy p99 at a pinned load -- see ``benchmarks.fig_load``), and the
 ``jax_cache`` section (cold vs warm first-call wall with the persistent
-compilation cache), so the perf trajectory is tracked across PRs
-(see ``benchmarks.bench_gate``).
+compilation cache), and the ``control_plane`` section (live async
+execution: measured vs MC-predicted T_comp plus the coordination-wall
+fraction -- see ``repro.control``), so the perf trajectory is tracked
+across PRs (see ``benchmarks.bench_gate``).
 
 Set REPRO_BENCH_QUICK=1 for a fast smoke pass.  The sampler backend for
 the figure sweeps follows REPRO_SAMPLER_BACKEND (default numpy).
@@ -537,6 +539,54 @@ def _bench_jax_cache():
     }
 
 
+def _bench_control_plane(trials: int = 3):
+    """The live async control plane at demo scale: ``trials`` executed
+    work-exchange episodes (real transport round-trips, jitted matmul
+    shards, Exp service clocks) against the MC prediction for the same
+    operating point, plus the measured coordination-wall fraction --
+    the paper's "limited coordination overhead" claim as a tracked
+    number.
+    """
+    import numpy as np
+
+    from repro.control import LiveConfig, run_live
+    from repro.core.schemes import get_scheme
+    from repro.core.types import HetSpec
+
+    K, N, mu = 4, 2000, 4.0
+    het = HetSpec.uniform_random(K, mu, mu ** 2 / 6,
+                                 np.random.default_rng(7))
+    if QUICK:
+        trials = 2
+    cfg = LiveConfig(target_wall_s=0.25 if QUICK else 0.5)
+    mc_trials = 200 if QUICK else 1000
+    try:
+        rep = run_live("work_exchange", {}, het, N, cfg, trials, seed=11)
+    except Exception as e:      # event loop / transport trouble on a
+        return {"skipped": f"live episode failed: {e}"}     # CI runner
+    mc = get_scheme("work_exchange").mc(het, N, trials=mc_trials,
+                                        rng=np.random.default_rng(0))
+    cp = rep.extra["control_plane"]
+    se = float(np.hypot(rep.t_comp_std / np.sqrt(trials),
+                        mc.t_comp_std / np.sqrt(mc_trials)))
+    return {
+        "K": K, "N": N, "trials": trials, "transport": cfg.transport,
+        "payload_backend": cp["payload_backend"],
+        "measured_t_comp": round(cp["measured_t_comp"], 4),
+        "mc_predicted_t_comp": round(mc.t_comp, 4),
+        "agreement_se": round(abs(rep.t_comp - mc.t_comp) / max(se, 1e-12),
+                              2),
+        "episode_wall_s": round(cp["episode_wall_s"], 4),
+        "coordination_wall_s": round(cp["coordination_wall_s"], 4),
+        "coordination_frac": round(cp["coordination_frac"], 4),
+        "rpc_messages": cp["timeline"]["counters"].get("messages_sent", 0),
+        "note": "live work_exchange episodes (inproc transport, jitted "
+                "matmul shards) vs the MC prediction at the same "
+                "operating point, fixed seeds; agreement in combined-SE "
+                "units",
+    }
+
+
 def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     """Per-scheme MC means + engine/grid wall-clock, machine-readable."""
     import numpy as np
@@ -551,7 +601,7 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
                          "sigma2": "mu^2/6", "trials": trials},
               "schemes": {}, "mc_engine": {}, "fig5_grid": {},
               "mds_grid": {}, "fig5_sharded": {}, "fig5_drifting": {},
-              "serve_load": {}, "jax_cache": {}}
+              "serve_load": {}, "jax_cache": {}, "control_plane": {}}
 
     # per-trial-loop schemes walk unit ids in Python: bound their budget
     # (the JSON records the actual N/trials used -- no silent caps)
@@ -604,6 +654,7 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     report["fig5_drifting"] = _bench_fig5_drifting(n)
     report["serve_load"] = _bench_serve_load()
     report["jax_cache"] = _bench_jax_cache()
+    report["control_plane"] = _bench_control_plane()
 
     out_path.parent.mkdir(parents=True, exist_ok=True)
     out_path.write_text(json.dumps(report, indent=2))
@@ -620,6 +671,11 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     cache_note = (f"jax cache warm {jc['speedup_warm_vs_cold']}x vs cold"
                   if "speedup_warm_vs_cold" in jc
                   else f"jax cache: {jc.get('skipped', 'n/a')}")
+    ctl = report["control_plane"]
+    ctl_note = (f"live vs MC {ctl['agreement_se']} SE, coord "
+                f"{100 * ctl['coordination_frac']:.1f}%"
+                if "agreement_se" in ctl
+                else f"live: {ctl.get('skipped', 'n/a')}")
     print(f"# wrote {out_path} (engine speedup "
           f"{report['mc_engine']['speedup']}x; fig5 grid: jax "
           f"{g['speedup_jax_vs_pr1_loop']}x vs PR1 loop, "
@@ -628,7 +684,7 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
           f"{m['speedup_best_vs_pr2_loop']}x vs PR2 loop; {shard_note}; "
           f"drifting: jax {d['speedup_jax_vs_numpy']}x vs numpy, "
           f"agreement <= {max(d['max_mean_drift_se_jax'], d['max_mean_drift_se_pallas'])} SE; "
-          f"serve cell {sv['engine_wall_s']}s; {cache_note})",
+          f"serve cell {sv['engine_wall_s']}s; {cache_note}; {ctl_note})",
           file=sys.stderr)
     return []
 

@@ -7,8 +7,14 @@ heterogeneous serving replicas by the streaming-arrival engine
 (``repro.serving``) -- the paper's schemes recast as dispatch policies,
 compared on tail latency and SLO misses at a fixed offered load.
 
-Run:  PYTHONPATH=src python examples/serve_batch.py
+With ``--live`` the same batch also *executes* over the async control
+plane (``repro.control``): real transport round-trips and jitted matmul
+shards on each replica, measured T_comp printed next to the MC
+prediction per policy.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py [--live]
 """
+import argparse
 import dataclasses
 
 import jax
@@ -22,7 +28,31 @@ from repro.serving import ServingConfig, simulate_serving
 from repro.train.serve import greedy_generate
 
 
+def run_live_batch(het, N, policies):
+    """One arriving batch executed for real per policy: live episodes
+    through the coordinator vs the MC prediction at the same point."""
+    from repro.control import LiveConfig, run_live
+    from repro.core.schemes import get_scheme
+
+    cfg = LiveConfig(target_wall_s=0.3)
+    print(f"\nexecuting one {N}-request batch live "
+          f"(inproc transport, jitted shards) per policy:")
+    for policy in policies:
+        rep = run_live(policy, {}, het, N, cfg, trials=2, seed=5)
+        mc = get_scheme(policy).mc(het, N, 400, np.random.default_rng(0))
+        cp = rep.extra["control_plane"]
+        print(f"  {policy:<21} measured {rep.t_comp:6.2f}s  "
+              f"MC-predicted {mc.t_comp:6.2f}s  "
+              f"coordination {cp['coordination_frac']:.1%} of wall")
+
+
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--live", action="store_true",
+                    help="also execute the batch over the async control "
+                         "plane (repro.control) and print measured vs "
+                         "MC-predicted T_comp")
+    args = ap.parse_args()
     cfg = dataclasses.replace(smoke_config(get_config("phi4-mini-3.8b")),
                               dtype="float32")
     model = build_model(cfg)
@@ -59,6 +89,10 @@ def main():
               f"SLO-miss {e['slo_miss_rate']:.0%}")
     print("  (work_exchange_unknown learns replica rates online; uniform "
           "ignores heterogeneity)")
+
+    if args.live:
+        run_live_batch(het, N, ("work_exchange", "work_exchange_unknown",
+                                "fixed", "uniform"))
 
 
 if __name__ == "__main__":

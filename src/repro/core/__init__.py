@@ -32,7 +32,8 @@ Three-line API:
     ...                                         trials=100, rng=rng)
 """
 from . import (assignment, coded, erlang, estimator, exchange, mds, oracle,
-               samplers, schemes, simulator)
+               registry, samplers, schemes, simulator)
+from .registry import Registry
 from .samplers import (SAMPLER_BACKENDS, get_backend, list_backends,
                        register_backend, resolve_backend)
 from .schemes import (MCReport, Scheme, SCHEME_REGISTRY, get_scheme,
@@ -41,7 +42,7 @@ from .types import ExchangeConfig, HetSpec, RunStats
 
 __all__ = [
     "assignment", "coded", "erlang", "estimator", "exchange", "mds",
-    "oracle", "samplers", "schemes", "simulator",
+    "oracle", "registry", "samplers", "schemes", "simulator", "Registry",
     "MCReport", "Scheme", "SCHEME_REGISTRY", "get_scheme", "list_schemes",
     "register_scheme",
     "SAMPLER_BACKENDS", "get_backend", "list_backends", "register_backend",

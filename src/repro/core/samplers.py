@@ -59,6 +59,7 @@ from typing import Callable, Dict, List, Literal, Optional, Tuple
 
 import numpy as np
 
+from .registry import Registry
 from .assignment import (capped_proportional_assignment_batch,
                          largest_remainder_round_batch)
 from .types import ExchangeConfig
@@ -115,28 +116,22 @@ class SamplerBackend:
         return _BACKEND_AVAILABLE.get(self.name, lambda: True)()
 
 
-SAMPLER_BACKENDS: Dict[str, SamplerBackend] = {}
+SAMPLER_BACKENDS: Registry[SamplerBackend] = Registry("sampler backend")
 _BACKEND_AVAILABLE: Dict[str, Callable[[], bool]] = {}
 
 
 def register_backend(backend: SamplerBackend,
                      available: Callable[[], bool] = lambda: True) -> None:
-    if backend.name in SAMPLER_BACKENDS:
-        raise ValueError(f"sampler backend {backend.name!r} already "
-                         f"registered")
-    SAMPLER_BACKENDS[backend.name] = backend
+    SAMPLER_BACKENDS.register(backend.name, backend)
     _BACKEND_AVAILABLE[backend.name] = available
 
 
 def list_backends() -> List[str]:
-    return sorted(SAMPLER_BACKENDS)
+    return SAMPLER_BACKENDS.names()
 
 
 def get_backend(name: str) -> SamplerBackend:
-    if name not in SAMPLER_BACKENDS:
-        raise KeyError(f"unknown sampler backend {name!r}; "
-                       f"have {list_backends()}")
-    return SAMPLER_BACKENDS[name]
+    return SAMPLER_BACKENDS.get(name)
 
 
 def resolve_backend(backend: str | None = None) -> str:

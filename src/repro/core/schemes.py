@@ -45,6 +45,7 @@ from .assignment import (capped_proportional_assignment,
                          largest_remainder_round, proportional_assignment,
                          uniform_assignment)
 from .exchange import Assignment, MasterScheduler
+from .registry import Registry
 from .samplers import (get_backend, get_gamma_rows, resolve_backend,
                        validate_backend)
 from .types import ExchangeConfig, HetSpec, RunStats
@@ -147,38 +148,26 @@ def _report(scheme: str, ts: np.ndarray, its: np.ndarray, cs: np.ndarray,
 # registry
 # ---------------------------------------------------------------------------
 
-SCHEME_REGISTRY: Dict[str, Type["Scheme"]] = {}
-_ALIASES: Dict[str, str] = {}
+SCHEME_REGISTRY: Registry[Type["Scheme"]] = Registry("scheme",
+                                                     dup_label="scheme name")
 
 
 def register_scheme(name: str, *, aliases: Sequence[str] = ()):
     """Class decorator: key a Scheme subclass under ``name`` (+ aliases)."""
     def deco(cls: Type["Scheme"]) -> Type["Scheme"]:
-        for key in (name, *aliases):
-            if key in SCHEME_REGISTRY or key in _ALIASES:
-                raise ValueError(f"scheme name {key!r} already registered")
+        SCHEME_REGISTRY.register(name, cls, aliases=aliases)
         cls.name = name
-        SCHEME_REGISTRY[name] = cls
-        for a in aliases:
-            _ALIASES[a] = name
         return cls
     return deco
 
 
 def get_scheme(name: str, **params) -> "Scheme":
     """Instantiate a registered scheme by canonical name or alias."""
-    canonical = _ALIASES.get(name, name)
-    if canonical not in SCHEME_REGISTRY:
-        raise KeyError(f"unknown scheme {name!r}; have {list_schemes()} "
-                       f"(aliases: {sorted(_ALIASES)})")
-    return SCHEME_REGISTRY[canonical](**params)
+    return SCHEME_REGISTRY.get(name)(**params)
 
 
 def list_schemes(include_aliases: bool = False) -> List[str]:
-    names = sorted(SCHEME_REGISTRY)
-    if include_aliases:
-        names += sorted(_ALIASES)
-    return names
+    return SCHEME_REGISTRY.names(include_aliases)
 
 
 # ---------------------------------------------------------------------------
@@ -197,6 +186,9 @@ class Scheme:
     name: str = "abstract"
     redundant: bool = False
     plan_wait_all: bool = True    # static schemes wait for the max
+    # redundant schemes whose live execution (repro.control) completes at
+    # the size-cover instant: finished workers' assigned sizes >= N
+    live_cover: bool = False
     # schemes whose mc/mc_grid accept a per-exchange-round rate_schedule
     # (drifting scenario families); single-shot schemes run at the
     # nominal (round-0) rates and leave this False
@@ -556,6 +548,8 @@ class MDSScheme(Scheme):
     """
 
     redundant = True    # K * ceil(N/L) coded units are shipped for N useful
+    live_cover = True   # live: complete at size-cover (== L finishers
+                        # whenever ceil(N/m) == L)
 
     def __init__(self, L: Optional[int] = None, opt_trials: int = 64):
         self.L = L
@@ -948,6 +942,7 @@ class HetMDSScheme(Scheme):
     """
 
     redundant = True
+    live_cover = True   # cover >= N is this scheme's own completion rule
 
     def __init__(self, redundancy: float = 1.25):
         if redundancy < 1.0:
@@ -1172,6 +1167,8 @@ class HedgedScheme(Scheme):
     """
 
     redundant = True    # the straggler's shard ships twice
+    live_cover = True   # cover >= N == the replica race (all others plus
+                        # whichever of straggler/spare finishes first)
 
     def _layout(self, het: HetSpec, N: int):
         """Per-worker primary loads + (spare, straggler) worker ids."""

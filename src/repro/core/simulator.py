@@ -34,12 +34,6 @@ def _deprecated(name: str) -> None:
 # single-trial paths (exact pre-registry numerics at fixed seed)
 # ---------------------------------------------------------------------------
 
-def simulate_fixed(het: HetSpec, N: int, rng: np.random.Generator) -> RunStats:
-    """Section 5.1 fixed assignment, one trial.  Use get_scheme("fixed")."""
-    _deprecated("simulate_fixed")
-    return schemes.FixedScheme().simulate(het, N, rng)
-
-
 def simulate_work_exchange(het: HetSpec, N: int, cfg: ExchangeConfig,
                            rng: np.random.Generator,
                            capped_mode: Literal["carry", "waterfill"] = "carry",
@@ -47,15 +41,6 @@ def simulate_work_exchange(het: HetSpec, N: int, cfg: ExchangeConfig,
     """Algorithms 1/3, one trial.  Use get_scheme("work_exchange")."""
     _deprecated("simulate_work_exchange")
     return schemes.simulate_work_exchange_scalar(het, N, cfg, rng, capped_mode)
-
-
-def simulate_mds(het: HetSpec, N: int, L: int,
-                 rng: np.random.Generator) -> float:
-    """(K, L) MDS completion time, one trial.  Use get_scheme("mds", L=L)."""
-    _deprecated("simulate_mds")
-    m = int(np.ceil(N / L))
-    t_k = rng.gamma(shape=m, scale=1.0 / het.lambdas)
-    return float(np.sort(t_k)[L - 1])
 
 
 def simulate_oracle(het: HetSpec, N: int, rng: np.random.Generator) -> float:

@@ -39,13 +39,15 @@ from repro.scenarios import (DriftingScenario, ExplicitScenario,
                              HCMMSweepScenario)
 from repro.scenarios.traces import DEFAULT_CORPUS, TraceCorpusScenario
 
+from repro.control import LiveConfig
 from repro.serving import ServingConfig
 
 from .engine import ExperimentResult, run_experiment
 from .spec import ExperimentSpec, ScenarioGrid, scheme_spec
 from .store import ResultsStore, default_store
 
-DEMOS = ("quick", "drifting", "trace", "hcmm", "serving", "serving-trace")
+DEMOS = ("quick", "drifting", "trace", "hcmm", "serving", "serving-trace",
+         "live", "live-fault")
 
 
 def demo_spec(kind: str) -> ExperimentSpec:
@@ -112,6 +114,32 @@ def demo_spec(kind: str) -> ExperimentSpec:
             serving=ServingConfig(loads=(0.7,), arrival="trace",
                                   arrival_params={"epochs": 12},
                                   slots=600))
+    if kind == "live":
+        # the same schemes EXECUTED through the asyncio control plane:
+        # real transport messages, real matmul shards, measured T_comp
+        # (the control-smoke CI spec; mds pins L so ceil(N/m) == L and
+        # the live size-cover rule equals the L-th order statistic)
+        return ExperimentSpec(
+            name="demo-live",
+            grid=ScenarioGrid(K=4, points=[(4.0, 4.0 ** 2 / 6, 4)]),
+            schemes=(scheme_spec("work_exchange"),
+                     scheme_spec("work_exchange_unknown"),
+                     scheme_spec("fixed"),
+                     scheme_spec("mds", L=3),
+                     scheme_spec("hedged")),
+            N=2_000, trials=4, seed=1234,
+            execution="live", live=LiveConfig(target_wall_s=0.5))
+    if kind == "live-fault":
+        # kill worker 0 a quarter of the way in: the episode must
+        # complete degraded (leftovers reassigned), not hang
+        return ExperimentSpec(
+            name="demo-live-fault",
+            grid=ScenarioGrid(K=4, points=[(4.0, 4.0 ** 2 / 6, 4)]),
+            schemes=(scheme_spec("work_exchange"),),
+            N=2_000, trials=2, seed=1234,
+            execution="live",
+            live=LiveConfig(target_wall_s=0.5, timeout_s=0.1, retries=1,
+                            kill_worker=0, kill_after_frac=0.25))
     raise SystemExit(f"unknown demo {kind!r}; have: {', '.join(DEMOS)}")
 
 
@@ -158,6 +186,17 @@ def show(result: ExperimentResult, store: ResultsStore) -> None:
                       f"p99={rep.extra['p99']:.4f} "
                       f"thru={rep.extra['throughput_jobs']:.2f}/s "
                       f"reject={rep.extra['reject_rate']:.3f}{slo}")
+                continue
+            cp = rep.extra.get("control_plane")
+            if cp:
+                lost = (f" lost={cp['workers_lost']}"
+                        if cp["workers_lost"] else "")
+                print(f"  {key:24s} point {g}: T_comp={rep.t_comp:10.4f} "
+                      f"+- {rep.t_comp_std:8.4f}  I={rep.iterations:6.2f}  "
+                      f"N_comm={rep.n_comm:10.1f}  "
+                      f"live[{cp['transport']}] "
+                      f"wall={cp['episode_wall_s']:.3f}s "
+                      f"coord={cp['coordination_frac']:.1%}{lost}")
                 continue
             extra = "".join(f" {k}={v:g}" for k, v in rep.extra.items()
                             if isinstance(v, (int, float)))
@@ -332,6 +371,10 @@ def main(argv=None) -> int:
                                       "(int or 'auto')")
     ap.add_argument("--trials", type=int, help="override the trial budget")
     ap.add_argument("--n", type=int, help="override N (work units)")
+    ap.add_argument("--live", action="store_true",
+                    help="execute the spec through the live control "
+                         "plane (execution='live' with default "
+                         "LiveConfig) instead of Monte Carlo")
     _store_arg(ap)
     ap.add_argument("--force", action="store_true",
                     help="recompute even on a store hit")
@@ -359,6 +402,11 @@ def main(argv=None) -> int:
         overrides["trials"] = args.trials
     if args.n:
         overrides["N"] = args.n
+    if args.live:
+        # same spec, live execution (post-init fills the default
+        # LiveConfig); a different spec_hash, so MC and live runs of
+        # one study sit side by side in the store for `compare`
+        overrides["execution"] = "live"
     if overrides:
         specs = [spec.replace(**overrides) for spec in specs]
 

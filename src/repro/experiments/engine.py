@@ -127,12 +127,33 @@ def _execute_serving(plan: Plan) -> Dict[str, List[MCReport]]:
     return reports
 
 
+def _execute_live(plan: Plan) -> Dict[str, List[MCReport]]:
+    """Live specs: every scheme task executes through the asyncio
+    control plane (``repro.control``) -- real transport round-trips,
+    real matmul shards, ``trials`` episodes per grid point, measured
+    ``T_comp`` plus the telemetry timeline in each report's
+    ``extra["control_plane"]``."""
+    from repro.control import run_live_grid
+    reports: Dict[str, List[MCReport]] = {}
+    for task in plan.tasks:
+        reports[task.key] = run_live_grid(
+            task.scheme, task.params_dict, plan.het_specs,
+            plan.spec.N, plan.spec.live, plan.spec.trials, task.seed,
+            rate_schedules=plan.rate_schedules)
+    return reports
+
+
 def execute_plan(plan: Plan) -> ExperimentResult:
     """Run a compiled plan (no store interaction)."""
     spec = plan.spec
     t0 = time.perf_counter()
     if plan.backend in ("jax", "pallas"):
         _maybe_enable_jax_compilation_cache()
+    if spec.execution == "live":
+        reports = _execute_live(plan)
+        return ExperimentResult(spec=spec, spec_hash=plan.spec_hash,
+                                reports=reports, env=_environment(plan),
+                                wall_s=time.perf_counter() - t0)
     if spec.serving is not None:
         reports = _execute_serving(plan)
         return ExperimentResult(spec=spec, spec_hash=plan.spec_hash,

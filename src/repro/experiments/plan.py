@@ -100,9 +100,17 @@ def compile_plan(spec: ExperimentSpec) -> Plan:
         # the queueing engine is sequential in time (trials are the
         # batch axis) and runs single-device regardless of backend
         devices = 1
+    if spec.execution == "live":
+        # live episodes are one asyncio event loop; the sharded executor
+        # does not apply, and the transport must exist at compile time
+        devices = 1
+        spec.live.build_transport()
     tasks = []
     for s in spec.schemes:
-        get_scheme(s.scheme, **s.params_dict)   # fail fast on bad specs
+        scheme = get_scheme(s.scheme, **s.params_dict)  # fail fast
+        if spec.execution == "live":
+            from repro.control.coordinator import live_supported
+            live_supported(scheme)      # unsupported schemes fail here
         tasks.append(Task(key=s.report_key, scheme=s.scheme,
                           params=s.params,
                           seed=int(s.seed if s.seed is not None

@@ -40,6 +40,7 @@ import hashlib
 import json
 from typing import Any, Dict, Mapping, Optional, Tuple, Union
 
+from repro.control.config import LiveConfig
 from repro.core.types import HetSpec
 from repro.scenarios import (ExplicitScenario, ScenarioFamily,
                              ScenarioPoint, UniformRandomScenario,
@@ -151,6 +152,17 @@ class ExperimentSpec:
     load, one report row per (grid point x load).  ``None`` (batch MC,
     the default) serializes with the key omitted, so every pre-serving
     spec hash and store address is unchanged.
+
+    ``execution="live"`` routes every scheme task through the asyncio
+    control plane (``repro.control``) instead of Monte Carlo: real
+    transport messages, real jitted matmul shards, ``trials`` live
+    episodes per grid point, measured ``T_comp`` in the same MCReport
+    shape (plus ``extra["control_plane"]``).  ``live`` carries the
+    transport/pacing/fault knobs (``repro.control.LiveConfig``;
+    defaults apply when ``execution="live"`` with ``live=None``).  Both
+    keys are omitted from serialization at their defaults -- "mc" and
+    ``None`` -- so every pre-live spec hash and store address is
+    unchanged.
     """
 
     name: str
@@ -162,6 +174,8 @@ class ExperimentSpec:
     backend: Optional[str] = None
     devices: Union[int, str] = 1
     serving: Optional[ServingConfig] = None
+    execution: str = "mc"
+    live: Optional[LiveConfig] = None
     version: int = SPEC_VERSION
 
     def __post_init__(self):
@@ -173,6 +187,20 @@ class ExperimentSpec:
                                                        ServingConfig):
             raise TypeError(f"serving must be a ServingConfig or None; "
                             f"got {type(self.serving).__name__}")
+        if self.execution not in ("mc", "live"):
+            raise ValueError(f"execution must be 'mc' or 'live'; "
+                             f"got {self.execution!r}")
+        if self.live is not None and not isinstance(self.live, LiveConfig):
+            raise TypeError(f"live must be a LiveConfig or None; "
+                            f"got {type(self.live).__name__}")
+        if self.execution == "live":
+            if self.serving is not None:
+                raise ValueError("execution='live' and serving= are "
+                                 "mutually exclusive axes")
+            if self.live is None:
+                object.__setattr__(self, "live", LiveConfig())
+        elif self.live is not None:
+            raise ValueError("live= requires execution='live'")
         object.__setattr__(self, "schemes", tuple(self.schemes))
         if not self.schemes:
             raise ValueError("ExperimentSpec needs at least one scheme")
@@ -204,11 +232,16 @@ class ExperimentSpec:
         if self.serving is not None:
             # key omitted when absent: pre-serving hashes stay valid
             d["serving"] = self.serving.to_dict()
+        if self.execution != "mc":
+            # both live keys omitted at defaults: pre-live hashes survive
+            d["execution"] = self.execution
+            d["live"] = self.live.to_dict()
         return d
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
         serving = d.get("serving")
+        live = d.get("live")
         return cls(name=d["name"], grid=ScenarioGrid.from_dict(d["grid"]),
                    schemes=tuple(SchemeSpec.from_dict(s)
                                  for s in d["schemes"]),
@@ -217,6 +250,9 @@ class ExperimentSpec:
                    devices=d.get("devices", 1),
                    serving=(None if serving is None
                             else ServingConfig.from_dict(serving)),
+                   execution=d.get("execution", "mc"),
+                   live=(None if live is None
+                         else LiveConfig.from_dict(live)),
                    version=int(d.get("version", SPEC_VERSION)))
 
     def to_json(self, indent: Optional[int] = 2) -> str:

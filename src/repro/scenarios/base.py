@@ -39,31 +39,28 @@ from typing import Any, Dict, List, Mapping, Optional, Type
 
 import numpy as np
 
+from repro.core.registry import Registry
 from repro.core.types import HetSpec
 
-SCENARIO_REGISTRY: Dict[str, Type["ScenarioFamily"]] = {}
+SCENARIO_REGISTRY: Registry[Type["ScenarioFamily"]] = \
+    Registry("scenario family")
 
 
 def register_family(name: str):
     """Class decorator: key a ScenarioFamily subclass under ``name``."""
     def deco(cls: Type["ScenarioFamily"]) -> Type["ScenarioFamily"]:
-        if name in SCENARIO_REGISTRY:
-            raise ValueError(f"scenario family {name!r} already registered")
+        SCENARIO_REGISTRY.register(name, cls)
         cls.family = name
-        SCENARIO_REGISTRY[name] = cls
         return cls
     return deco
 
 
 def list_families() -> List[str]:
-    return sorted(SCENARIO_REGISTRY)
+    return SCENARIO_REGISTRY.names()
 
 
 def get_family(name: str) -> Type["ScenarioFamily"]:
-    if name not in SCENARIO_REGISTRY:
-        raise KeyError(f"unknown scenario family {name!r}; "
-                       f"have {list_families()}")
-    return SCENARIO_REGISTRY[name]
+    return SCENARIO_REGISTRY.get(name)
 
 
 class ScenarioFamily:

@@ -32,31 +32,29 @@ from typing import Dict, List, Optional, Type
 
 import numpy as np
 
-ARRIVAL_REGISTRY: Dict[str, Type["ArrivalProcess"]] = {}
+from repro.core.registry import Registry
+
+ARRIVAL_REGISTRY: Registry[Type["ArrivalProcess"]] = \
+    Registry("arrival process")
 
 
 def register_arrival(name: str):
     """Class decorator: key an ArrivalProcess subclass under ``name``."""
     def deco(cls: Type["ArrivalProcess"]) -> Type["ArrivalProcess"]:
-        if name in ARRIVAL_REGISTRY:
-            raise ValueError(f"arrival process {name!r} already registered")
+        ARRIVAL_REGISTRY.register(name, cls)
         cls.name = name
-        ARRIVAL_REGISTRY[name] = cls
         return cls
     return deco
 
 
 def list_arrivals() -> List[str]:
-    return sorted(ARRIVAL_REGISTRY)
+    return ARRIVAL_REGISTRY.names()
 
 
 def get_arrival(name: str, **params) -> "ArrivalProcess":
     """Instantiate a registered arrival process; unknown names or params
     fail loudly (the ``validate_backend`` discipline)."""
-    if name not in ARRIVAL_REGISTRY:
-        raise KeyError(f"unknown arrival process {name!r}; "
-                       f"have {list_arrivals()}")
-    cls = ARRIVAL_REGISTRY[name]
+    cls = ARRIVAL_REGISTRY.get(name)
     try:
         return cls(**params)
     except TypeError:

@@ -1,0 +1,483 @@
+"""The live async control plane (``repro.control``).
+
+Transport conformance over every registered transport (echo, ordering,
+timeout, close), fault-injection behaviour (drops -> retries, worker
+loss -> leftover reassignment, degraded completion), live-vs-MC T_comp
+agreement for the exchange and coded paths, telemetry conservation, the
+``LiveConfig``/``ExperimentSpec`` value discipline (spec-hash
+back-compat pinned), and the generic ``Registry`` helper's regression
+surface across all five plugin registries.
+"""
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+from repro.control import (Comm, CommClosedError, LiveConfig, Telemetry,
+                           TRANSPORT_REGISTRY, get_transport,
+                           list_transports, run_live)
+from repro.control.coordinator import live_supported
+from repro.core.registry import Registry
+from repro.core.schemes import get_scheme
+from repro.core.types import HetSpec
+
+RNG = np.random.default_rng
+
+# constructor params that make each registered transport behave as a
+# reliable channel -- what the conformance battery runs against
+RELIABLE_PARAMS = {"inproc": {}, "flaky": {"drop": 0.0, "seed": 0}}
+
+
+def small_het(K=4, seed=2):
+    return HetSpec.uniform_random(K, 4.0, 4.0 ** 2 / 6.0, RNG(seed))
+
+
+def quick_cfg(**kw):
+    kw.setdefault("target_wall_s", 0.15)
+    return LiveConfig(**kw)
+
+
+def echo_handler():
+    async def handle(comm: Comm):
+        while True:
+            try:
+                msg = await comm.recv()
+            except (CommClosedError, asyncio.CancelledError):
+                return
+            await comm.send({"echo": msg})
+    return handle
+
+
+# ---------------------------------------------------------------------------
+# transport conformance (parametrized over the registry)
+# ---------------------------------------------------------------------------
+
+class TestTransportConformance:
+    @pytest.mark.parametrize("name", list_transports())
+    def test_registered_and_instantiable(self, name):
+        tr = get_transport(name, **RELIABLE_PARAMS[name])
+        assert tr.name == name
+
+    @pytest.mark.parametrize("name", list_transports())
+    def test_echo_round_trip(self, name):
+        async def main():
+            tr = get_transport(name, **RELIABLE_PARAMS[name])
+            listener = tr.listen(echo_handler())
+            await listener.start()
+            comm = await tr.connect(listener.address)
+            await comm.send({"x": 1, "payload": [1, 2, 3]})
+            reply = await comm.recv(timeout=2.0)
+            assert reply == {"echo": {"x": 1, "payload": [1, 2, 3]}}
+            await comm.close()
+            await listener.stop()
+        asyncio.run(main())
+
+    @pytest.mark.parametrize("name", list_transports())
+    def test_fifo_ordering(self, name):
+        async def main():
+            tr = get_transport(name, **RELIABLE_PARAMS[name])
+            listener = tr.listen(echo_handler())
+            await listener.start()
+            comm = await tr.connect(listener.address)
+            for i in range(20):
+                await comm.send({"i": i})
+            got = [(await comm.recv(timeout=2.0))["echo"]["i"]
+                   for _ in range(20)]
+            assert got == list(range(20))
+            await listener.stop()
+        asyncio.run(main())
+
+    @pytest.mark.parametrize("name", list_transports())
+    def test_recv_timeout(self, name):
+        async def main():
+            tr = get_transport(name, **RELIABLE_PARAMS[name])
+            listener = tr.listen(echo_handler())
+            await listener.start()
+            comm = await tr.connect(listener.address)
+            with pytest.raises(asyncio.TimeoutError):
+                await comm.recv(timeout=0.05)
+            await listener.stop()
+        asyncio.run(main())
+
+    @pytest.mark.parametrize("name", list_transports())
+    def test_peer_close_raises(self, name):
+        async def main():
+            server_comms = []
+
+            async def handle(comm):
+                server_comms.append(comm)
+                await comm.close()
+
+            tr = get_transport(name, **RELIABLE_PARAMS[name])
+            listener = tr.listen(handle)
+            await listener.start()
+            comm = await tr.connect(listener.address)
+            with pytest.raises(CommClosedError):
+                await comm.recv(timeout=2.0)
+            await listener.stop()
+        asyncio.run(main())
+
+    def test_connect_unknown_address_fails(self):
+        async def main():
+            tr = get_transport("inproc")
+            with pytest.raises(CommClosedError):
+                await tr.connect("inproc://no-such-listener")
+        asyncio.run(main())
+
+    def test_flaky_latency_preserves_order(self):
+        async def main():
+            tr = get_transport("flaky", delay=0.001, jitter=0.002, seed=4)
+            listener = tr.listen(echo_handler())
+            await listener.start()
+            comm = await tr.connect(listener.address)
+            for i in range(10):
+                await comm.send({"i": i})
+            got = [(await comm.recv(timeout=5.0))["echo"]["i"]
+                   for _ in range(10)]
+            assert got == list(range(10))
+            await listener.stop()
+        asyncio.run(main())
+
+    def test_flaky_drops_messages_after_handshake(self):
+        async def main():
+            tr = get_transport("flaky", drop=0.5, seed=11)
+            listener = tr.listen(echo_handler())
+            await listener.start()
+            comm = await tr.connect(listener.address)
+            for i in range(30):
+                await comm.send({"i": i})
+            # the client-side wrapper counts its own silent drops
+            assert comm.dropped > 0
+            await listener.stop()
+        asyncio.run(main())
+
+    def test_flaky_validates_params(self):
+        with pytest.raises(ValueError):
+            get_transport("flaky", drop=1.5)
+        with pytest.raises(ValueError):
+            get_transport("flaky", delay=-1.0)
+
+    def test_get_transport_bad_param_lists_allowed(self):
+        with pytest.raises(KeyError, match="bad params.*nope.*allowed"):
+            get_transport("inproc", nope=1)
+
+
+# ---------------------------------------------------------------------------
+# live execution: agreement with MC, faults, conservation
+# ---------------------------------------------------------------------------
+
+def assert_ledger_conserves(rep):
+    led = rep.extra["control_plane"]["ledger"]
+    assert led["units_dispatched"] == (led["units_completed"]
+                                       + led["units_reassigned"])
+    return led
+
+
+class TestLiveExecution:
+    def test_work_exchange_live_matches_mc(self):
+        het, N = small_het(), 800
+        rep = run_live("work_exchange", {}, het, N, quick_cfg(), trials=3,
+                       seed=7)
+        mc = get_scheme("work_exchange").mc(het, N, 400, RNG(0))
+        se = np.hypot(rep.t_comp_std / np.sqrt(3), mc.t_comp_std / 20.0)
+        # generous band: 3 live episodes against 400 MC trials
+        assert abs(rep.t_comp - mc.t_comp) < max(8.0 * se, 0.25 * mc.t_comp)
+        led = assert_ledger_conserves(rep)
+        assert led["units_completed"] == 3 * N
+        assert rep.iterations >= 2          # it actually exchanged
+
+    def test_fixed_live_matches_mc(self):
+        het, N = small_het(), 800
+        rep = run_live("fixed", {}, het, N, quick_cfg(), trials=3, seed=7)
+        mc = get_scheme("fixed").mc(het, N, 400, RNG(0))
+        se = np.hypot(rep.t_comp_std / np.sqrt(3), mc.t_comp_std / 20.0)
+        assert abs(rep.t_comp - mc.t_comp) < max(8.0 * se, 0.25 * mc.t_comp)
+        led = assert_ledger_conserves(rep)
+        assert led["units_reassigned"] == 0     # single wait-all round
+        assert rep.iterations == 1
+
+    def test_coded_path_runs_mds_and_hedged(self):
+        het, N = small_het(), 600
+        for name, params in (("mds", {"L": 3}), ("hedged", {})):
+            rep = run_live(name, params, het, N, quick_cfg(), trials=2,
+                           seed=5)
+            assert rep.t_comp > 0 and rep.iterations == 1
+            led = assert_ledger_conserves(rep)
+            # redundant schemes ship more than N units
+            assert led["units_dispatched"] > 2 * N
+            assert rep.n_comm == float(
+                get_scheme(name, **params).initial_sizes(het, N).sum() - N)
+
+    def test_live_unsupported_scheme_fails_fast(self):
+        for name in ("oracle", "gradient_coded"):
+            with pytest.raises(ValueError, match="cannot run live"):
+                live_supported(get_scheme(name))
+        assert live_supported(get_scheme("work_exchange")) == "exchange"
+        assert live_supported(get_scheme("mds")) == "coded"
+
+    def test_injected_drops_trigger_retries_and_still_complete(self):
+        het, N = small_het(), 500
+        cfg = quick_cfg(transport="flaky",
+                        transport_params={"drop": 0.2, "seed": 3},
+                        timeout_s=0.1, retries=4)
+        rep = run_live("work_exchange", {}, het, N, cfg, trials=1, seed=2)
+        cp = rep.extra["control_plane"]
+        assert cp["timeline"]["counters"].get("rpc_retries", 0) > 0
+        led = assert_ledger_conserves(rep)
+        assert led["units_completed"] == N      # complete despite loss
+        assert rep.t_comp > 0
+
+    def test_worker_loss_reassigns_leftovers(self):
+        het, N = small_het(), 800
+        cfg = quick_cfg(target_wall_s=0.3, timeout_s=0.05, retries=1,
+                        kill_worker=0, kill_after_frac=0.2)
+        rep = run_live("work_exchange", {}, het, N, cfg, trials=1, seed=4)
+        cp = rep.extra["control_plane"]
+        assert cp["workers_lost"] == [0]
+        led = assert_ledger_conserves(rep)
+        assert led["units_completed"] == N      # degraded, not hung
+        assert led["units_reassigned"] > 0      # the dead worker's units
+        # degraded: measured T_comp above the no-fault run's
+        base = run_live("work_exchange", {}, het, N,
+                        quick_cfg(target_wall_s=0.3), trials=1, seed=4)
+        assert rep.t_comp > base.t_comp
+
+    def test_occupancy_tracks_rates(self):
+        het = HetSpec(np.array([1.0, 4.0]))
+        rep = run_live("fixed", {}, het, 400, quick_cfg(), trials=1,
+                       seed=9)
+        occ = rep.extra["control_plane"]["timeline"]["occupancy"]
+        # the 4x-faster worker pushes ~4x the units through its shard
+        thr0 = occ["0"]["throughput_units_per_s"]
+        thr1 = occ["1"]["throughput_units_per_s"]
+        assert thr1 > 2.0 * thr0
+        assert occ["0"]["units_done"] + occ["1"]["units_done"] == 400
+
+    def test_timeline_is_json_safe(self):
+        rep = run_live("work_exchange", {}, small_het(), 400, quick_cfg(),
+                       trials=1, seed=1)
+        json.dumps(rep.extra["control_plane"])   # must not raise
+
+
+class TestTelemetry:
+    def test_spans_counters_events(self):
+        tel = Telemetry(max_events=3)
+        tel.start()
+        tel.count("units_dispatched", 10)
+        tel.count("units_dispatched", 5)
+        for i in range(5):
+            tel.event("e", i=i)
+        tel.span_open(0, "busy")
+        tel.span_close(0, units=7)
+        d = tel.to_dict()
+        assert d["counters"]["units_dispatched"] == 15
+        assert len(d["events"]) == 3 and d["n_events"] == 5  # capped
+        assert d["occupancy"]["0"]["units_done"] == 7
+        assert d["occupancy"]["0"]["busy_s"] >= 0.0
+
+    def test_span_open_closes_previous(self):
+        tel = Telemetry()
+        tel.start()
+        tel.span_open(1, "busy")
+        tel.span_open(1, "idle")     # implicitly closes the busy span
+        tel.close_all()
+        states = [s["state"] for s in tel.spans[1]]
+        assert states == ["busy", "idle"]
+
+
+# ---------------------------------------------------------------------------
+# LiveConfig value discipline
+# ---------------------------------------------------------------------------
+
+class TestLiveConfig:
+    def test_round_trip(self):
+        cfg = LiveConfig(transport="flaky",
+                         transport_params={"drop": 0.1, "seed": 5},
+                         target_wall_s=0.25, kill_worker=1)
+        again = LiveConfig.from_dict(json.loads(json.dumps(cfg.to_dict())))
+        assert again == cfg
+
+    def test_unknown_transport_fails_at_construction(self):
+        with pytest.raises(KeyError, match="unknown transport"):
+            LiveConfig(transport="carrier_pigeon")
+
+    def test_bad_transport_params_fail_at_construction(self):
+        with pytest.raises(KeyError, match="bad params"):
+            LiveConfig(transport="inproc", transport_params={"nope": 1})
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            LiveConfig(target_wall_s=0.0)
+        with pytest.raises(ValueError):
+            LiveConfig(time_scale=-1.0)
+        with pytest.raises(ValueError):
+            LiveConfig(retries=-1)
+        with pytest.raises(ValueError):
+            LiveConfig(backoff=0.5)
+        with pytest.raises(ValueError):
+            LiveConfig(kill_after_frac=0.0)
+
+    def test_from_dict_rejects_unknown_keys(self):
+        with pytest.raises(KeyError, match="unknown live key"):
+            LiveConfig.from_dict({"transport": "inproc", "wat": 1})
+
+    def test_resolve_time_scale(self):
+        assert LiveConfig(time_scale=2.0).resolve_time_scale(100.0) == 2.0
+        auto = LiveConfig(target_wall_s=0.5).resolve_time_scale(100.0)
+        assert auto == pytest.approx(0.005)
+
+
+# ---------------------------------------------------------------------------
+# Experiment API integration (satellite 1)
+# ---------------------------------------------------------------------------
+
+def live_exp_spec(**kw):
+    from repro.experiments import ExperimentSpec, ScenarioGrid, scheme_spec
+    kw.setdefault("execution", "live")
+    kw.setdefault("live", LiveConfig(target_wall_s=0.12))
+    return ExperimentSpec(
+        name="live-int",
+        grid=ScenarioGrid(K=3, points=[(4.0, 4.0 ** 2 / 6, 3)]),
+        schemes=(scheme_spec("work_exchange"), scheme_spec("fixed")),
+        N=400, trials=2, seed=21, **kw)
+
+
+class TestExperimentIntegration:
+    def test_spec_round_trip_and_hash(self):
+        from repro.experiments import ExperimentSpec
+        spec = live_exp_spec()
+        again = ExperimentSpec.from_json(spec.to_json())
+        assert again == spec
+        assert again.spec_hash() == spec.spec_hash()
+        # the live axis is part of the address
+        mc = spec.replace(execution="mc", live=None)
+        assert mc.spec_hash() != spec.spec_hash()
+
+    def test_no_live_keys_preserves_pre_live_hashes(self):
+        spec = live_exp_spec().replace(execution="mc", live=None)
+        d = spec.to_dict()
+        assert "execution" not in d and "live" not in d
+        # the serialized shape is EXACTLY the pre-live one: rebuilding
+        # the dict by hand reproduces the spec hash byte-for-byte
+        import hashlib
+        pre_live = json.dumps(d, sort_keys=True, separators=(",", ":"))
+        assert spec.spec_hash() == hashlib.sha256(
+            pre_live.encode()).hexdigest()
+
+    def test_execution_live_defaults_live_config(self):
+        spec = live_exp_spec(live=None)
+        assert spec.live == LiveConfig()
+
+    def test_live_and_serving_are_exclusive(self):
+        from repro.serving import ServingConfig
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            live_exp_spec(serving=ServingConfig(loads=(0.5,)))
+
+    def test_live_requires_live_execution(self):
+        with pytest.raises(ValueError, match="requires execution='live'"):
+            live_exp_spec(execution="mc")
+
+    def test_bad_execution_rejected(self):
+        with pytest.raises(ValueError, match="execution must be"):
+            live_exp_spec(execution="warp", live=None)
+
+    def test_compile_plan_pins_single_device_and_validates(self):
+        from repro.experiments.plan import compile_plan
+        plan = compile_plan(live_exp_spec())
+        assert plan.devices == 1
+        from repro.experiments import scheme_spec
+        bad = live_exp_spec().replace(
+            schemes=(scheme_spec("gradient_coded"),))
+        with pytest.raises(ValueError, match="cannot run live"):
+            compile_plan(bad)
+
+    def test_run_experiment_store_round_trip(self, tmp_path):
+        from repro.experiments import run_experiment
+        from repro.experiments.store import ResultsStore
+        store = ResultsStore(tmp_path / "store")
+        spec = live_exp_spec()
+        first = run_experiment(spec, store=store)
+        assert not first.cache_hit
+        for key in ("work_exchange", "fixed"):
+            rows = first.report(key)
+            assert len(rows) == 1
+            assert rows[0].extra["control_plane"]["transport"] == "inproc"
+            assert_ledger_conserves(rows[0])
+        second = run_experiment(spec, store=store)
+        assert second.cache_hit
+        assert second.to_dict()["reports"] == first.to_dict()["reports"]
+
+
+# ---------------------------------------------------------------------------
+# the generic Registry helper + the five migrated plugin surfaces
+# ---------------------------------------------------------------------------
+
+class TestRegistryHelper:
+    def test_basic_contract(self):
+        reg: Registry[int] = Registry("widget")
+        reg.register("a", 1, aliases=("alpha",))
+        reg.register("b", 2)
+        assert reg.get("a") == reg.get("alpha") == 1
+        assert reg.canonical("alpha") == "a"
+        assert reg.names() == ["a", "b"]
+        assert reg.names(include_aliases=True) == ["a", "b", "alpha"]
+        assert "a" in reg and len(reg) == 2
+        with pytest.raises(ValueError, match="already registered"):
+            reg.register("alpha", 3)
+        with pytest.raises(KeyError, match="unknown widget 'z'"):
+            reg.get("z")
+        del reg["a"]
+        assert "a" not in reg and reg.canonical("alpha") == "alpha"
+
+    def test_scheme_registry_error_text_unchanged(self):
+        with pytest.raises(KeyError) as exc:
+            get_scheme("definitely_missing")
+        msg = str(exc.value)
+        assert "unknown scheme 'definitely_missing'" in msg
+        assert "work_exchange" in msg and "aliases" in msg
+
+    def test_sampler_registry_error_text_unchanged(self):
+        from repro.core.samplers import get_backend
+        with pytest.raises(KeyError) as exc:
+            get_backend("definitely_missing")
+        assert "unknown sampler backend 'definitely_missing'" in str(
+            exc.value)
+
+    def test_scenario_registry_error_text_unchanged(self):
+        from repro.scenarios import get_family
+        with pytest.raises(KeyError) as exc:
+            get_family("definitely_missing")
+        assert "unknown scenario family 'definitely_missing'" in str(
+            exc.value)
+
+    def test_arrival_registry_error_text_unchanged(self):
+        from repro.serving import get_arrival
+        with pytest.raises(KeyError) as exc:
+            get_arrival("definitely_missing")
+        assert "unknown arrival process 'definitely_missing'" in str(
+            exc.value)
+
+    def test_transport_registry_surface(self):
+        assert "inproc" in list_transports()
+        assert "flaky" in list_transports()
+        assert "faulty" in list_transports(include_aliases=True)
+        assert (TRANSPORT_REGISTRY.get("faulty")
+                is TRANSPORT_REGISTRY.get("flaky"))
+        with pytest.raises(KeyError) as exc:
+            get_transport("definitely_missing")
+        assert "unknown transport 'definitely_missing'" in str(exc.value)
+
+    def test_all_five_registries_round_trip(self):
+        from repro.core.samplers import SAMPLER_BACKENDS
+        from repro.core.schemes import SCHEME_REGISTRY
+        from repro.scenarios.base import SCENARIO_REGISTRY
+        from repro.serving.arrivals import ARRIVAL_REGISTRY
+        for reg, key in ((SCHEME_REGISTRY, "work_exchange"),
+                         (SAMPLER_BACKENDS, "numpy"),
+                         (SCENARIO_REGISTRY, "uniform_random"),
+                         (ARRIVAL_REGISTRY, "poisson"),
+                         (TRANSPORT_REGISTRY, "inproc")):
+            assert isinstance(reg, Registry)
+            assert key in reg.names()
+            assert reg.get(key) is reg[key]
