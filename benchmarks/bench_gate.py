@@ -41,8 +41,11 @@ WALL_KEYS_MDS = ("pr2_loop_s", "numpy_grid_s", "jax_grid_s",
                  "pallas_grid_s")
 WALL_KEYS_SHARDED = ("single_jax_s", "sharded_jax_s")
 WALL_KEYS_DRIFTING = ("numpy_grid_s", "jax_grid_s", "pallas_grid_s")
+WALL_KEYS_PANEL = ("per_scheme_jax_s", "fused_jax_s",
+                   "per_scheme_pallas_s", "fused_pallas_s")
 WALL_KEYS_SERVE = ("engine_wall_s",)
-WALL_KEYS_JAX_CACHE = ("cold_first_call_s", "warm_first_call_s")
+WALL_KEYS_JAX_CACHE = ("cold_first_call_s", "cold_second_shape_s",
+                       "warm_first_call_s", "warm_second_shape_s")
 # episode wall is pinned by LiveConfig.target_wall_s (time-scale solved),
 # so drift here means the coordinator itself got slower; the pure
 # coordination wall is tiny and usually falls under --min-wall (reported,
@@ -80,6 +83,10 @@ def collect_walls(report: dict) -> dict:
     for key in WALL_KEYS_DRIFTING:
         if key in drifting:
             walls[f"fig5_drifting.{key}"] = float(drifting[key])
+    panel = report.get("panel", {})
+    for key in WALL_KEYS_PANEL:
+        if key in panel:
+            walls[f"panel.{key}"] = float(panel[key])
     serve = report.get("serve_load", {})
     for key in WALL_KEYS_SERVE:
         if key in serve:

@@ -38,20 +38,27 @@ def grid_specs(quick: bool = False):
 
 
 def experiment(trials: int = TRIALS, n: int = N_PAPER, quick: bool = False,
-               backend: str | None = None,
-               devices: int | str = 1) -> ExperimentSpec:
-    """The figure as a declarative spec (same draws as ``grid_specs``)."""
+               backend: str | None = None, devices: int | str = 1,
+               panel: str = "per_scheme") -> ExperimentSpec:
+    """The figure as a declarative spec (same draws as ``grid_specs``).
+
+    ``panel="fused"`` routes the work-exchange known/unknown pair
+    through the fused whole-panel dispatch (one engine call on jax /
+    pallas); every other scheme keeps its per-task stream bit-identical.
+    """
     points = [(mu, sigma2, int(mu)) for mu, _, sigma2 in grid_points(quick)]
     return ExperimentSpec(
         name="fig5-quick" if quick else "fig5",
         grid=ScenarioGrid(K=K_PAPER, points=points),
         schemes=tuple(scheme_spec(name) for name in FIG_SCHEMES),
-        N=n, trials=trials, seed=1234, backend=backend, devices=devices)
+        N=n, trials=trials, seed=1234, backend=backend, devices=devices,
+        panel=panel)
 
 
 def drifting_experiment(trials: int = TRIALS, n: int = N_PAPER,
                         quick: bool = False, backend: str | None = None,
-                        kind: str = "ar1") -> ExperimentSpec:
+                        kind: str = "ar1",
+                        panel: str = "per_scheme") -> ExperimentSpec:
     """The fig5 panel under drifting heterogeneity: same ``(mu,
     sigma^2)`` points, but the rates evolve across exchange rounds
     (``repro.scenarios.DriftingScenario``) -- the stress test of the
@@ -67,7 +74,7 @@ def drifting_experiment(trials: int = TRIALS, n: int = N_PAPER,
                               rounds=48),
         schemes=(scheme_spec("work_exchange"),
                  scheme_spec("work_exchange_unknown")),
-        N=n, trials=trials, seed=1234, backend=backend)
+        N=n, trials=trials, seed=1234, backend=backend, panel=panel)
 
 
 def rows_from(result: ExperimentResult):

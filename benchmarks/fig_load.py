@@ -89,6 +89,8 @@ def rows_from(result: ExperimentResult):
                 "reject": e["reject_rate"],
                 "occupancy": e["occupancy"],
                 "n_comm": rep.n_comm,
+                "latency_censored": e.get("latency_censored", 0.0),
+                "censored_frac": e.get("censored_frac", 0.0),
             })
     return rows
 
@@ -96,7 +98,14 @@ def rows_from(result: ExperimentResult):
 def knees(rows, factor: float = 3.0):
     """First swept load where a scheme's sojourn exceeds ``factor`` x its
     own lightest-load sojourn -- the saturation knee (None = no knee
-    inside the sweep)."""
+    inside the sweep).
+
+    A latency-censored row (zero completions: the reported sojourn is
+    the horizon LOWER BOUND, not a measurement) counts as saturated
+    outright -- the true latency is off the top of the window, so
+    comparing the bound against ``factor x base`` would under-detect
+    exactly the loads that are most saturated.
+    """
     out = {}
     by = {}
     for r in rows:
@@ -105,7 +114,8 @@ def knees(rows, factor: float = 3.0):
         rs = sorted(rs, key=lambda r: r["load"])
         base = rs[0]["sojourn"]
         out[key] = next((r["load"] for r in rs
-                         if r["sojourn"] > factor * base), None)
+                         if r.get("latency_censored")
+                         or r["sojourn"] > factor * base), None)
     return out
 
 

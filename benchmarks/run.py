@@ -14,7 +14,9 @@ per-point ``mc()`` loop vs one-dispatch ``mc_grid`` on the numpy / jax /
 pallas sampler backends), the ``mds_grid`` benchmark (batched MDS
 L-sweep vs the PR-2 per-L loop), the ``fig5_sharded`` benchmark
 (single-device vs shard_map multi-device jax execution of the fig5 WE
-grid), the ``serve_load`` section (streaming-arrival engine wall +
+grid), the ``panel`` section (fused whole-panel ``mc_grid_panel``
+dispatch vs the per-scheme loop on the jax / pallas backends), the
+``serve_load`` section (streaming-arrival engine wall +
 per-policy p99 at a pinned load -- see ``benchmarks.fig_load``), and the
 ``jax_cache`` section (cold vs warm first-call wall with the persistent
 compilation cache), and the ``control_plane`` section (live async
@@ -438,6 +440,88 @@ def _bench_fig5_drifting(n: int, trials: int = 1000, reps: int = 3):
     }
 
 
+def _bench_panel(n: int, trials: int = 1000, reps: int = 3):
+    """The fused whole-panel dispatch: fig5's work-exchange pair
+    (known + unknown) through ONE ``mc_grid_panel`` call per backend --
+    schemes x grid points in a single device dispatch -- vs the
+    per-scheme ``mc_grid`` loop those schemes previously required.
+
+    On jax the fused path couples the pair through one common-random-
+    numbers engine (both trajectories share each round's bit stream), so
+    the panel costs roughly one scheme instead of two; on pallas the
+    known rows stack atop the unknown rows in one ``we_rounds_grid``
+    launch.  The fused pair is *statistically* equivalent to per-scheme
+    dispatch (recorded here in combined-SE units), not bitwise -- the
+    executor keeps non-pair schemes bit-identical via its per-task rng
+    mapping, which this benchmark does not exercise.
+    """
+    if QUICK:
+        trials, reps = 200, 1
+    import numpy as np
+
+    from repro.core.schemes import get_scheme, mc_grid_panel
+    from . import fig5
+
+    specs = fig5.grid_specs(quick=QUICK)
+
+    def make_schemes():
+        return {"we_known": get_scheme("work_exchange"),
+                "we_unknown": get_scheme("work_exchange_unknown")}
+
+    def per_scheme(backend):
+        out = {}
+        for key, sch in make_schemes().items():
+            out[key] = sch.mc_grid(specs, n, trials=trials,
+                                   rng=np.random.default_rng(1234),
+                                   backend=backend)
+        return out
+
+    def fused(backend):
+        return mc_grid_panel(make_schemes(), specs, n, trials,
+                             np.random.default_rng(1234), backend=backend)
+
+    # warm the jit caches on both paths and collect the agreement
+    # picture (fused vs per-scheme, same backend, in combined SEs)
+    agree = {}
+    for backend in ("jax", "pallas"):
+        a, b = per_scheme(backend), fused(backend)
+        worst = 0.0
+        for key in a:
+            for ra, rb in zip(a[key], b[key]):
+                se = float(np.hypot(ra.t_comp_std, rb.t_comp_std)
+                           / np.sqrt(trials))
+                worst = max(worst,
+                            abs(ra.t_comp - rb.t_comp) / max(se, 1e-12))
+        agree[backend] = round(worst, 2)
+
+    walls = {(m, b): [] for m in ("per_scheme", "fused")
+             for b in ("jax", "pallas")}
+    for _ in range(reps):
+        for mode, fn in (("per_scheme", per_scheme), ("fused", fused)):
+            for backend in ("jax", "pallas"):
+                t0 = time.perf_counter()
+                fn(backend)
+                walls[(mode, backend)].append(time.perf_counter() - t0)
+    out = {
+        "N": n, "trials": trials, "grid_points": len(specs),
+        "K": int(specs[0].K), "wall_reps": reps,
+        "schemes": list(make_schemes()),
+        "note": "fig5 work-exchange pair: one mc_grid_panel dispatch "
+                "(fused) vs per-scheme mc_grid calls; jax fuses via a "
+                "coupled common-random-numbers engine, pallas via a "
+                "stacked we_rounds_grid launch; agreement is fused vs "
+                "per-scheme in combined-SE units",
+    }
+    for backend in ("jax", "pallas"):
+        per_s = min(walls[("per_scheme", backend)])
+        fus_s = min(walls[("fused", backend)])
+        out[f"per_scheme_{backend}_s"] = round(per_s, 4)
+        out[f"fused_{backend}_s"] = round(fus_s, 4)
+        out[f"speedup_{backend}"] = round(per_s / fus_s, 2)
+        out[f"max_mean_drift_se_{backend}"] = agree[backend]
+    return out
+
+
 def _bench_serve_load(reps: int = 2):
     """The serving engine at the fig_load operating point: wall-clock of
     one load cell (the sweep's unit of work) plus per-scheme p99 sojourn
@@ -490,9 +574,14 @@ def _bench_jax_cache():
     """Cold vs warm first-call wall with the persistent jax compilation
     cache (``REPRO_JAX_CACHE_DIR``): two fresh subprocesses share one
     cache dir, so the second pays a disk read instead of XLA compilation.
-    Each subprocess prints its first ``mc_grid`` call's wall; the warm/
-    cold ratio is the knob's value on CI runners that re-enter python per
-    job step.
+
+    Each subprocess runs TWO different-shaped panels -- (K=12,
+    trials=16) then (K=14, trials=24) -- that K/R shape bucketing pads
+    to the same {rows: 64, K: 16} batch shape.  The second panel's wall
+    inside the COLD process is therefore the bucketing win (one
+    compilation serves both shapes, in-process); the warm process's
+    first wall is the persistent-cache win (the shared bucket entry is
+    read back from disk across processes).
     """
     import subprocess
     import tempfile
@@ -505,17 +594,20 @@ def _bench_jax_cache():
         "_maybe_enable_jax_compilation_cache()\n"
         "from repro.core.schemes import get_scheme\n"
         "from repro.core.types import HetSpec\n"
-        "het = HetSpec.uniform_random(8, 20.0, 20.0 ** 2 / 6,"
+        "sch = get_scheme('work_exchange')\n"
+        "for tag, K, trials in (('A', 12, 16), ('B', 14, 24)):\n"
+        "    het = HetSpec.uniform_random(K, 20.0, 20.0 ** 2 / 6,"
         " np.random.default_rng(3))\n"
-        "t0 = time.perf_counter()\n"
-        "get_scheme('work_exchange').mc_grid([het], 2000, trials=16,"
+        "    t0 = time.perf_counter()\n"
+        "    sch.mc_grid([het], 2000, trials=trials,"
         " rng=np.random.default_rng(0), backend='jax')\n"
-        "print(f'FIRST_CALL {time.perf_counter() - t0:.4f}')\n"
+        "    print(f'CALL_{tag} {time.perf_counter() - t0:.4f}')\n"
     )
-    walls = []
+    walls = {}
     with tempfile.TemporaryDirectory(prefix="repro-jax-cache-") as cache:
         for phase in ("cold", "warm"):
             env = dict(os.environ, REPRO_JAX_CACHE_DIR=cache)
+            env.pop("REPRO_SHAPE_BUCKETS", None)   # bucketing must be on
             try:
                 out = subprocess.run([sys.executable, "-c", prog],
                                      env=env, capture_output=True,
@@ -525,17 +617,24 @@ def _bench_jax_cache():
             if out.returncode != 0:
                 return {"skipped": f"{phase} subprocess failed: "
                                    f"{out.stderr.strip()[-300:]}"}
-            line = next(ln for ln in out.stdout.splitlines()
-                        if ln.startswith("FIRST_CALL "))
-            walls.append(float(line.split()[1]))
-    cold, warm = walls
+            for ln in out.stdout.splitlines():
+                if ln.startswith("CALL_"):
+                    tag, wall = ln.split()
+                    walls[f"{phase}_{tag[5:]}"] = float(wall)
+    cold, warm = walls["cold_A"], walls["warm_A"]
     return {
         "cold_first_call_s": round(cold, 4),
+        "cold_second_shape_s": round(walls["cold_B"], 4),
         "warm_first_call_s": round(warm, 4),
+        "warm_second_shape_s": round(walls["warm_B"], 4),
         "speedup_warm_vs_cold": round(cold / warm, 2),
-        "note": "first work_exchange jax mc_grid call in a fresh "
-                "process, REPRO_JAX_CACHE_DIR shared between the two "
-                "runs (cold populates the cache, warm reads it)",
+        "speedup_bucket_vs_compile": round(cold / walls["cold_B"], 2),
+        "note": "two different-shaped work_exchange jax panels "
+                "(K=12/trials=16, then K=14/trials=24; both bucket to "
+                "rows=64, K=16) per fresh process, REPRO_JAX_CACHE_DIR "
+                "shared between the two runs: cold_second_shape shows "
+                "in-process bucket reuse, warm_first shows the "
+                "persistent cache serving the shared bucket entry",
     }
 
 
@@ -601,7 +700,8 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
                          "sigma2": "mu^2/6", "trials": trials},
               "schemes": {}, "mc_engine": {}, "fig5_grid": {},
               "mds_grid": {}, "fig5_sharded": {}, "fig5_drifting": {},
-              "serve_load": {}, "jax_cache": {}, "control_plane": {}}
+              "panel": {}, "serve_load": {}, "jax_cache": {},
+              "control_plane": {}}
 
     # per-trial-loop schemes walk unit ids in Python: bound their budget
     # (the JSON records the actual N/trials used -- no silent caps)
@@ -652,6 +752,7 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     report["mds_grid"] = _bench_mds_grid(n)
     report["fig5_sharded"] = _bench_fig5_sharded(n)
     report["fig5_drifting"] = _bench_fig5_drifting(n)
+    report["panel"] = _bench_panel(n)
     report["serve_load"] = _bench_serve_load()
     report["jax_cache"] = _bench_jax_cache()
     report["control_plane"] = _bench_control_plane()
@@ -666,6 +767,7 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
                   f"{s['devices']} devices"
                   if "speedup_sharded_vs_single" in s
                   else f"sharded: {s.get('skipped', 'n/a')}")
+    p = report["panel"]
     sv = report["serve_load"]
     jc = report["jax_cache"]
     cache_note = (f"jax cache warm {jc['speedup_warm_vs_cold']}x vs cold"
@@ -684,6 +786,7 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
           f"{m['speedup_best_vs_pr2_loop']}x vs PR2 loop; {shard_note}; "
           f"drifting: jax {d['speedup_jax_vs_numpy']}x vs numpy, "
           f"agreement <= {max(d['max_mean_drift_se_jax'], d['max_mean_drift_se_pallas'])} SE; "
+          f"fused panel {p['speedup_jax']}x on jax; "
           f"serve cell {sv['engine_wall_s']}s; {cache_note}; {ctl_note})",
           file=sys.stderr)
     return []

@@ -20,6 +20,8 @@ import dataclasses
 
 import numpy as np
 
+from .registry import Registry
+
 
 class RateEstimator:
     """Interface: observe per-iteration (done_counts, elapsed) and expose rates."""
@@ -71,8 +73,13 @@ class EMARateEstimator(RateEstimator):
             return
         inst = np.asarray(done, dtype=np.float64) / float(elapsed)
         first = ~self._seen & (inst > 0)
+        ema = (1 - self.alpha) * self._rate + self.alpha * inst
+        # a worker with no observation yet holds the prior outright:
+        # running its zero through the EMA would decay the prior toward
+        # zero and starve a worker that simply hasn't reported (slow
+        # start, long first shard) before it ever produces a unit
         self._rate = np.where(first, inst,
-                              (1 - self.alpha) * self._rate + self.alpha * inst)
+                              np.where(self._seen, ema, self._rate))
         self._seen |= inst > 0
 
     def rates(self) -> np.ndarray:
@@ -138,9 +145,14 @@ def _norm_ppf(q: float) -> float:
            (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1)
 
 
+ESTIMATOR_REGISTRY: Registry = Registry("estimator")
+ESTIMATOR_REGISTRY.register("cumulative", CumulativeRateEstimator)
+ESTIMATOR_REGISTRY.register("ema", EMARateEstimator)
+ESTIMATOR_REGISTRY.register("bayes", GammaPosteriorEstimator)
+
+
 def make_estimator(kind: str, K: int, prior_rate: float = 1.0,
                    **kw) -> RateEstimator:
-    kinds = {"cumulative": CumulativeRateEstimator,
-             "ema": EMARateEstimator,
-             "bayes": GammaPosteriorEstimator}
-    return kinds[kind](K, prior_rate, **kw)
+    """Instantiate a registered estimator; unknown kinds raise the
+    registry's uniform ``KeyError`` listing the registered names."""
+    return ESTIMATOR_REGISTRY.get(kind)(K, prior_rate, **kw)

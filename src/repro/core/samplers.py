@@ -111,6 +111,11 @@ class SamplerBackend:
     description: str = ""
     gamma_rows: Optional[GammaRowsFn] = None
     coupled_mds_sweep: bool = False
+    # fused whole-panel dispatch for the work-exchange known/unknown pair:
+    # (lam (G, K), N, cfg_known, cfg_unknown, trials, rng,
+    #  rate_schedule=None) -> {"known": GridArrays, "unknown": GridArrays}.
+    # Backends that leave it None run the pair as two grid dispatches.
+    work_exchange_panel: Optional[Callable] = None
 
     def available(self) -> bool:
         return _BACKEND_AVAILABLE.get(self.name, lambda: True)()
@@ -483,10 +488,16 @@ def _build_jax_engine(drift: bool = False):
         B, K = lam.shape
         inv_lam0 = 1.0 / lam
         lam_sum = lam.sum(1)
+        # zero-rate columns are masked padding from the K-axis shape
+        # buckets: the estimator must hold a zero estimate for them so
+        # they are never assigned work (identical to ones without padding)
+        prior = jnp.where(lam > 0.0, 1.0, 0.0)
         R = sched.shape[1] if drift else 1
 
         def inv_lam_at(iters):
-            """1/rate in effect at each row's current round."""
+            """1/rate in effect at each row's current round (per-row
+            gather -- final phase only; the loop uses the scalar trip
+            counter and one dynamic slice per round)."""
             if not drift:
                 return inv_lam0
             r_idx = jnp.minimum(iters, R - 1)
@@ -499,7 +510,16 @@ def _build_jax_engine(drift: bool = False):
 
         def body(st):
             key, kg, kb = jax.random.split(st["key"], 3)
-            inv_lam = inv_lam_at(st["iters"])
+            if drift:
+                # every active row has proceeded on every prior trip, so
+                # its round == the scalar trip counter: one row load
+                # replaces the per-row take_along_axis gather (frozen
+                # rows' stale reads are fully masked)
+                r = jnp.minimum(st["round"], R - 1)
+                inv_lam = 1.0 / jax.lax.dynamic_slice_in_dim(
+                    sched, r, 1, axis=1)[:, 0, :]
+            else:
+                inv_lam = inv_lam0
             if known:
                 share = lam * (st["n_rem"] / lam_sum)[:, None]
             else:
@@ -551,6 +571,8 @@ def _build_jax_engine(drift: bool = False):
                 "active": proceed & (n_rem_m > threshold)
                           & (iters < max_iter),
             }
+            if drift:
+                out["round"] = st["round"] + jnp.int32(1)
             if not known:
                 # est accumulators go unmasked -- frozen lanes only read
                 # them through lam_hat, which IS masked
@@ -560,7 +582,7 @@ def _build_jax_engine(drift: bool = False):
                 out["est_time"] = et
                 out["lam_hat"] = upd(
                     jnp.where(ed > 0.0,
-                              ed / jnp.maximum(et, 1e-30)[:, None], 1.0),
+                              ed / jnp.maximum(et, 1e-30)[:, None], prior),
                     st["lam_hat"])
             return out
 
@@ -573,9 +595,11 @@ def _build_jax_engine(drift: bool = False):
             "iters": jnp.zeros(B, dtype=jnp.int32),
             "active": jnp.full(B, n0) > threshold,
         }
+        if drift:
+            st["round"] = jnp.int32(0)
         if not known:
             st.update(est_done=jnp.zeros((B, K)), est_time=jnp.zeros(B),
-                      lam_hat=jnp.ones((B, K)))
+                      lam_hat=prior)
         st = jax.lax.while_loop(cond, body, st)
 
         # final phase: assign the remainder proportionally, wait for all
@@ -681,10 +705,13 @@ def work_exchange_grid_jax(lam: np.ndarray, N: int, cfg: ExchangeConfig,
         raise ValueError(f"lam must be (G, K); got shape {lam.shape}")
     G, K = lam.shape
     known = cfg.known_heterogeneity
+    # threshold / cap come from the REAL worker count; the K bucket below
+    # only adds masked zero-rate columns
     threshold = cfg.threshold_frac * N / K
     cap = (np.inf if cfg.storage_cap_frac is None or known
            else float(np.ceil(cfg.storage_cap_frac * N / K)))
-    lam_rows = np.repeat(lam, int(trials), axis=0)       # (B, K), grid-major
+    lam_rows = np.repeat(_pad_cols(lam, bucket_cols(K)), int(trials),
+                         axis=0)                         # (B, Kb), grid-major
     # pad the batch to a shape bucket (shared _pad_rows policy): jit
     # caches per shape, so fig5/fig6/fig7-sized grids land in a handful
     # of compilations per process instead of one per panel shape
@@ -696,6 +723,8 @@ def work_exchange_grid_jax(lam: np.ndarray, N: int, cfg: ExchangeConfig,
         if sched.ndim != 3 or sched.shape[0] != G or sched.shape[2] != K:
             raise ValueError(f"rate_schedule must be (G={G}, R, K={K}); "
                              f"got shape {sched.shape}")
+        sched = _pad_sched(sched, bucket_rounds(sched.shape[1]),
+                           bucket_cols(K))
         sched_rows = np.repeat(sched, int(trials), axis=0)
         sched_rows = _pad_rows_like(sched_rows, lam_rows.shape[0])
     mesh = active_grid_mesh()
@@ -737,20 +766,94 @@ def work_exchange_grid_jax(lam: np.ndarray, N: int, cfg: ExchangeConfig,
             np.asarray(cm, dtype=np.float64)[:B])
 
 
-def _pad_rows(rows: np.ndarray, bucket: int = 64) -> Tuple[np.ndarray, int]:
-    """Pad the leading axis to a shape bucket with copies of row 0, so
-    jit caches land in a handful of compilations: power-of-two buckets
-    (>= ``bucket``) up to 8192 rows, multiples of 8192 above (pow2 would
-    waste up to 2x the draw work on panel-sized grids)."""
-    R = rows.shape[0]
+def _rows_target(R: int, bucket: int = 64) -> int:
+    """Batch-axis bucket: power-of-two (>= ``bucket``) up to 8192 rows,
+    multiples of 8192 above (pow2 would waste up to 2x the draw work on
+    panel-sized grids)."""
     if R > 8192:
-        target = -(-R // 8192) * 8192
-    else:
-        target = max(bucket, 1 << (R - 1).bit_length())
+        return -(-R // 8192) * 8192
+    return max(bucket, 1 << (R - 1).bit_length())
+
+
+def _shape_buckets_enabled() -> bool:
+    return os.environ.get("REPRO_SHAPE_BUCKETS", "1").lower() not in (
+        "0", "off", "false")
+
+
+def bucket_cols(K: int) -> int:
+    """Worker-axis (K) shape bucket: power-of-two up to 16 workers, then
+    the next multiple of 8.  Padded columns carry ``lambda = 0`` and are
+    fully masked (never busy, never assigned, estimator prior 0), so two
+    panels whose K lands in the same bucket share one compilation -- and
+    one ``REPRO_JAX_CACHE_DIR`` persistent-cache entry -- instead of
+    compiling per shape.  ``REPRO_SHAPE_BUCKETS=0`` disables K/R
+    bucketing (exact shapes, one compile per shape)."""
+    if not _shape_buckets_enabled():
+        return K
+    if K <= 16:
+        return 1 << max(K - 1, 0).bit_length()
+    return -(-K // 8) * 8
+
+
+def bucket_rounds(R: int) -> int:
+    """Drift-schedule round-axis (R) bucket: power-of-two up to 16
+    rounds, then the next multiple of 16.  Padding repeats the last
+    schedule row, which is exactly the engines' round >= R clamp --
+    value-preserving, not just masked."""
+    if not _shape_buckets_enabled():
+        return R
+    if R <= 16:
+        return 1 << max(R - 1, 0).bit_length()
+    return -(-R // 16) * 16
+
+
+def grid_bucket_shape(G: int, trials: int, K: int,
+                      R: Optional[int] = None,
+                      backend: Optional[str] = None) -> Dict[str, int]:
+    """The padded ``(rows, K[, R])`` bucket a ``(G, trials, K[, R])``
+    panel dispatches at -- the compile/persistent-cache key's shape part.
+    Two panels with equal buckets (and equal static config) share one
+    compilation and one ``REPRO_JAX_CACHE_DIR`` entry."""
+    bucket = 128 if resolve_backend(backend) == "pallas" else 64
+    shape = {"rows": _rows_target(G * int(trials), bucket),
+             "K": bucket_cols(K)}
+    if R is not None:
+        shape["R"] = bucket_rounds(R)
+    return shape
+
+
+def _pad_rows(rows: np.ndarray, bucket: int = 64) -> Tuple[np.ndarray, int]:
+    """Pad the leading axis to its ``_rows_target`` bucket with copies of
+    row 0, so jit caches land in a handful of compilations."""
+    R = rows.shape[0]
+    target = _rows_target(R, bucket)
     if target - R:
         rows = np.concatenate([rows, np.repeat(rows[:1], target - R,
                                                axis=0)])
     return rows, R
+
+
+def _pad_cols(rows: np.ndarray, Kb: int) -> np.ndarray:
+    """Zero-pad the trailing worker axis to the ``Kb`` bucket (masked
+    columns: rate 0 means never busy, never assigned)."""
+    K = rows.shape[-1]
+    if Kb > K:
+        rows = np.pad(rows, [(0, 0)] * (rows.ndim - 1) + [(0, Kb - K)])
+    return rows
+
+
+def _pad_sched(sched: np.ndarray, Rb: int, Kb: int) -> np.ndarray:
+    """Bucket-pad a ``(..., R, K)`` rate schedule: zero columns on the
+    worker axis (masked), last-row repeats on the round axis (the
+    round >= R clamp made explicit)."""
+    R, K = sched.shape[-2], sched.shape[-1]
+    if Kb > K:
+        sched = _pad_cols(sched, Kb)
+    if Rb > R:
+        sched = np.concatenate(
+            [sched, np.repeat(sched[..., -1:, :], Rb - R, axis=-2)],
+            axis=-2)
+    return sched
 
 
 def _pad_rows_like(rows: np.ndarray, target: int) -> np.ndarray:
@@ -860,11 +963,17 @@ def work_exchange_grid_pallas(lam: np.ndarray, N: int, cfg: ExchangeConfig,
         raise ValueError(f"lam must be (G, K); got shape {lam.shape}")
     K = lam.shape[1]
     known = cfg.known_heterogeneity
+    # real-K scalars first; the K bucket only adds masked zero columns
+    # (note the Threefry counter namespace is keyed by the padded K, so
+    # bucketed and unbucketed runs are different -- equally valid --
+    # bit streams; kernel/interpret/reference stay mutually bit-identical
+    # at the padded layout)
     threshold = cfg.threshold_frac * N / K
     cap = (np.inf if cfg.storage_cap_frac is None or known
            else float(np.ceil(cfg.storage_cap_frac * N / K)))
     G = lam.shape[0]
-    lam_rows = np.repeat(lam, int(trials), axis=0)       # (B, K), grid-major
+    lam_rows = np.repeat(_pad_cols(lam, bucket_cols(K)), int(trials),
+                         axis=0)                         # (B, Kb), grid-major
     # power-of-two bucket >= 128 (the kernel's tile height): panel-sized
     # grids share a handful of compilations per process, and the bucket
     # is always a whole number of tiles
@@ -875,6 +984,8 @@ def work_exchange_grid_pallas(lam: np.ndarray, N: int, cfg: ExchangeConfig,
         if sched.ndim != 3 or sched.shape[0] != G or sched.shape[2] != K:
             raise ValueError(f"rate_schedule must be (G={G}, R, K={K}); "
                              f"got shape {sched.shape}")
+        sched = _pad_sched(sched, bucket_rounds(sched.shape[1]),
+                           bucket_cols(K))
         sched_rows = _pad_rows_like(np.repeat(sched, int(trials), axis=0),
                                     lam_rows.shape[0])
     mesh = active_grid_mesh()
@@ -907,6 +1018,425 @@ def gamma_rows_pallas(shape_rows: np.ndarray, scale_rows: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# fused whole-panel dispatch: the work-exchange pair in one engine
+# ---------------------------------------------------------------------------
+#
+# A figure's per-scheme loop dispatches the known and the unknown
+# work-exchange engines separately, even though both simulate the same
+# trials at the same rates.  The panel path fuses them:
+#
+# * **coupled common random numbers** -- both schemes' trajectories of one
+#   trial live in ONE state row and share one bit stream per round (one
+#   Gamma normal + tier uniforms + one Binomial normal, transformed at
+#   each scheme's own shapes).  Each scheme's marginal distribution is
+#   exactly the per-scheme engine's; the positive coupling only stabilizes
+#   scheme *differences* (a variance reduction, like the MDS CRN sweep).
+# * **straggler compaction** -- the engine runs in short chunks of rounds
+#   (``REPRO_PANEL_CHUNK``, default 4); between chunks the host drops
+#   finished rows to the next power-of-two bucket, running their final
+#   phase immediately.  Late rounds then cost the few surviving stragglers
+#   instead of the whole batch -- total work tracks the *mean* round
+#   count, the numpy engine's own compaction trick, applied panel-wide.
+#
+# The numbers come from one stream, so panel results differ from (while
+# being statistically equivalent to) the per-scheme dispatches; the
+# cross-backend conformance battery pins both against the numpy oracle.
+
+PANEL_CHUNK_ENV = "REPRO_PANEL_CHUNK"
+
+
+def _panel_chunk() -> int:
+    return max(1, int(os.environ.get(PANEL_CHUNK_ENV, "4")))
+
+
+def _panel_pair_check(cfg_known: ExchangeConfig,
+                      cfg_unknown: ExchangeConfig) -> None:
+    if (not cfg_known.known_heterogeneity
+            or cfg_unknown.known_heterogeneity):
+        raise ValueError("panel fusion takes the (known, unknown) "
+                         "work-exchange config pair, in that order")
+    if (cfg_known.threshold_frac != cfg_unknown.threshold_frac
+            or cfg_known.max_iterations != cfg_unknown.max_iterations):
+        raise ValueError("panel fusion requires the pair to share "
+                         "threshold_frac and max_iterations")
+
+
+_JAX_PANEL: Dict[bool, Dict[str, Callable]] = {}   # drift? -> stage/final
+
+
+def _build_jax_panel(drift: bool = False) -> Dict[str, Callable]:
+    """The coupled pair engine: a resumable ``stage`` (runs rounds up to a
+    traced stop counter, so the host can compact between chunks) and the
+    shared-bits ``final`` phase."""
+    import jax
+    import jax.numpy as jnp
+
+    def pair_gamma(key, a_k, a_u, inv_rate, live_min):
+        """One raw bit draw (a normal + the tier's boost uniforms),
+        transformed through the mean-exact MT formula at BOTH schemes'
+        shapes -- the CRN coupling.  The tier comes from the *joint*
+        smallest live share, which is never above either scheme's own, so
+        each marginal stays exactly the per-scheme engine's relaxation."""
+        kz, ku = jax.random.split(key)
+        z = jax.random.normal(kz, a_k.shape)
+
+        def mt_large_z(alpha):
+            d = alpha - 1.0 / 3.0
+            c = jnp.maximum(1.0 + z / (3.0 * jnp.sqrt(d)), 0.0)
+            return d * c ** 3 * inv_rate
+
+        def boosted_z(alpha, lu):
+            levels = lu.shape[0]
+            boost = alpha < 3.0
+            a = jnp.where(boost, alpha + levels, alpha)
+            inv_shapes = jnp.stack([1.0 / jnp.maximum(alpha + i, 1e-12)
+                                    for i in range(levels)])
+            pow_u = jnp.exp((lu * inv_shapes).sum(0))
+            return mt_large_z(a) * jnp.where(boost, pow_u, 1.0)
+
+        def tier_large():
+            return mt_large_z(a_k), mt_large_z(a_u)
+
+        def tier(levels):
+            def draw():
+                lu = jnp.log(jax.random.uniform(
+                    ku, (levels,) + a_k.shape, minval=1e-12))
+                return boosted_z(a_k, lu), boosted_z(a_u, lu)
+            return draw
+
+        return jax.lax.cond(
+            live_min >= 3.0, tier_large,
+            lambda: jax.lax.cond(live_min >= 1.0, tier(2), tier(3)))
+
+    def _stage(st, lam, sched_chunk, round0, round_stop, threshold, cap_u,
+               max_iter):
+        B, K = lam.shape
+        inv_lam0 = jnp.where(lam > 0.0, 1.0 / lam, 0.0)
+        lam_sum = lam.sum(1)
+        prior = jnp.where(lam > 0.0, 1.0, 0.0)
+        CH = sched_chunk.shape[1] if drift else 1
+
+        def cond(s):
+            return ((s["round"] < round_stop)
+                    & (s["active_k"] | s["active_u"]).any())
+
+        def body(s):
+            key, kg, kb = jax.random.split(s["key"], 3)
+            if drift:
+                # the chunk schedule is host-sliced so row j is global
+                # round round0 + j; all active rows share the scalar trip
+                # counter (iters == round), same argument as the
+                # per-scheme drift engines
+                j = jnp.clip(s["round"] - round0, 0, CH - 1)
+                inv_lam = 1.0 / jax.lax.dynamic_slice_in_dim(
+                    sched_chunk, j, 1, axis=1)[:, 0, :]
+            else:
+                inv_lam = inv_lam0
+            share_k = lam * (s["n_rem_k"] / lam_sum)[:, None]
+            rates_u = s["lam_hat"]
+            share_u = rates_u * (s["n_rem_u"] / rates_u.sum(1))[:, None]
+            assign_u = jnp.minimum(share_u, cap_u)
+            busy_k = share_k > 0.5
+            busy_u = assign_u > 0.5
+            live = lambda a, b, act: jnp.where(       # noqa: E731
+                b & act[:, None], a, jnp.inf)
+            live_min = jnp.minimum(
+                live(share_k, busy_k, s["active_k"]).min(),
+                live(assign_u, busy_u, s["active_u"]).min())
+            t_raw_k, t_raw_u = pair_gamma(
+                kg, jnp.maximum(share_k, 0.5), jnp.maximum(assign_u, 0.5),
+                inv_lam, live_min)
+            z_b = jax.random.normal(kb, (B, K))
+            out = {"key": key, "round": s["round"] + jnp.int32(1)}
+
+            def branch(sfx, assign, busy, t_raw):
+                """One scheme's round update off the shared bits -- the
+                same arithmetic as the per-scheme engine body."""
+                t_k = jnp.where(busy, t_raw, jnp.inf)
+                t_star = t_k.min(1)
+                proceed = s["active_" + sfx] & jnp.isfinite(t_star)
+                fin = t_k == t_star[:, None]
+                p = jnp.clip(t_star[:, None] / t_k, 0.0, 1.0)
+                n = jnp.maximum(assign - 1.0, 0.0)
+                done = jnp.clip(n * p + z_b * jnp.sqrt(
+                    jnp.maximum(n * p * (1.0 - p), 0.0)), 0.0, n)
+                done = jnp.where(fin, assign, jnp.where(busy, done, 0.0))
+                n_rem = s["n_rem_" + sfx] - done.sum(1)
+                started = s["iters_" + sfx] > 0
+                comm = jnp.maximum(assign - s["n_left_" + sfx], 0.0).sum(1)
+                upd = lambda new, old: jnp.where(     # noqa: E731
+                    proceed if new.ndim == 1 else proceed[:, None],
+                    new, old)
+                iters = s["iters_" + sfx] + proceed
+                n_rem_m = upd(n_rem, s["n_rem_" + sfx])
+                out["n_rem_" + sfx] = n_rem_m
+                out["n_left_" + sfx] = upd(assign - done,
+                                           s["n_left_" + sfx])
+                out["t_comp_" + sfx] = upd(s["t_comp_" + sfx] + t_star,
+                                           s["t_comp_" + sfx])
+                out["n_comm_" + sfx] = upd(
+                    s["n_comm_" + sfx] + jnp.where(started, comm, 0.0),
+                    s["n_comm_" + sfx])
+                out["iters_" + sfx] = iters
+                out["active_" + sfx] = (proceed & (n_rem_m > threshold)
+                                        & (iters < max_iter))
+                return done, t_star, upd
+
+            branch("k", share_k, busy_k, t_raw_k)
+            done_u, t_star_u, upd_u = branch("u", assign_u, busy_u,
+                                             t_raw_u)
+            ed = s["est_done"] + done_u
+            et = s["est_time"] + t_star_u
+            out["est_done"] = ed
+            out["est_time"] = et
+            out["lam_hat"] = upd_u(
+                jnp.where(ed > 0.0, ed / jnp.maximum(et, 1e-30)[:, None],
+                          prior),
+                s["lam_hat"])
+            return out
+
+        return jax.lax.while_loop(cond, body, st)
+
+    def _final(key, lam, inv_k, inv_u, st):
+        """Both final phases off one shared raw draw (z + 3 boost
+        uniforms, the full 3-chain as in the per-scheme final)."""
+        kz, ku = jax.random.split(key)
+        z = jax.random.normal(kz, lam.shape)
+        lu = jnp.log(jax.random.uniform(ku, (3,) + lam.shape,
+                                        minval=1e-12))
+
+        def g(alpha, inv_rate):
+            boost = alpha < 3.0
+            a = jnp.where(boost, alpha + 3.0, alpha)
+            d = a - 1.0 / 3.0
+            c = jnp.maximum(1.0 + z / (3.0 * jnp.sqrt(d)), 0.0)
+            inv_shapes = jnp.stack([1.0 / jnp.maximum(alpha + i, 1e-12)
+                                    for i in range(3)])
+            pow_u = jnp.exp((lu * inv_shapes).sum(0))
+            return d * c ** 3 * inv_rate * jnp.where(boost, pow_u, 1.0)
+
+        def fin(sfx, rates, inv_lam):
+            has_rem = st["n_rem_" + sfx] > 1e-6
+            share = rates * (st["n_rem_" + sfx]
+                             / rates.sum(1))[:, None]
+            comm = jnp.maximum(share - st["n_left_" + sfx], 0.0).sum(1)
+            t_k = jnp.where(share > 1e-9,
+                            g(jnp.maximum(share, 1e-9), inv_lam), 0.0)
+            t_comp = st["t_comp_" + sfx] + jnp.where(has_rem, t_k.max(1),
+                                                     0.0)
+            n_comm = st["n_comm_" + sfx] + jnp.where(
+                has_rem & (st["iters_" + sfx] > 0), comm, 0.0)
+            iters = st["iters_" + sfx] + has_rem
+            return t_comp, iters.astype(jnp.float32), n_comm
+
+        return fin("k", lam, inv_k) + fin("u", st["lam_hat"], inv_u)
+
+    if drift:
+        stage = jax.jit(_stage)
+    else:
+        stage = jax.jit(
+            lambda st, lam, round_stop, threshold, cap_u, max_iter:
+            _stage(st, lam, None, 0, round_stop, threshold, cap_u,
+                   max_iter))
+    return {"stage": stage, "final": jax.jit(_final)}
+
+
+def _get_jax_panel(drift: bool = False) -> Dict[str, Callable]:
+    if drift not in _JAX_PANEL:
+        _JAX_PANEL[drift] = _build_jax_panel(drift)
+    return _JAX_PANEL[drift]
+
+
+def work_exchange_panel_jax(lam: np.ndarray, N: int,
+                            cfg_known: ExchangeConfig,
+                            cfg_unknown: ExchangeConfig,
+                            trials: int, rng: np.random.Generator,
+                            rate_schedule: Optional[np.ndarray] = None
+                            ) -> Dict[str, GridArrays]:
+    """The work-exchange pair over a whole ``(G, K)`` panel in one fused
+    engine (coupled CRN rounds + host-side straggler compaction; see the
+    section comment).  Returns ``{"known": (t, it, cm), "unknown": ...}``
+    in the usual grid-major layout."""
+    import jax
+    import jax.numpy as jnp
+
+    _panel_pair_check(cfg_known, cfg_unknown)
+    lam = np.asarray(lam, dtype=np.float32)
+    if lam.ndim != 2:
+        raise ValueError(f"lam must be (G, K); got shape {lam.shape}")
+    G, K = lam.shape
+    N = float(N)
+    threshold = cfg_known.threshold_frac * N / K
+    cap_u = (np.inf if cfg_unknown.storage_cap_frac is None
+             else float(np.ceil(cfg_unknown.storage_cap_frac * N / K)))
+    max_iter = int(cfg_known.max_iterations)
+    lam_rows = np.repeat(_pad_cols(lam, bucket_cols(K)), int(trials),
+                         axis=0)
+    lam_rows, B = _pad_rows(lam_rows)
+    Bp, Kb = lam_rows.shape
+    drift = rate_schedule is not None
+    sched_np = R = None
+    if drift:
+        sched = np.asarray(rate_schedule, dtype=np.float32)
+        if sched.ndim != 3 or sched.shape[0] != G or sched.shape[2] != K:
+            raise ValueError(f"rate_schedule must be (G={G}, R, K={K}); "
+                             f"got shape {sched.shape}")
+        sched = _pad_sched(sched, bucket_rounds(sched.shape[1]),
+                           bucket_cols(K))
+        sched_np = _pad_rows_like(np.repeat(sched, int(trials), axis=0),
+                                  Bp)
+        R = sched_np.shape[1]
+    fns = _get_jax_panel(drift)
+    stage, final = fns["stage"], fns["final"]
+    key = jax.random.key(int(rng.integers(2 ** 63 - 1)), impl="rbg")
+    key, kfin = jax.random.split(key)
+    st = {"key": key, "round": jnp.int32(0),
+          "est_done": jnp.zeros((Bp, Kb), jnp.float32),
+          "est_time": jnp.zeros(Bp, jnp.float32),
+          "lam_hat": jnp.asarray((lam_rows > 0).astype(np.float32))}
+    for sfx in ("k", "u"):
+        st["n_rem_" + sfx] = jnp.full(Bp, N, jnp.float32)
+        st["n_left_" + sfx] = jnp.zeros((Bp, Kb), jnp.float32)
+        st["t_comp_" + sfx] = jnp.zeros(Bp, jnp.float32)
+        st["n_comm_" + sfx] = jnp.zeros(Bp, jnp.float32)
+        st["iters_" + sfx] = jnp.zeros(Bp, jnp.int32)
+        st["active_" + sfx] = jnp.full(Bp, N > threshold)
+    # idx maps current state rows to original panel rows (-1: dead
+    # compaction padding, never finalized); out collects scattered final
+    # results as rows drop out
+    idx = np.concatenate([np.arange(B), np.full(Bp - B, -1)])
+    out = np.zeros((Bp, 6))
+    lam_cur = lam_rows
+    sched_cur = sched_np
+    lam_dev = jnp.asarray(lam_rows)
+    chunk = _panel_chunk()
+    ncall = [0]
+    skip = ("key", "round", "est_done", "est_time")
+
+    def finalize(sub, cur_st, cur_idx, cur_lam):
+        """Final-phase the given current-state rows; scatter to out."""
+        sub = sub[cur_idx[sub] >= 0]
+        if sub.size == 0:
+            return
+        n = sub.size
+        tgt = _rows_target(n)
+        gather = np.concatenate([sub, np.repeat(sub[:1], tgt - n)])
+        gidx = jnp.asarray(gather)
+        st_sub = {kk: vv[gidx] for kk, vv in cur_st.items()
+                  if kk not in skip}
+        orig = cur_idx[gather]
+        lam_sub = cur_lam[gather]
+        if drift:
+            it_k = np.asarray(cur_st["iters_k"])[gather]
+            it_u = np.asarray(cur_st["iters_u"])[gather]
+            rk = sched_np[orig, np.minimum(it_k, R - 1)]
+            ru = sched_np[orig, np.minimum(it_u, R - 1)]
+        else:
+            rk = ru = lam_sub
+        inv_k = np.where(rk > 0, 1.0 / np.maximum(rk, 1e-30),
+                         0.0).astype(np.float32)
+        inv_u = np.where(ru > 0, 1.0 / np.maximum(ru, 1e-30),
+                         0.0).astype(np.float32)
+        res = final(jax.random.fold_in(kfin, ncall[0]),
+                    jnp.asarray(lam_sub), jnp.asarray(inv_k),
+                    jnp.asarray(inv_u), st_sub)
+        ncall[0] += 1
+        rows = cur_idx[sub]
+        for j, arr in enumerate(res):
+            out[rows, j] = np.asarray(arr)[:n]
+
+    r0 = 0
+    while True:
+        r1 = min(r0 + chunk, max_iter)
+        if drift:
+            cols = np.minimum(np.arange(r0, r1), R - 1)
+            st = stage(st, lam_dev,
+                       jnp.asarray(sched_cur[:, cols, :]),
+                       jnp.int32(r0), jnp.int32(r1), threshold, cap_u,
+                       max_iter)
+        else:
+            st = stage(st, lam_dev, jnp.int32(r1), threshold, cap_u,
+                       max_iter)
+        r0 = r1
+        act = np.asarray(st["active_k"] | st["active_u"])
+        live = np.flatnonzero(act & (idx >= 0))
+        if live.size == 0 or r0 >= max_iter:
+            finalize(np.flatnonzero(idx >= 0), st, idx, lam_cur)
+            break
+        tgt = max(_rows_target(live.size), 256)
+        if tgt < idx.size:
+            # compact: final-phase the frozen rows now, gather the rest
+            # into the next bucket (padding gets active forced off and
+            # idx -1, so it is never finalized)
+            finalize(np.flatnonzero(~act & (idx >= 0)), st, idx, lam_cur)
+            gather = np.concatenate(
+                [live, np.repeat(live[:1], tgt - live.size)])
+            gidx = jnp.asarray(gather)
+            valid = jnp.arange(tgt) < live.size
+            st = {kk: (vv if kk in ("key", "round") else vv[gidx])
+                  for kk, vv in st.items()}
+            st["active_k"] = st["active_k"] & valid
+            st["active_u"] = st["active_u"] & valid
+            idx = np.where(np.asarray(valid), idx[gather], -1)
+            lam_cur = lam_cur[gather]
+            lam_dev = jnp.asarray(lam_cur)
+            if drift:
+                sched_cur = sched_cur[gather]
+    known = tuple(out[:B, j].astype(np.float64) for j in range(3))
+    unknown = tuple(out[:B, j].astype(np.float64) for j in range(3, 6))
+    return {"known": known, "unknown": unknown}
+
+
+def work_exchange_panel_pallas(lam: np.ndarray, N: int,
+                               cfg_known: ExchangeConfig,
+                               cfg_unknown: ExchangeConfig,
+                               trials: int, rng: np.random.Generator,
+                               rate_schedule: Optional[np.ndarray] = None
+                               ) -> Dict[str, GridArrays]:
+    """The pair as ONE ``we_rounds`` launch: known rows stacked on top of
+    unknown rows with a per-row flag column, so the whole figure is a
+    single tiled kernel pass (single-device; the panel path does not
+    shard)."""
+    from repro.kernels.we_rounds import we_rounds_grid
+
+    _panel_pair_check(cfg_known, cfg_unknown)
+    lam = np.asarray(lam, dtype=np.float32)
+    if lam.ndim != 2:
+        raise ValueError(f"lam must be (G, K); got shape {lam.shape}")
+    G, K = lam.shape
+    threshold = cfg_known.threshold_frac * N / K
+    cap_u = (np.inf if cfg_unknown.storage_cap_frac is None
+             else float(np.ceil(cfg_unknown.storage_cap_frac * N / K)))
+    half = np.repeat(_pad_cols(lam, bucket_cols(K)), int(trials), axis=0)
+    B = half.shape[0]
+    stacked = np.concatenate([half, half])
+    flags = np.concatenate([np.ones(B, np.float32),
+                            np.zeros(B, np.float32)])
+    stacked, _ = _pad_rows(stacked, bucket=128)
+    flags = np.concatenate(
+        [flags, np.ones(stacked.shape[0] - 2 * B, np.float32)])
+    sched_rows = None
+    if rate_schedule is not None:
+        sched = np.asarray(rate_schedule, dtype=np.float32)
+        if sched.ndim != 3 or sched.shape[0] != G or sched.shape[2] != K:
+            raise ValueError(f"rate_schedule must be (G={G}, R, K={K}); "
+                             f"got shape {sched.shape}")
+        sched = _pad_sched(sched, bucket_rounds(sched.shape[1]),
+                           bucket_cols(K))
+        sched_half = np.repeat(sched, int(trials), axis=0)
+        sched_rows = _pad_rows_like(
+            np.concatenate([sched_half, sched_half]), stacked.shape[0])
+    seed = rng.integers(0, 2 ** 32, size=2, dtype=np.uint32)
+    t, it, cm = we_rounds_grid(stacked, seed, n0=float(N),
+                               threshold=float(threshold), cap=cap_u,
+                               known=flags,
+                               max_iter=int(cfg_known.max_iterations),
+                               rate_schedule=sched_rows)
+    return {"known": (t[:B], it[:B], cm[:B]),
+            "unknown": (t[B:2 * B], it[B:2 * B], cm[B:2 * B])}
+
+
+# ---------------------------------------------------------------------------
 # registration
 # ---------------------------------------------------------------------------
 
@@ -924,7 +1454,8 @@ register_backend(SamplerBackend(
                 "+ normal-limit binomial, float32); statistically "
                 "equivalent, not bit-identical",
     gamma_rows=gamma_rows_jax,
-    coupled_mds_sweep=True),
+    coupled_mds_sweep=True,
+    work_exchange_panel=work_exchange_panel_jax),
     available=_jax_available)
 
 register_backend(SamplerBackend(
@@ -935,7 +1466,8 @@ register_backend(SamplerBackend(
                 "tiled pass); compiled on TPU, bit-identical jnp "
                 "reference / interpreted kernel on CPU",
     gamma_rows=gamma_rows_pallas,
-    coupled_mds_sweep=True),
+    coupled_mds_sweep=True,
+    work_exchange_panel=work_exchange_panel_pallas),
     available=_jax_available)
 
 
@@ -946,5 +1478,6 @@ __all__ = [
     "grid_sharding", "active_grid_mesh",
     "work_exchange_grid_numpy", "work_exchange_grid_jax",
     "work_exchange_grid_pallas", "gamma_rows_numpy", "gamma_rows_jax",
-    "gamma_rows_pallas",
+    "gamma_rows_pallas", "work_exchange_panel_jax",
+    "work_exchange_panel_pallas",
 ]

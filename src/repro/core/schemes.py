@@ -422,12 +422,14 @@ def work_exchange_mc_batched(het: HetSpec, N: int, cfg: ExchangeConfig,
 
 
 def _grid_reports(scheme_name: str, specs: Sequence[HetSpec], trials: int,
-                  arrays, keep_trials: bool, backend_name: str
+                  arrays, keep_trials: bool, backend_name: str,
+                  extra: Optional[Dict[str, float]] = None
                   ) -> List[MCReport]:
     """Slice flat grid-major engine output back into per-spec reports."""
     ts, its, cs = (np.asarray(a).reshape(len(specs), trials) for a in arrays)
+    base = {"backend": backend_name, **(extra or {})}
     return [_report(scheme_name, ts[g], its[g], cs[g], keep_trials,
-                    extra={"backend": backend_name})
+                    extra=dict(base))
             for g in range(len(specs))]
 
 
@@ -925,6 +927,102 @@ class WorkExchangeUnknownScheme(_WorkExchangeBase):
 
 
 # ---------------------------------------------------------------------------
+# fused whole-panel dispatch
+# ---------------------------------------------------------------------------
+
+def _panel_pair(schemes: Dict[str, Scheme]) -> Optional[Tuple[str, str]]:
+    """The fusable known/unknown work-exchange pair of a panel, or None.
+
+    Fusable means: exactly the canonical pairing -- one known and one
+    unknown ``_WorkExchangeBase`` (first of each wins), both on the
+    vectorized engine with the paper's ``carry`` capped mode, sharing
+    ``threshold_frac`` and ``max_iterations`` (the panel engine runs one
+    round loop for both trajectories, so per-scheme values cannot
+    differ).  Anything else -> None, and the caller falls back to
+    per-scheme dispatch for every entry.
+    """
+    known_key = unknown_key = None
+    for key, sch in schemes.items():
+        if (not isinstance(sch, _WorkExchangeBase)
+                or sch.engine != "vectorized"
+                or sch.capped_mode != "carry"):
+            continue
+        if sch.known and known_key is None:
+            known_key = key
+        elif not sch.known and unknown_key is None:
+            unknown_key = key
+    if known_key is None or unknown_key is None:
+        return None
+    k, u = schemes[known_key], schemes[unknown_key]
+    if (k.threshold_frac != u.threshold_frac
+            or k.max_iterations != u.max_iterations):
+        return None
+    return known_key, unknown_key
+
+
+def mc_grid_panel(schemes: Dict[str, Scheme], het_specs: Sequence[HetSpec],
+                  N: int, trials: int, rng, keep_trials: bool = False,
+                  backend: Optional[str] = None,
+                  rate_schedule: Optional[np.ndarray] = None
+                  ) -> Dict[str, List[MCReport]]:
+    """A whole figure panel -- ordered ``report_key -> Scheme`` -- over the
+    scenario grid, with the work-exchange known/unknown pair fused into
+    ONE engine dispatch when the backend has a ``work_exchange_panel``
+    executor (jax: the coupled common-random-numbers engine; pallas: one
+    stacked kernel launch).  Everything else runs its own ``mc_grid``.
+
+    ``rng`` is either one Generator (each scheme gets a child stream
+    derived in input order) or a ``key -> Generator`` mapping (the
+    executor's per-task seeds).  With a mapping, non-fused schemes draw
+    from exactly the stream per-scheme dispatch would hand them, so their
+    reports are bit-identical to ``panel="per_scheme"``; only the fused
+    pair's numbers move (one shared CRN stream -- statistically
+    equivalent, not bit-equal, to two independent dispatches).  Fused
+    reports carry ``extra["fused_panel"] = 1``.
+    """
+    specs = list(het_specs)
+    name = resolve_backend(backend)
+    panel_fn = get_backend(name).work_exchange_panel
+    if isinstance(rng, dict):
+        child = dict(rng)
+        missing = [k for k in schemes if k not in child]
+        if missing:
+            raise ValueError(f"rng mapping is missing streams for {missing}")
+    else:
+        child = {key: np.random.default_rng(rng.integers(0, 2**63))
+                 for key in schemes}
+    pair = (_panel_pair(schemes)
+            if panel_fn is not None and specs
+            and len({h.K for h in specs}) == 1 else None)
+    fused: Dict[str, List[MCReport]] = {}
+    if pair is not None:
+        kk, uk = pair
+        lam = np.stack([h.lambdas for h in specs])
+        kwargs = {}
+        if rate_schedule is not None:
+            kwargs["rate_schedule"] = np.asarray(rate_schedule,
+                                                 dtype=np.float64)
+        res = panel_fn(lam, N, schemes[kk].config(), schemes[uk].config(),
+                       int(trials), child[kk], **kwargs)
+        for key, slot in ((kk, "known"), (uk, "unknown")):
+            fused[key] = _grid_reports(schemes[key].name, specs,
+                                       int(trials), res[slot], keep_trials,
+                                       name, extra={"fused_panel": 1})
+    out: Dict[str, List[MCReport]] = {}
+    for key, sch in schemes.items():
+        if key in fused:
+            out[key] = fused[key]
+            continue
+        kwargs = {}
+        if rate_schedule is not None and sch.supports_rate_schedule:
+            kwargs["rate_schedule"] = rate_schedule
+        out[key] = sch.mc_grid(specs, N, int(trials), child[key],
+                               keep_trials=keep_trials, backend=name,
+                               **kwargs)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # beyond-paper scenario schemes
 # ---------------------------------------------------------------------------
 
@@ -1241,8 +1339,8 @@ class HedgedScheme(Scheme):
 __all__ = [
     "MCReport", "Scheme", "SCHEME_REGISTRY", "register_scheme", "get_scheme",
     "list_schemes", "simulate_work_exchange_scalar",
-    "work_exchange_mc_batched", "mds_sweep", "mds_sweep_batched",
-    "mds_time_samples",
+    "work_exchange_mc_batched", "mc_grid_panel", "mds_sweep",
+    "mds_sweep_batched", "mds_time_samples",
     "OracleScheme", "FixedScheme", "UniformScheme", "MDSScheme",
     "WorkExchangeScheme", "WorkExchangeUnknownScheme", "HetMDSScheme",
     "TraceReplayScheme", "GradientCodedScheme", "HedgedScheme",

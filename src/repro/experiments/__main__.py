@@ -179,6 +179,12 @@ def show(result: ExperimentResult, store: ResultsStore) -> None:
                 # serving rows: the latency surface, not batch T_comp
                 slo = (f" slo_miss={rep.extra['slo_miss_rate']:.3f}"
                        if "slo_miss_rate" in rep.extra else "")
+                if rep.extra.get("latency_censored"):
+                    # zero completions: percentiles are horizon bounds
+                    slo += "  [CENSORED: latency >= horizon]"
+                elif rep.extra.get("censored_frac"):
+                    slo += (f"  [censored_frac="
+                            f"{rep.extra['censored_frac']:.2f}]")
                 print(f"  {key:24s} pt {rep.extra.get('grid_point', 0):g} "
                       f"load {rep.extra['offered_load']:g}: "
                       f"sojourn={rep.t_comp:8.4f} "
@@ -334,11 +340,15 @@ def cmd_compare(argv) -> int:
             if ra.extra.get("serving") and rb.extra.get("serving"):
                 # serving rows carry a latency surface: surface the
                 # percentile / SLO deltas instead of dropping them
+                cens = ("" if not (ra.extra.get("latency_censored")
+                                   or rb.extra.get("latency_censored"))
+                        else "  [censored: horizon bound, not measured]")
                 for field in ("p50", "p99", "slo_miss_rate"):
                     if field in ra.extra and field in rb.extra:
                         va, vb = ra.extra[field], rb.extra[field]
                         print(f"    {field:>22s} {va:12.4f} {vb:12.4f}"
-                              f" {vb - va:+12.4f}")
+                              f" {vb - va:+12.4f}{cens}")
+                        cens = ""
         if len(rows_a) != len(rows_b):
             print(f"  {key:24s} (grids differ: {len(rows_a)} vs "
                   f"{len(rows_b)} points; compared the overlap)")

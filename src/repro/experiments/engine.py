@@ -28,7 +28,7 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from repro.core.samplers import grid_sharding
-from repro.core.schemes import MCReport, get_scheme
+from repro.core.schemes import MCReport, get_scheme, mc_grid_panel
 
 from .plan import Plan, compile_plan
 from .spec import ExperimentSpec
@@ -160,6 +160,24 @@ def execute_plan(plan: Plan) -> ExperimentResult:
                                 reports=reports, env=_environment(plan),
                                 wall_s=time.perf_counter() - t0)
     reports: Dict[str, List[MCReport]] = {}
+    if spec.panel == "fused":
+        # fused whole-panel dispatch: the WE known/unknown pair becomes
+        # ONE engine call; every other task keeps its own per-task
+        # stream (the rng mapping), bit-identical to per_scheme
+        schemes = {t.key: get_scheme(t.scheme, **t.params_dict)
+                   for t in plan.tasks}
+        rngs = {t.key: np.random.default_rng(t.seed) for t in plan.tasks}
+        reports = mc_grid_panel(schemes, plan.het_specs, spec.N,
+                                spec.trials, rngs, backend=plan.backend,
+                                rate_schedule=plan.rate_schedules)
+        if plan.rate_schedules is not None:
+            for key, sch in schemes.items():
+                if not sch.supports_rate_schedule:
+                    for rep in reports[key]:
+                        rep.extra["nominal_rates_only"] = 1
+        return ExperimentResult(spec=spec, spec_hash=plan.spec_hash,
+                                reports=reports, env=_environment(plan),
+                                wall_s=time.perf_counter() - t0)
     shard = (grid_sharding(plan.devices) if plan.devices > 1
              else contextlib.nullcontext())
     with shard:

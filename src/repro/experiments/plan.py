@@ -26,7 +26,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.schemes import get_scheme
-from repro.core.samplers import resolve_backend
+from repro.core.samplers import grid_bucket_shape, resolve_backend
 from repro.core.types import HetSpec
 
 from .spec import ExperimentSpec
@@ -77,6 +77,21 @@ class Plan:
     def devices(self) -> int:
         return int(self.spec.devices)
 
+    @property
+    def bucket_shape(self) -> Optional[Dict[str, int]]:
+        """The padded ``(rows, K[, R])`` shape bucket this plan's panel
+        dispatches at on a transform backend (None on the exact numpy
+        oracle, which never pads).  Plans with equal buckets share one
+        compilation -- and one ``REPRO_JAX_CACHE_DIR`` persistent-cache
+        entry -- regardless of their raw ``(G, trials, K, R)``."""
+        if self.backend not in SHARDED_BACKENDS or not self.het_specs:
+            return None
+        R = (None if self.rate_schedules is None
+             else int(self.rate_schedules.shape[1]))
+        return grid_bucket_shape(len(self.het_specs), self.spec.trials,
+                                 self.het_specs[0].K, R,
+                                 backend=self.backend)
+
 
 def _resolve_devices(requested, backend: str) -> int:
     if backend not in SHARDED_BACKENDS:
@@ -105,6 +120,10 @@ def compile_plan(spec: ExperimentSpec) -> Plan:
         # does not apply, and the transport must exist at compile time
         devices = 1
         spec.live.build_transport()
+    if spec.panel == "fused":
+        # the fused-panel executors run single-device (the mixed-mode
+        # launch does not shard; see we_rounds_grid)
+        devices = 1
     tasks = []
     for s in spec.schemes:
         scheme = get_scheme(s.scheme, **s.params_dict)  # fail fast

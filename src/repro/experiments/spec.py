@@ -163,6 +163,17 @@ class ExperimentSpec:
     keys are omitted from serialization at their defaults -- "mc" and
     ``None`` -- so every pre-live spec hash and store address is
     unchanged.
+
+    ``panel="fused"`` runs the batch-MC tasks through the fused
+    whole-panel dispatcher (``repro.core.schemes.mc_grid_panel``): the
+    work-exchange known/unknown pair of the panel becomes ONE engine
+    call on backends with a panel executor (jax / pallas), every other
+    task keeps its own per-task stream and stays bit-identical to
+    ``"per_scheme"``.  The fused pair's numbers are statistically
+    equivalent but not bit-equal (one shared stream), which is why the
+    mode is opt-in.  The key is omitted from serialization at the
+    ``"per_scheme"`` default, so every pre-panel spec hash and store
+    address is unchanged.
     """
 
     name: str
@@ -176,6 +187,7 @@ class ExperimentSpec:
     serving: Optional[ServingConfig] = None
     execution: str = "mc"
     live: Optional[LiveConfig] = None
+    panel: str = "per_scheme"
     version: int = SPEC_VERSION
 
     def __post_init__(self):
@@ -201,6 +213,13 @@ class ExperimentSpec:
                 object.__setattr__(self, "live", LiveConfig())
         elif self.live is not None:
             raise ValueError("live= requires execution='live'")
+        if self.panel not in ("per_scheme", "fused"):
+            raise ValueError(f"panel must be 'per_scheme' or 'fused'; "
+                             f"got {self.panel!r}")
+        if self.panel == "fused" and (self.serving is not None
+                                      or self.execution != "mc"):
+            raise ValueError("panel='fused' applies to batch MC only; "
+                             "drop serving= / execution='live'")
         object.__setattr__(self, "schemes", tuple(self.schemes))
         if not self.schemes:
             raise ValueError("ExperimentSpec needs at least one scheme")
@@ -236,6 +255,9 @@ class ExperimentSpec:
             # both live keys omitted at defaults: pre-live hashes survive
             d["execution"] = self.execution
             d["live"] = self.live.to_dict()
+        if self.panel != "per_scheme":
+            # key omitted at the default: pre-panel hashes survive
+            d["panel"] = self.panel
         return d
 
     @classmethod
@@ -253,6 +275,7 @@ class ExperimentSpec:
                    execution=d.get("execution", "mc"),
                    live=(None if live is None
                          else LiveConfig.from_dict(live)),
+                   panel=d.get("panel", "per_scheme"),
                    version=int(d.get("version", SPEC_VERSION)))
 
     def to_json(self, indent: Optional[int] = 2) -> str:

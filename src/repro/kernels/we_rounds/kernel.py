@@ -30,28 +30,58 @@ DEFAULT_BLOCK_B = 128
 def _we_rounds_kernel(seed_ref, lam_ref, out_ref, *, K: int, block_b: int,
                       n0: float, threshold: float, cap: float, known: bool,
                       max_iter: int):
-    _we_rounds_body(seed_ref, lam_ref, None, out_ref, K=K, block_b=block_b,
-                    n0=n0, threshold=threshold, cap=cap, known=known,
-                    max_iter=max_iter)
+    _we_rounds_body(seed_ref, lam_ref, None, None, out_ref, K=K,
+                    block_b=block_b, n0=n0, threshold=threshold, cap=cap,
+                    known=known, max_iter=max_iter)
 
 
 def _we_rounds_drift_kernel(seed_ref, lam_ref, sched_ref, out_ref, *,
                             K: int, block_b: int, n0: float,
                             threshold: float, cap: float, known: bool,
                             max_iter: int):
-    _we_rounds_body(seed_ref, lam_ref, sched_ref, out_ref, K=K,
+    _we_rounds_body(seed_ref, lam_ref, sched_ref, None, out_ref, K=K,
                     block_b=block_b, n0=n0, threshold=threshold, cap=cap,
                     known=known, max_iter=max_iter)
 
 
-def _we_rounds_body(seed_ref, lam_ref, sched_ref, out_ref, *, K: int,
-                    block_b: int, n0: float, threshold: float, cap: float,
-                    known: bool, max_iter: int):
+def _we_rounds_panel_kernel(seed_ref, lam_ref, flags_ref, out_ref, *,
+                            K: int, block_b: int, n0: float,
+                            threshold: float, cap: float, known: bool,
+                            max_iter: int):
+    _we_rounds_body(seed_ref, lam_ref, None, flags_ref, out_ref, K=K,
+                    block_b=block_b, n0=n0, threshold=threshold, cap=cap,
+                    known=known, max_iter=max_iter)
+
+
+def _we_rounds_panel_drift_kernel(seed_ref, lam_ref, sched_ref, flags_ref,
+                                  out_ref, *, K: int, block_b: int,
+                                  n0: float, threshold: float, cap: float,
+                                  known: bool, max_iter: int):
+    _we_rounds_body(seed_ref, lam_ref, sched_ref, flags_ref, out_ref, K=K,
+                    block_b=block_b, n0=n0, threshold=threshold, cap=cap,
+                    known=known, max_iter=max_iter)
+
+
+def _we_rounds_body(seed_ref, lam_ref, sched_ref, flags_ref, out_ref, *,
+                    K: int, block_b: int, n0: float, threshold: float,
+                    cap: float, known: bool, max_iter: int):
     k0 = seed_ref[0, 0]
     k1 = seed_ref[0, 1]
     lam = lam_ref[...]
     inv_lam = 1.0 / lam
-    sched = None if sched_ref is None else sched_ref[...]
+    # fused-panel mixed mode: per-row known flag, estimator state for all
+    known_col = None if flags_ref is None else flags_ref[...] > 0
+    if sched_ref is None:
+        sched_at = None
+    else:
+        R = sched_ref.shape[1]
+
+        def sched_at(rnd):
+            # direct round-indexed row load from the (block_b, R, K)
+            # schedule tile: one dynamic slice per trip instead of the
+            # old O(block_b * R * K) one-hot masked sum
+            r = jnp.minimum(rnd, R - 1)
+            return sched_ref[:, pl.ds(r, 1), :][:, 0, :]
     base = pl.program_id(0) * block_b
     row_ids = base + jax.lax.broadcasted_iota(jnp.int32, (block_b, 1), 0)
 
@@ -61,17 +91,22 @@ def _we_rounds_body(seed_ref, lam_ref, sched_ref, out_ref, *, K: int,
     def body(st):
         return ref.round_body(st, lam, inv_lam, row_ids, k0, k1, K=K,
                               cap=cap, threshold=threshold, known=known,
-                              max_iter=max_iter, sched=sched)
+                              max_iter=max_iter, sched_at=sched_at,
+                              known_col=known_col)
 
     st = jax.lax.while_loop(
-        cond, body, ref.init_state(block_b, K, n0, threshold, known))
+        cond, body, ref.init_state(block_b, K, n0, threshold, known,
+                                   lam=lam, with_round=sched_ref is not None))
+    sched = None if sched_ref is None else sched_ref[...]
     t, it, cm = ref.final_phase(st, lam, inv_lam, row_ids, k0, k1, K=K,
-                                known=known, max_iter=max_iter, sched=sched)
+                                known=known, max_iter=max_iter, sched=sched,
+                                known_col=known_col)
     out_ref[...] = jnp.stack([t, it, cm], axis=1)
 
 
 def we_rounds_pallas(lam_rows: jnp.ndarray, seed: jnp.ndarray,
-                     sched_rows: jnp.ndarray = None, *,
+                     sched_rows: jnp.ndarray = None,
+                     known_flags: jnp.ndarray = None, *,
                      n0: float, threshold: float, cap: float, known: bool,
                      max_iter: int, block_b: int = DEFAULT_BLOCK_B,
                      interpret: bool = False) -> jnp.ndarray:
@@ -83,32 +118,36 @@ def we_rounds_pallas(lam_rows: jnp.ndarray, seed: jnp.ndarray,
     by every tile.  ``sched_rows`` (optional ``(B, R, K)``) adds the
     drifting-scenario per-round rate schedule as a third input: each
     program carries its tile's ``(block_b, R, K)`` schedule in VMEM and
-    reads the current round's rates with a one-hot masked sum (counters
-    are untouched, so drift runs stay bit-identical to the reference).
+    reads the current round's rates with one ``pl.ds`` dynamic slice on
+    the trip counter (counters are untouched, so drift runs stay
+    bit-identical to the reference).  ``known_flags`` (optional ``(B, 1)``
+    float32, nonzero = known) is the fused-panel mixed mode: known and
+    unknown rows of a whole figure share ONE launch, each row reading its
+    own flag (``known`` is then ignored; pass ``known=False``).
     """
     B, K = lam_rows.shape
     assert B % block_b == 0, f"pad B={B} to a multiple of {block_b}"
-    if sched_rows is None:
-        kernel = functools.partial(_we_rounds_kernel, K=K, block_b=block_b,
-                                   n0=n0, threshold=threshold, cap=cap,
-                                   known=known, max_iter=max_iter)
-        in_specs = [
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
-            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
-        ]
-        args = (seed, lam_rows)
-    else:
+    kern_fn = {
+        (False, False): _we_rounds_kernel,
+        (True, False): _we_rounds_drift_kernel,
+        (False, True): _we_rounds_panel_kernel,
+        (True, True): _we_rounds_panel_drift_kernel,
+    }[(sched_rows is not None, known_flags is not None)]
+    kernel = functools.partial(kern_fn, K=K, block_b=block_b, n0=n0,
+                               threshold=threshold, cap=cap, known=known,
+                               max_iter=max_iter)
+    in_specs = [
+        pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+    ]
+    args = (seed, lam_rows)
+    if sched_rows is not None:
         R = sched_rows.shape[1]
-        kernel = functools.partial(_we_rounds_drift_kernel, K=K,
-                                   block_b=block_b, n0=n0,
-                                   threshold=threshold, cap=cap,
-                                   known=known, max_iter=max_iter)
-        in_specs = [
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
-            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
-            pl.BlockSpec((block_b, R, K), lambda i: (i, 0, 0)),
-        ]
-        args = (seed, lam_rows, sched_rows)
+        in_specs.append(pl.BlockSpec((block_b, R, K), lambda i: (i, 0, 0)))
+        args += (sched_rows,)
+    if known_flags is not None:
+        in_specs.append(pl.BlockSpec((block_b, 1), lambda i: (i, 0)))
+        args += (known_flags,)
     return pl.pallas_call(
         kernel,
         grid=(B // block_b,),

@@ -26,7 +26,8 @@ from typing import Optional, Tuple
 import numpy as np
 
 from .kernel import DEFAULT_BLOCK_B, we_rounds_pallas
-from .ref import gamma_rows_reference, we_rounds_reference
+from .ref import (gamma_rows_reference, we_rounds_reference,
+                  we_rounds_reference_panel)
 
 ENV_MODE = "REPRO_WE_ROUNDS_MODE"
 MODES = ("auto", "kernel", "interpret", "reference")
@@ -67,6 +68,29 @@ def _jit_kernel(n0: float, threshold: float, cap: float, known: bool,
                                      threshold=threshold, cap=cap,
                                      known=known, max_iter=max_iter,
                                      block_b=block_b, interpret=interpret))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_reference_panel(n0: float, threshold: float, cap: float,
+                         max_iter: int):
+    import jax
+    return jax.jit(functools.partial(we_rounds_reference_panel, n0=n0,
+                                     threshold=threshold, cap=cap,
+                                     max_iter=max_iter))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_kernel_panel(n0: float, threshold: float, cap: float,
+                      max_iter: int, block_b: int, interpret: bool):
+    import jax
+
+    def fn(lam_rows, seed, flags, sched=None):
+        return we_rounds_pallas(lam_rows, seed, sched, flags, n0=n0,
+                                threshold=threshold, cap=cap, known=False,
+                                max_iter=max_iter, block_b=block_b,
+                                interpret=interpret)
+
+    return jax.jit(fn)
 
 
 @functools.lru_cache(maxsize=None)
@@ -121,7 +145,7 @@ def _pad_rows(rows: Optional[np.ndarray], pad: int) -> Optional[np.ndarray]:
 
 
 def we_rounds_grid(lam_rows: np.ndarray, seed, *, n0: float,
-                   threshold: float, cap: float, known: bool,
+                   threshold: float, cap: float, known,
                    max_iter: int, mode: Optional[str] = None,
                    block_b: int = DEFAULT_BLOCK_B, mesh=None,
                    rate_schedule: Optional[np.ndarray] = None
@@ -132,6 +156,11 @@ def we_rounds_grid(lam_rows: np.ndarray, seed, *, n0: float,
     ``seed`` is a pair of uint32 (any sequence of two ints).  ``B`` is
     padded to a multiple of ``block_b`` with copies of row 0 (counters are
     per global row, so padding never alters real rows).
+
+    ``known`` is a bool (the single-scheme path) or a ``(B,)`` per-row
+    flag array -- the fused-panel mixed mode, where known and unknown
+    work-exchange rows of a whole figure run in ONE launch (``cap``
+    applies to the unknown rows; known rows are uncapped).
 
     ``mesh`` (a 1-D jax Mesh, e.g. from ``grid_sharding``) shards the row
     axis across its devices via ``shard_map``; ``seed`` must then be a
@@ -156,7 +185,17 @@ def we_rounds_grid(lam_rows: np.ndarray, seed, *, n0: float,
         if sched.ndim != 3 or sched.shape[0] != B:
             raise ValueError(f"rate_schedule must be (B={B}, R, K); "
                              f"got {sched.shape}")
+    flags = None
+    if not isinstance(known, (bool, np.bool_)):
+        flags = np.asarray(known, dtype=np.float32).reshape(-1, 1)
+        if flags.shape[0] != B:
+            raise ValueError(f"per-row known flags must have one entry per "
+                             f"row (B={B}); got {flags.shape[0]}")
+        known = False
     mode = resolve_mode(mode)
+    if flags is not None and mesh is not None and mesh.size > 1:
+        raise ValueError("the fused-panel mixed mode does not shard; "
+                         "call without mesh=")
     if mesh is not None and mesh.size > 1:
         D = int(mesh.size)
         seed_arr = np.asarray(seed, dtype=np.uint32).reshape(D, 2)
@@ -181,15 +220,32 @@ def we_rounds_grid(lam_rows: np.ndarray, seed, *, n0: float,
     if pad and mode != "reference":
         lam_rows = _pad_rows(lam_rows, pad)
         sched = _pad_rows(sched, pad)
+        flags = _pad_rows(flags, pad)
 
     if mode == "reference":
-        fn = _jit_reference(float(n0), float(threshold), float(cap),
-                            bool(known), int(max_iter))
-        if sched is None:
-            t, it, cm = fn(jnp.asarray(lam_rows), jnp.asarray(seed_arr))
+        if flags is not None:
+            fn = _jit_reference_panel(float(n0), float(threshold),
+                                      float(cap), int(max_iter))
+            args = (jnp.asarray(lam_rows), jnp.asarray(seed_arr),
+                    jnp.asarray(flags))
+            t, it, cm = fn(*args) if sched is None else fn(
+                *args, jnp.asarray(sched))
         else:
-            t, it, cm = fn(jnp.asarray(lam_rows), jnp.asarray(seed_arr),
-                           jnp.asarray(sched))
+            fn = _jit_reference(float(n0), float(threshold), float(cap),
+                                bool(known), int(max_iter))
+            if sched is None:
+                t, it, cm = fn(jnp.asarray(lam_rows), jnp.asarray(seed_arr))
+            else:
+                t, it, cm = fn(jnp.asarray(lam_rows), jnp.asarray(seed_arr),
+                               jnp.asarray(sched))
+    elif flags is not None:
+        fn = _jit_kernel_panel(float(n0), float(threshold), float(cap),
+                               int(max_iter), int(block_b),
+                               mode == "interpret")
+        sched_arg = None if sched is None else jnp.asarray(sched)
+        out = fn(jnp.asarray(lam_rows), jnp.asarray(seed_arr[None, :]),
+                 jnp.asarray(flags), sched_arg)
+        t, it, cm = out[:, 0], out[:, 1], out[:, 2]
     else:
         fn = _jit_kernel(float(n0), float(threshold), float(cap),
                          bool(known), int(max_iter), int(block_b),

@@ -121,8 +121,20 @@ def binomial_normal(z: jnp.ndarray, n: jnp.ndarray,
 # the round pipeline on a (rows, K) tile
 # ---------------------------------------------------------------------------
 
+def estimator_prior(lam: jnp.ndarray) -> jnp.ndarray:
+    """Initial / no-observation rate estimate per worker column.
+
+    The paper's prior is ``lambda_hat = 1`` everywhere; zero-rate columns
+    (masked padding from the K-axis shape buckets) must hold a zero
+    estimate instead so the estimator never assigns them work.  Without
+    padding this is exactly ``jnp.ones_like(lam)``, bit-for-bit.
+    """
+    return jnp.where(lam > 0.0, jnp.float32(1.0), jnp.float32(0.0))
+
+
 def init_state(rows: int, K: int, n0: float, threshold: float,
-               known: bool) -> Dict[str, jnp.ndarray]:
+               known: bool, lam: jnp.ndarray = None,
+               with_round: bool = False) -> Dict[str, jnp.ndarray]:
     st = {
         "n_rem": jnp.full((rows, 1), jnp.float32(n0)),
         "n_left": jnp.zeros((rows, K), jnp.float32),
@@ -131,10 +143,19 @@ def init_state(rows: int, K: int, n0: float, threshold: float,
         "iters": jnp.zeros((rows, 1), jnp.int32),
         "active": jnp.full((rows, 1), n0 > threshold),
     }
+    if with_round:
+        # scalar trip counter: every *active* row has proceeded on every
+        # prior trip, so its ``iters`` equals this counter -- which is why
+        # the in-loop drift read can be one dynamic slice instead of a
+        # per-row gather
+        st["round"] = jnp.int32(0)
     if not known:
+        prior = (jnp.ones((rows, K), jnp.float32) if lam is None
+                 else jnp.broadcast_to(estimator_prior(lam), (rows, K))
+                 .astype(jnp.float32))
         st.update(est_done=jnp.zeros((rows, K), jnp.float32),
                   est_time=jnp.zeros((rows, 1), jnp.float32),
-                  lam_hat=jnp.ones((rows, K), jnp.float32))
+                  lam_hat=prior)
     return st
 
 
@@ -142,8 +163,10 @@ def sched_inv_rates(sched: jnp.ndarray, iters: jnp.ndarray) -> jnp.ndarray:
     """1/rate in effect at each row's current round, from a
     ``(rows, R, K)`` per-round schedule (round >= R holds the last row).
 
-    Implemented as a one-hot masked sum rather than a gather so the same
-    code lowers inside the Pallas kernel and under plain jit.
+    One-hot masked sum -- O(rows * R * K) per call, so it is reserved for
+    the run-once final phase where ``iters`` genuinely differs per row;
+    the in-loop read uses the scalar round counter and a dynamic slice
+    (``sched_row`` / the kernel's ``pl.ds`` tile read) instead.
     """
     R = sched.shape[1]
     r_idx = jnp.minimum(iters, R - 1)                       # (rows, 1)
@@ -152,11 +175,29 @@ def sched_inv_rates(sched: jnp.ndarray, iters: jnp.ndarray) -> jnp.ndarray:
     return 1.0 / (sched * sel[:, :, None]).sum(1)           # (rows, K)
 
 
+def sched_row(sched: jnp.ndarray, rnd: jnp.ndarray) -> jnp.ndarray:
+    """Rates row of a ``(rows, R, K)`` schedule at scalar round ``rnd``
+    (clamped to the last row), as a direct round-indexed load."""
+    r = jnp.minimum(rnd, sched.shape[1] - 1)
+    return jax.lax.dynamic_slice_in_dim(sched, r, 1, axis=1)[:, 0, :]
+
+
+def sched_inv_rates_gather(sched: jnp.ndarray,
+                           iters: jnp.ndarray) -> jnp.ndarray:
+    """``sched_inv_rates`` as a per-row gather: same selected values
+    bit-for-bit, O(rows * K) instead of O(rows * R * K).  XLA-only (the
+    full-batch reference); the kernel keeps the one-hot form, which
+    lowers in Pallas and is cheap on a single tile."""
+    r_idx = jnp.minimum(iters, sched.shape[1] - 1)          # (rows, 1)
+    cur = jnp.take_along_axis(sched, r_idx[:, :, None], axis=1)[:, 0, :]
+    return 1.0 / cur
+
+
 def round_body(st: Dict[str, jnp.ndarray], lam: jnp.ndarray,
                inv_lam: jnp.ndarray, row_ids: jnp.ndarray, k0, k1, *,
                K: int, cap: float, threshold: float, known: bool,
-               max_iter: int, sched: jnp.ndarray = None
-               ) -> Dict[str, jnp.ndarray]:
+               max_iter: int, sched_at=None,
+               known_col: jnp.ndarray = None) -> Dict[str, jnp.ndarray]:
     """One fluid exchange round on a tile (shared by kernel and oracle).
 
     The RNG round index is the row's own ``iters`` (== the global loop
@@ -164,19 +205,36 @@ def round_body(st: Dict[str, jnp.ndarray], lam: jnp.ndarray,
     counters into fully-masked lanes and the result is independent of how
     many extra trips the surrounding ``while_loop`` makes.
 
-    ``sched`` (optional ``(rows, R, K)``) supplies each round's true
-    service rates (drifting scenarios): the Gamma draws use them, the
-    assignment shares keep using ``lam`` / the online estimate.
+    ``sched_at`` (optional callable ``round -> (rows, K)`` rates) supplies
+    each round's true service rates (drifting scenarios): the Gamma draws
+    use them, the assignment shares keep using ``lam`` / the online
+    estimate.  It is indexed by the scalar ``st["round"]`` trip counter --
+    active rows always have ``iters == round`` (a row that fails to
+    proceed goes inactive for good), and frozen rows' stale reads are
+    fully masked -- so one row load per trip replaces the old
+    O(rows * R * K) one-hot masked sum.
+
+    ``known_col`` (optional ``(rows, 1)`` bool) is the fused-panel mixed
+    mode: each row carries its own known-heterogeneity flag (known rows
+    assign by ``lam`` with no storage cap, unknown rows by the online
+    estimate under ``cap``).  Callers pass ``known=False`` alongside it so
+    the estimator state exists for every row; known rows simply never
+    read it.
     """
     worker = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
     c1 = ((st["iters"] * K + worker) * N_PAIRS).astype(jnp.uint32)
     z_g, u0, u1, u2, z_b = round_uniforms(k0, k1, row_ids, c1)
 
-    if sched is not None:
-        inv_lam = sched_inv_rates(sched, st["iters"])
-    rates = lam if known else st["lam_hat"]
+    if sched_at is not None:
+        inv_lam = 1.0 / sched_at(st["round"])
+    if known_col is not None:
+        rates = jnp.where(known_col, lam, st["lam_hat"])
+        cap_eff = jnp.where(known_col, jnp.inf, jnp.float32(cap))
+    else:
+        rates = lam if known else st["lam_hat"]
+        cap_eff = jnp.float32(cap)
     share = rates * (st["n_rem"] / rates.sum(1, keepdims=True))
-    assign = jnp.minimum(share, jnp.float32(cap))
+    assign = jnp.minimum(share, cap_eff)
     busy = assign > 0.5        # sub-half slivers carry over as leftover
     t_raw = gamma_mt(z_g, u0, u1, u2, jnp.maximum(assign, 0.5), inv_lam)
     t_k = jnp.where(busy, t_raw, jnp.inf)
@@ -202,6 +260,8 @@ def round_body(st: Dict[str, jnp.ndarray], lam: jnp.ndarray,
         "iters": iters,
         "active": proceed & (n_rem_m > threshold) & (iters < max_iter),
     }
+    if "round" in st:
+        out["round"] = st["round"] + jnp.int32(1)
     if not known:
         # accumulators go unmasked; frozen rows only read them through
         # lam_hat, which IS masked
@@ -210,25 +270,34 @@ def round_body(st: Dict[str, jnp.ndarray], lam: jnp.ndarray,
         out["est_done"] = ed
         out["est_time"] = et
         out["lam_hat"] = upd(jnp.where(ed > 0.0, ed / jnp.maximum(et, 1e-30),
-                                       1.0), st["lam_hat"])
+                                       estimator_prior(lam)),
+                             st["lam_hat"])
     return out
 
 
 def final_phase(st: Dict[str, jnp.ndarray], lam: jnp.ndarray,
                 inv_lam: jnp.ndarray, row_ids: jnp.ndarray, k0, k1, *,
                 K: int, known: bool, max_iter: int,
-                sched: jnp.ndarray = None):
+                sched: jnp.ndarray = None, sched_gather: bool = False,
+                known_col: jnp.ndarray = None):
     """Below the threshold: assign the remainder, wait for all workers.
     Uses the reserved round index ``max_iter`` (the loop never reaches it:
-    in-loop draws happen at ``iters < max_iter``)."""
+    in-loop draws happen at ``iters < max_iter``).  ``sched_gather``
+    selects the XLA per-row gather for the drift read (the full-batch
+    reference path); the default one-hot lowers inside the kernel.
+    ``known_col`` is the fused-panel per-row flag (see ``round_body``)."""
     worker = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
     c1 = ((jnp.int32(max_iter) * K + worker) * N_PAIRS).astype(jnp.uint32)
     z_g, u0, u1, u2, _ = round_uniforms(
         k0, k1, jnp.broadcast_to(row_ids, (row_ids.shape[0], 1)), c1)
     has_rem = st["n_rem"] > 1e-6
     if sched is not None:
-        inv_lam = sched_inv_rates(sched, st["iters"])
-    rates = lam if known else st["lam_hat"]
+        inv_lam = (sched_inv_rates_gather(sched, st["iters"])
+                   if sched_gather else sched_inv_rates(sched, st["iters"]))
+    if known_col is not None:
+        rates = jnp.where(known_col, lam, st["lam_hat"])
+    else:
+        rates = lam if known else st["lam_hat"]
     share = rates * (st["n_rem"] / rates.sum(1, keepdims=True))
     comm = jnp.maximum(share - st["n_left"], 0.0).sum(1, keepdims=True)
     t_k = jnp.where(share > 1e-9,
@@ -264,6 +333,7 @@ def we_rounds_reference(lam_rows: jnp.ndarray, seed: jnp.ndarray,
     inv_lam = 1.0 / lam
     k0, k1 = seed[0], seed[1]
     row_ids = jax.lax.broadcasted_iota(jnp.int32, (B, 1), 0)
+    sched_at = None if sched is None else (lambda r: sched_row(sched, r))
 
     def cond(st):
         return st["active"].any()
@@ -271,12 +341,53 @@ def we_rounds_reference(lam_rows: jnp.ndarray, seed: jnp.ndarray,
     def body(st):
         return round_body(st, lam, inv_lam, row_ids, k0, k1, K=K, cap=cap,
                           threshold=threshold, known=known,
-                          max_iter=max_iter, sched=sched)
+                          max_iter=max_iter, sched_at=sched_at)
 
     st = jax.lax.while_loop(cond, body,
-                            init_state(B, K, n0, threshold, known))
+                            init_state(B, K, n0, threshold, known, lam=lam,
+                                       with_round=sched is not None))
     return final_phase(st, lam, inv_lam, row_ids, k0, k1, K=K, known=known,
-                       max_iter=max_iter, sched=sched)
+                       max_iter=max_iter, sched=sched, sched_gather=True)
+
+
+def we_rounds_reference_panel(lam_rows: jnp.ndarray, seed: jnp.ndarray,
+                              known_flags: jnp.ndarray,
+                              sched: jnp.ndarray = None, *,
+                              n0: float, threshold: float, cap: float,
+                              max_iter: int):
+    """``we_rounds_reference`` with a per-row known-heterogeneity flag.
+
+    The fused-panel path: known and unknown work-exchange rows of a whole
+    figure stack into ONE batch (one launch), each row reading its own
+    ``known_flags`` entry (float32/bool ``(B,)`` or ``(B, 1)``; nonzero =
+    known).  Counters are keyed by the global row id exactly as in the
+    single-scheme path, so the panel keeps the kernel/interpret/reference
+    bit-identity -- but it is a *different* (equally valid) bit stream
+    than two separate launches, whose rows sit at different ids.
+    """
+    B, K = lam_rows.shape
+    lam = lam_rows.astype(jnp.float32)
+    inv_lam = 1.0 / lam
+    k0, k1 = seed[0], seed[1]
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (B, 1), 0)
+    known_col = jnp.reshape(known_flags, (B, 1)) > 0
+    sched_at = None if sched is None else (lambda r: sched_row(sched, r))
+
+    def cond(st):
+        return st["active"].any()
+
+    def body(st):
+        return round_body(st, lam, inv_lam, row_ids, k0, k1, K=K, cap=cap,
+                          threshold=threshold, known=False,
+                          max_iter=max_iter, sched_at=sched_at,
+                          known_col=known_col)
+
+    st = jax.lax.while_loop(cond, body,
+                            init_state(B, K, n0, threshold, False, lam=lam,
+                                       with_round=sched is not None))
+    return final_phase(st, lam, inv_lam, row_ids, k0, k1, K=K, known=False,
+                       max_iter=max_iter, sched=sched, sched_gather=True,
+                       known_col=known_col)
 
 
 # ---------------------------------------------------------------------------

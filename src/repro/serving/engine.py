@@ -291,8 +291,14 @@ def simulate_serving(het: HetSpec, scheme_name: str,
     if soj_pool.size:
         p50, p95, p99 = (float(x) for x in
                          np.percentile(soj_pool, [50.0, 95.0, 99.0]))
+        latency_censored = False
     else:
+        # no job completed inside the measurement window: the horizon is
+        # only a LOWER BOUND on the true latency, not a measurement --
+        # flagged below so knee detection and the CLI can tell a
+        # saturated cell from a measured one
         p50 = p95 = p99 = horizon_t
+        latency_censored = True
     its = completed_w.astype(np.float64)
     extra: Dict[str, Any] = {
         "serving": 1.0,
@@ -314,8 +320,15 @@ def simulate_serving(het: HetSpec, scheme_name: str,
         extra["deadline_s"] = float(deadline_t)
         extra["slo_miss_rate"] = float(slo_miss.sum()
                                        / max(completed_w.sum(), 1))
+    # censoring telemetry: ``latency_censored`` marks the full fallback
+    # (every percentile above is the horizon bound, not a measurement);
+    # ``censored_frac`` is the per-trial fraction that completed nothing
+    # (partial censoring biases percentiles low -- the slow trials'
+    # latencies are the ones missing from the pool)
+    extra["latency_censored"] = 1.0 if latency_censored else 0.0
     if censored:
         extra["censored"] = float(censored)
+        extra["censored_frac"] = float(censored / T)
     return MCReport(
         scheme=policy.scheme.name, trials=T,
         t_comp=float(per_trial.mean()), t_comp_std=float(per_trial.std()),

@@ -189,6 +189,30 @@ class TestEstimators:
         est.update(np.array([500.0]), 100.0)
         assert est.rates()[0] == pytest.approx(5.0, rel=0.02)
 
+    def test_ema_silent_worker_holds_prior(self):
+        # regression: a worker that has produced nothing yet must keep
+        # its prior rate, not have it EMA-decayed toward zero by its own
+        # silence (which starved slow-starting workers of assignments)
+        est = EMARateEstimator(2, prior_rate=3.0, alpha=0.4)
+        for _ in range(25):
+            est.update(np.array([8.0, 0.0]), 1.0)
+        assert est.rates()[0] == pytest.approx(8.0, rel=1e-3)
+        assert est.rates()[1] == pytest.approx(3.0)
+        # first real observation replaces the prior outright...
+        est.update(np.array([0.0, 2.0]), 1.0)
+        assert est.rates()[1] == pytest.approx(2.0)
+        # ...and zeros AFTER first contact do decay (a stall is signal)
+        est.update(np.array([0.0, 0.0]), 1.0)
+        assert est.rates()[1] == pytest.approx(0.6 * 2.0)
+
+    def test_make_estimator_unknown_kind_lists_registry(self):
+        from repro.core.estimator import make_estimator
+        with pytest.raises(KeyError) as ei:
+            make_estimator("kalman", 4)
+        msg = str(ei.value)
+        assert "unknown estimator 'kalman'" in msg
+        assert "'bayes', 'cumulative', 'ema'" in msg
+
 
 class TestCoded:
     def test_mds_matmul_decodes_from_any_L(self):

@@ -105,6 +105,25 @@ class TestSpecRoundTrip:
                                             threshold_frac=0.2, seed=99)))
         assert a.spec_hash() != b.spec_hash()
 
+    def test_panel_key_omitted_at_default(self):
+        """``panel="per_scheme"`` must not appear in the serialized spec:
+        every pre-panel hash and store address survives the new field."""
+        base = quick_spec()
+        assert "panel" not in base.to_dict()
+        fused = quick_spec(panel="fused")
+        assert fused.to_dict()["panel"] == "fused"
+        assert fused.spec_hash() != base.spec_hash()
+        back = ExperimentSpec.from_json(fused.to_json())
+        assert back.panel == "fused" and back.spec_hash() == fused.spec_hash()
+        with pytest.raises(ValueError, match="panel"):
+            quick_spec(panel="bogus")
+
+    def test_panel_fused_excludes_serving_and_live(self):
+        from repro.experiments import ServingConfig
+        with pytest.raises(ValueError, match="batch MC only"):
+            quick_spec(panel="fused",
+                       serving=ServingConfig(loads=(0.5,), slots=100))
+
     def test_explicit_grid_round_trip(self):
         hets = (HetSpec(np.array([1.0, 2.0, 3.0])),
                 HetSpec(np.array([2.0, 2.0, 2.0])))
@@ -261,6 +280,33 @@ class TestEngine:
             hets, spec.N, trials=spec.trials, rng=RNG(99))
         assert [r.t_comp for r in result.report("we-th")] == \
             [r.t_comp for r in direct]
+
+    def test_fused_panel_execution(self):
+        """panel='fused' on jax: the WE pair's reports carry the
+        fused_panel flag, every other task is bit-identical to
+        per-scheme execution (per-task rng mapping), and the fused
+        means sit within SE of the per-scheme run."""
+        spec = quick_spec(backend="jax",
+                          schemes=(scheme_spec("work_exchange"),
+                                   scheme_spec("work_exchange_unknown"),
+                                   scheme_spec("hedged")),
+                          trials=64)
+        per = run_experiment(spec)
+        fus = run_experiment(spec.replace(panel="fused"))
+        assert [r.t_comp for r in fus.report("hedged")] == \
+            [r.t_comp for r in per.report("hedged")]
+        for key in ("work_exchange", "work_exchange_unknown"):
+            for a, b in zip(fus.report(key), per.report(key)):
+                assert a.extra.get("fused_panel") == 1
+                assert b.extra.get("fused_panel") is None
+                se = np.hypot(a.t_comp_std, b.t_comp_std) / np.sqrt(64)
+                assert abs(a.t_comp - b.t_comp) < max(6 * se,
+                                                      2e-3 * b.t_comp)
+
+    def test_fused_panel_pins_devices(self):
+        plan = compile_plan(quick_spec(panel="fused", backend="jax",
+                                       devices="auto"))
+        assert plan.devices == 1
 
 
 class TestFigureDriversBitIdentical:

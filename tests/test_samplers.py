@@ -328,3 +328,221 @@ class TestMcGrid:
     def test_empty_grid(self):
         assert get_scheme("work_exchange").mc_grid([], 1_000, 4,
                                                    RNG(15)) == []
+
+
+# ---------------------------------------------------------------------------
+# K / R shape bucketing
+# ---------------------------------------------------------------------------
+
+class TestShapeBucketing:
+    """Panel shape bucketing: non-pow2 ``(K, R)`` pad into pow2 buckets
+    with fully-masked columns / repeated last schedule rows, so one
+    compilation (and one persistent-cache entry) serves the shape
+    family.  On the counter-keyed pallas pipeline the padding must be
+    bitwise invisible; on the stream-keyed jax engine, statistically."""
+
+    def test_bucket_targets(self):
+        from repro.core.samplers import bucket_cols, bucket_rounds
+        assert [bucket_cols(k) for k in (3, 12, 13, 16, 17, 50)] == \
+            [4, 16, 16, 16, 24, 56]
+        assert [bucket_rounds(r) for r in (6, 7, 16, 19, 48)] == \
+            [8, 8, 16, 32, 48]
+
+    def test_disable_env(self, monkeypatch):
+        from repro.core.samplers import bucket_cols, bucket_rounds
+        monkeypatch.setenv("REPRO_SHAPE_BUCKETS", "0")
+        assert bucket_cols(13) == 13 and bucket_rounds(19) == 19
+
+    def test_grid_bucket_shape_families(self):
+        # two different raw panel shapes landing in ONE bucket is the
+        # whole point: one compile, one shared cache entry
+        from repro.core.samplers import grid_bucket_shape
+        a = grid_bucket_shape(2, 16, 12, None, backend="jax")
+        b = grid_bucket_shape(3, 8, 14, None, backend="jax")
+        assert a == b == {"rows": 64, "K": 16}
+
+    @pytest.mark.parametrize("known", [True, False])
+    def test_non_pow2_K_mode_identity_under_bucketing(self, known,
+                                                      monkeypatch):
+        """K=13 pads to the 16 bucket with masked zero-rate columns; at
+        the padded shape the interpreted kernel and the jnp reference
+        stay BIT-identical (the pin the bucketing must not break).
+        Bucketed vs exact shapes are NOT bit-equal -- float32 reduction
+        order over the K axis changes with the padded width -- so the
+        cross-setting check is statistical, below."""
+        from repro.core.samplers import work_exchange_grid_pallas
+        lam = RNG(2).uniform(5.0, 15.0, size=(2, 13))
+        cfg = ExchangeConfig(known_heterogeneity=known)
+        for buckets in ("1", "0"):
+            monkeypatch.setenv("REPRO_SHAPE_BUCKETS", buckets)
+            outs = []
+            for mode in ("interpret", "reference"):
+                monkeypatch.setenv("REPRO_WE_ROUNDS_MODE", mode)
+                outs.append(work_exchange_grid_pallas(lam, 6_000, cfg, 32,
+                                                      RNG(9)))
+            for a, b in zip(*outs):
+                np.testing.assert_array_equal(a, b, err_msg=buckets)
+
+    @pytest.mark.parametrize("known", [True, False])
+    def test_non_pow2_R_drift_mode_identity_under_bucketing(self, known,
+                                                            monkeypatch):
+        """A 19-round drift schedule pads to the 32 bucket by repeating
+        the last row -- exactly the engines' ``round >= R`` clamp -- and
+        the padded shape keeps the interpret/reference bit-identity."""
+        from repro.core.samplers import work_exchange_grid_pallas
+        rng = RNG(4)
+        lam = rng.uniform(5.0, 15.0, size=(2, 13))
+        sched = lam[:, None, :] * np.exp(
+            0.2 * rng.standard_normal((2, 19, 13)))
+        cfg = ExchangeConfig(known_heterogeneity=known)
+        for buckets in ("1", "0"):
+            monkeypatch.setenv("REPRO_SHAPE_BUCKETS", buckets)
+            outs = []
+            for mode in ("interpret", "reference"):
+                monkeypatch.setenv("REPRO_WE_ROUNDS_MODE", mode)
+                outs.append(work_exchange_grid_pallas(
+                    lam, 6_000, cfg, 32, RNG(9), rate_schedule=sched))
+            for a, b in zip(*outs):
+                np.testing.assert_array_equal(a, b, err_msg=buckets)
+
+    def test_bucketed_vs_exact_statistical_on_pallas(self, monkeypatch):
+        """Bucketing on vs off at non-pow2 K: means agree at 6 SE (the
+        padding is statistically, not bitwise, invisible)."""
+        from repro.core.samplers import work_exchange_grid_pallas
+        lam = RNG(5).uniform(15.0, 25.0, size=(1, 13))
+        cfg = ExchangeConfig(known_heterogeneity=False)
+        trials = 512
+        res = {}
+        for buckets in ("1", "0"):
+            monkeypatch.setenv("REPRO_SHAPE_BUCKETS", buckets)
+            res[buckets] = work_exchange_grid_pallas(lam, N, cfg, trials,
+                                                     RNG(9))
+        t1, t0 = res["1"][0], res["0"][0]
+        se = np.hypot(t1.std(), t0.std()) / np.sqrt(trials)
+        assert abs(t1.mean() - t0.mean()) < max(6 * se, 2e-3 * t0.mean())
+
+    def test_non_pow2_K_statistical_on_jax(self, monkeypatch):
+        """The jax engine keys draws by stream, not counters, so K
+        padding moves individual samples; means must still agree with
+        the exact numpy engine at 6 SE at a non-pow2 K."""
+        from repro.core.samplers import work_exchange_grid_jax
+        lam = RNG(6).uniform(15.0, 25.0, size=(1, 13))
+        cfg = ExchangeConfig(known_heterogeneity=False)
+        trials = 512
+        t_j, _, _ = work_exchange_grid_jax(lam, N, cfg, trials, RNG(7))
+        t_n, _, _ = work_exchange_grid_numpy(lam, N, cfg, trials, RNG(8))
+        se = np.hypot(t_j.std(), t_n.std()) / np.sqrt(trials)
+        assert abs(t_j.mean() - t_n.mean()) < max(6 * se,
+                                                  2e-3 * t_n.mean())
+
+
+# ---------------------------------------------------------------------------
+# fused whole-panel dispatch
+# ---------------------------------------------------------------------------
+
+class TestFusedPanelDispatch:
+    """``mc_grid_panel``: the WE known/unknown pair as ONE engine call."""
+
+    def _schemes(self):
+        return {"we": get_scheme("work_exchange"),
+                "weu": get_scheme("work_exchange_unknown"),
+                "fixed": get_scheme("fixed")}
+
+    def test_pair_detection(self):
+        from repro.core.schemes import _panel_pair
+        assert _panel_pair(self._schemes()) == ("we", "weu")
+        # mismatched thresholds cannot share one round loop
+        s = self._schemes()
+        s["weu"] = get_scheme("work_exchange_unknown", threshold_frac=0.05)
+        assert _panel_pair(s) is None
+        # loop-engine references never fuse
+        s = self._schemes()
+        s["we"] = get_scheme("work_exchange", engine="loop")
+        assert _panel_pair(s) is None
+
+    @pytest.mark.parametrize("backend", ["jax", "pallas"])
+    def test_panel_matches_numpy_at_6se(self, backend):
+        from repro.core.schemes import mc_grid_panel
+        specs = [make_het(seed=s) for s in (1, 2)]
+        trials = 256
+        out = mc_grid_panel(self._schemes(), specs, N, trials, RNG(21),
+                            backend=backend)
+        for key in ("we", "weu"):
+            assert all(r.extra.get("fused_panel") == 1 for r in out[key])
+            name = ("work_exchange" if key == "we"
+                    else "work_exchange_unknown")
+            ref = get_scheme(name).mc_grid(specs, N, trials, RNG(22),
+                                           backend="numpy")
+            for g, (a, b) in enumerate(zip(out[key], ref)):
+                se = np.hypot(a.t_comp_std, b.t_comp_std) / np.sqrt(trials)
+                assert abs(a.t_comp - b.t_comp) < max(6 * se,
+                                                      2e-3 * b.t_comp), \
+                    (backend, key, g)
+                assert abs(a.n_comm - b.n_comm) / N < 0.01
+
+    def test_rng_mapping_keeps_non_pair_bitwise(self):
+        """With the executor's per-task rng mapping, non-fused schemes
+        draw from exactly the per-scheme stream: panel mode only moves
+        the fused pair's numbers."""
+        from repro.core.schemes import mc_grid_panel
+        specs = [make_het(seed=4)]
+        rngs = {"we": RNG(31), "weu": RNG(32), "fixed": RNG(33)}
+        out = mc_grid_panel(self._schemes(), specs, 20_000, 64, rngs,
+                            backend="jax")
+        ref = get_scheme("fixed").mc_grid(specs, 20_000, 64, RNG(33),
+                                          backend="jax")
+        assert out["fixed"][0].t_comp == ref[0].t_comp
+        assert out["fixed"][0].extra.get("fused_panel") is None
+
+    def test_numpy_falls_back_per_scheme_bitwise(self):
+        """No panel executor on the exact backend: every scheme runs its
+        own mc_grid from its own stream -- bit-identical to per-scheme
+        dispatch, no fused_panel flag."""
+        from repro.core.schemes import mc_grid_panel
+        specs = [make_het(seed=5)]
+        rngs = {"we": RNG(41), "weu": RNG(42), "fixed": RNG(43)}
+        out = mc_grid_panel(self._schemes(), specs, 20_000, 16, rngs,
+                            backend="numpy")
+        for key, name, seed in (("we", "work_exchange", 41),
+                                ("weu", "work_exchange_unknown", 42),
+                                ("fixed", "fixed", 43)):
+            ref = get_scheme(name).mc_grid(specs, 20_000, 16, RNG(seed),
+                                           backend="numpy")
+            assert out[key][0].t_comp == ref[0].t_comp
+            assert out[key][0].extra.get("fused_panel") is None
+
+    def test_pallas_panel_mode_identity(self, monkeypatch):
+        """The stacked pallas panel launch is bitwise mode-identical:
+        interpret-mode kernel == jitted reference, known and unknown
+        halves both."""
+        from repro.core.samplers import work_exchange_panel_pallas
+        lam = RNG(51).uniform(10.0, 30.0, size=(2, 12))
+        cfg_k = ExchangeConfig(known_heterogeneity=True)
+        cfg_u = ExchangeConfig(known_heterogeneity=False)
+        outs = []
+        for mode in ("interpret", "reference"):
+            monkeypatch.setenv("REPRO_WE_ROUNDS_MODE", mode)
+            outs.append(work_exchange_panel_pallas(lam, 10_000, cfg_k,
+                                                   cfg_u, 32, RNG(52)))
+        for slot in ("known", "unknown"):
+            for a, b in zip(outs[0][slot], outs[1][slot]):
+                np.testing.assert_array_equal(a, b, err_msg=slot)
+
+    def test_drift_panel_matches_numpy_at_6se(self):
+        from repro.core.schemes import mc_grid_panel
+        rng = RNG(61)
+        specs = [make_het(seed=6)]
+        lam = specs[0].lambdas
+        sched = (lam[None, None, :]
+                 * np.exp(0.15 * rng.standard_normal((1, 9, K))))
+        trials = 256
+        out = mc_grid_panel(self._schemes(), specs, N, trials, RNG(62),
+                            backend="jax", rate_schedule=sched)
+        for key, name in (("we", "work_exchange"),
+                          ("weu", "work_exchange_unknown")):
+            ref = get_scheme(name).mc_grid(specs, N, trials, RNG(63),
+                                           backend="numpy",
+                                           rate_schedule=sched)
+            a, b = out[key][0], ref[0]
+            se = np.hypot(a.t_comp_std, b.t_comp_std) / np.sqrt(trials)
+            assert abs(a.t_comp - b.t_comp) < max(6 * se, 2e-3 * b.t_comp)

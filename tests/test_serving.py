@@ -33,6 +33,50 @@ def quick_cfg(**kw):
 
 
 # ---------------------------------------------------------------------------
+# censored-percentile telemetry
+# ---------------------------------------------------------------------------
+
+class TestCensoredLatency:
+    def test_measured_rows_not_flagged(self):
+        rep = simulate_serving(small_het(), "fixed", {}, quick_cfg(), N=30,
+                               load=0.5, trials=6, rng=RNG(0))
+        assert rep.extra["latency_censored"] == 0.0
+        # a measured row's percentiles come from real completions
+        assert rep.extra["completed_jobs"] > 0
+
+    def test_saturated_rows_flag_horizon_bound(self):
+        # jobs so large none can complete inside the window: the
+        # percentile fallback reports the horizon and must say so
+        # instead of silently posing as a measurement
+        cfg = quick_cfg(slots=100, slot_dt=0.01)
+        rep = simulate_serving(small_het(), "fixed", {}, cfg, N=1_000_000,
+                               load=0.9, trials=4, rng=RNG(1))
+        assert rep.extra["latency_censored"] == 1.0
+        assert rep.extra["censored_frac"] == 1.0
+        horizon = 100 * 0.01
+        assert rep.extra["p50"] == rep.extra["p99"] == pytest.approx(horizon)
+        assert rep.t_comp == pytest.approx(horizon)
+
+    def test_knee_detection_counts_censored_rows(self):
+        from benchmarks.fig_load import knees
+        rows = [
+            {"scenario": "s", "scheme": "a", "load": 0.5, "sojourn": 1.0,
+             "latency_censored": 0.0},
+            {"scenario": "s", "scheme": "a", "load": 0.9, "sojourn": 1.2,
+             "latency_censored": 1.0},   # horizon bound, truly saturated
+            {"scenario": "s", "scheme": "b", "load": 0.5, "sojourn": 1.0,
+             "latency_censored": 0.0},
+            {"scenario": "s", "scheme": "b", "load": 0.9, "sojourn": 1.2,
+             "latency_censored": 0.0},
+        ]
+        out = knees(rows, factor=3.0)
+        # the censored row IS the knee even though its bound sits far
+        # below 3x base; the measured twin at the same ratio is not
+        assert out[("s", "a")] == 0.9
+        assert out[("s", "b")] is None
+
+
+# ---------------------------------------------------------------------------
 # closed forms + largest-remainder rounding
 # ---------------------------------------------------------------------------
 
