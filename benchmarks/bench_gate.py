@@ -51,6 +51,7 @@ WALL_KEYS_JAX_CACHE = ("cold_first_call_s", "cold_second_shape_s",
 # coordination wall is tiny and usually falls under --min-wall (reported,
 # not gated)
 WALL_KEYS_CONTROL = ("episode_wall_s", "coordination_wall_s")
+WALL_KEYS_TRAIN = ("per_unit_loop_s", "scan_engine_s")
 
 
 def load(path: str) -> dict:
@@ -99,6 +100,10 @@ def collect_walls(report: dict) -> dict:
     for key in WALL_KEYS_CONTROL:
         if key in control:
             walls[f"control_plane.{key}"] = float(control[key])
+    train = report.get("train", {})
+    for key in WALL_KEYS_TRAIN:
+        if key in train:
+            walls[f"train.{key}"] = float(train[key])
     return walls
 
 

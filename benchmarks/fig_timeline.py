@@ -1,0 +1,184 @@
+"""Occupancy timeline: per-worker busy/idle spans from a live episode.
+
+The live control plane (``repro.control``) stamps every worker with
+telemetry spans -- busy computing a round vs. idle awaiting assignment
+-- and ships them in ``MCReport.extra["control_plane"]["timeline"]``.
+This figure renders that record as an ASCII per-worker timeline: one
+row per worker, ``#`` for busy wall-time, ``.`` for idle, with the
+per-worker busy fraction and units completed in the margin.  It is the
+visual form of the paper's straggler story: under static assignment the
+fast workers' rows go idle-dotted while the slow worker's row stays
+solid; under work exchange every row stays mostly solid.
+
+Two entry points:
+
+* ``render_timeline(control_plane)`` -- pure function from the stored
+  ``extra["control_plane"]`` dict (or a bare ``Telemetry.to_dict()``)
+  to the ASCII figure; falls back to occupancy-summary bars for store
+  entries written before raw spans were exported.
+* CLI -- render from the content-addressed store (``--hash`` or every
+  entry carrying control-plane telemetry), or ``--live`` to run one
+  quick in-process episode and render it immediately::
+
+      PYTHONPATH=src python -m benchmarks.fig_timeline --live
+      PYTHONPATH=src python -m benchmarks.fig_timeline --hash <spec-hash>
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Any, Dict, List
+
+DEFAULT_WIDTH = 64
+_GLYPH = {"busy": "#", "idle": "."}
+
+
+def _timeline_of(control: Dict[str, Any]) -> Dict[str, Any]:
+    """Accept either ``extra["control_plane"]`` or a bare timeline."""
+    if "timeline" in control:
+        return control["timeline"]
+    return control
+
+
+def _span_rows(spans: Dict[str, List[dict]], width: int) -> List[str]:
+    t_max = max((s["t1"] for ss in spans.values() for s in ss),
+                default=0.0)
+    if t_max <= 0:
+        return []
+    rows = []
+    for worker in sorted(spans, key=lambda w: int(w)):
+        cells = [" "] * width
+        busy = units = 0.0
+        for s in spans[worker]:
+            glyph = _GLYPH.get(s.get("state"), "?")
+            lo = int(s["t0"] / t_max * width)
+            hi = max(lo + 1, int(s["t1"] / t_max * width))
+            for i in range(lo, min(hi, width)):
+                # busy wins ties on shared cells: a sliver of work in a
+                # mostly-idle cell still reads as activity
+                if cells[i] != _GLYPH["busy"]:
+                    cells[i] = glyph
+            if s.get("state") == "busy":
+                busy += s["t1"] - s["t0"]
+                units += s.get("units", 0)
+        frac = busy / t_max
+        rows.append(f"  w{int(worker):<3d} |{''.join(cells)}| "
+                    f"busy {100 * frac:5.1f}%  units {int(units)}")
+    rows.append(f"  {'':>5} +{'-' * width}+  span 0 .. {t_max:.3f}s")
+    return rows
+
+
+def _occupancy_rows(occ: Dict[str, dict], width: int) -> List[str]:
+    """Fallback for records predating raw span export: summary bars."""
+    rows = []
+    for worker in sorted(occ, key=lambda w: int(w)):
+        o = occ[worker]
+        total = o["busy_s"] + o["idle_s"]
+        n_busy = int(round(width * o["busy_s"] / total)) if total > 0 else 0
+        bar = _GLYPH["busy"] * n_busy + _GLYPH["idle"] * (width - n_busy)
+        frac = o["busy_s"] / total if total > 0 else 0.0
+        rows.append(f"  w{int(worker):<3d} |{bar}| "
+                    f"busy {100 * frac:5.1f}%  units {o['units_done']}")
+    return rows
+
+
+def render_timeline(control: Dict[str, Any],
+                    width: int = DEFAULT_WIDTH) -> str:
+    """ASCII per-worker busy/idle timeline from control-plane telemetry.
+
+    Prefers the raw ``spans`` (true time-resolved rows); degrades to
+    occupancy-summary bars when only aggregates were stored.
+    """
+    tl = _timeline_of(control)
+    spans = tl.get("spans") or {}
+    rows = _span_rows(spans, width) if spans else []
+    mode = "spans"
+    if not rows:
+        rows = _occupancy_rows(tl.get("occupancy") or {}, width)
+        mode = "occupancy summary"
+    if not rows:
+        return "  (no worker telemetry recorded)"
+    head = [f"  worker timeline ({mode}; '#' busy, '.' idle)"]
+    counters = tl.get("counters") or {}
+    tail = []
+    if counters:
+        tail.append("  " + "  ".join(
+            f"{k}={v}" for k, v in sorted(counters.items())
+            if k in ("units_dispatched", "units_completed",
+                     "units_reassigned", "rpc_retries")))
+    return "\n".join(head + rows + tail)
+
+
+def render_report(rep, width: int = DEFAULT_WIDTH) -> str:
+    """Timeline plus the episode headline for one live MCReport."""
+    control = rep.extra["control_plane"]
+    head = (f"scheme={rep.scheme}  T_comp={rep.t_comp:.3f} "
+            f"(model {control.get('expected_model_s', float('nan')):.3f})"
+            f"  transport={control.get('transport', '?')}")
+    return head + "\n" + render_timeline(control, width)
+
+
+def _live_reports(scheme: str, transport: str):
+    """One quick in-process live episode per scheme for --live mode."""
+    import numpy as np
+
+    from repro.control import LiveConfig, run_live
+    from repro.core.types import HetSpec
+
+    het = HetSpec.uniform_random(K=4, mu=4.0, sigma2=4.0 ** 2 / 6,
+                                 rng=np.random.default_rng(11))
+    cfg = LiveConfig(transport=transport, target_wall_s=0.3)
+    schemes = ([scheme] if scheme
+               else ["fixed", "work_exchange"])
+    return [run_live(name, {}, het, N=64, cfg=cfg, trials=1, seed=5)
+            for name in schemes]
+
+
+def _store_reports(store_root: str, spec_hash: str):
+    from repro.experiments import ResultsStore
+
+    store = ResultsStore(store_root)
+    hashes = [spec_hash] if spec_hash else store.entries()
+    out = []
+    for h in hashes:
+        result = store.get(h)
+        if result is None:
+            continue
+        for key in result.keys():
+            for rep in result.report(key):
+                if "control_plane" in rep.extra:
+                    out.append(rep)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--store", default="results/store",
+                    help="content-addressed store root to scan")
+    ap.add_argument("--hash", default=None,
+                    help="render one store entry by spec hash")
+    ap.add_argument("--live", action="store_true",
+                    help="run one quick live episode and render it")
+    ap.add_argument("--scheme", default=None,
+                    help="with --live: a single scheme (default: fixed "
+                         "and work_exchange side by side)")
+    ap.add_argument("--transport", default="inproc",
+                    help="with --live: transport name (inproc, tcp, ...)")
+    ap.add_argument("--width", type=int, default=DEFAULT_WIDTH)
+    args = ap.parse_args(argv)
+
+    reports = (_live_reports(args.scheme, args.transport) if args.live
+               else _store_reports(args.store, args.hash))
+    if not reports:
+        print("no control-plane telemetry found (run a live episode: "
+              "--live, or `python -m repro.experiments --demo live`)",
+              file=sys.stderr)
+        return 1
+    for rep in reports:
+        print(render_report(rep, args.width))
+        print()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,7 +21,10 @@ per-policy p99 at a pinned load -- see ``benchmarks.fig_load``), and the
 ``jax_cache`` section (cold vs warm first-call wall with the persistent
 compilation cache), and the ``control_plane`` section (live async
 execution: measured vs MC-predicted T_comp plus the coordination-wall
-fraction -- see ``repro.control``), so the perf trajectory is tracked
+fraction -- see ``repro.control``), and the ``train`` section (the
+batched ``lax.scan`` gradient engine vs the per-unit jitted loop it
+replaced, plus the cross-policy bitwise-identity certificate -- see
+``repro.hettrain``), so the perf trajectory is tracked
 across PRs (see ``benchmarks.bench_gate``).
 
 Set REPRO_BENCH_QUICK=1 for a fast smoke pass.  The sampler backend for
@@ -133,6 +136,23 @@ def run_fig_load():
         _emit(f"fig_load[{scen},{scheme}].knee_load",
               "none" if knee is None else f"{knee:g}")
     return fig_load.validate(rows, quick=QUICK)
+
+
+def run_fig_train():
+    from . import fig_train
+    rows = []
+    scenarios = fig_train.SCENARIOS[:2] if QUICK else fig_train.SCENARIOS
+    for scenario in scenarios:
+        rows += _stored_result(fig_train, scenario=scenario)
+    for r in rows:
+        tag = f"fig_train[{r['scenario']},{r['scheme']}]"
+        _emit(f"{tag}.wall_s", f"{r['wall']:.4f}",
+              f"final_loss={r['final_loss']:.4f};"
+              f"wait={r['wait_frac']:.3f};epochs={r['epochs']:.1f}")
+        if r.get("wall_to_target") not in (None, -1.0):
+            _emit(f"{tag}.wall_to_target_s", f"{r['wall_to_target']:.4f}",
+                  f"steps={r['steps_to_target']}")
+    return fig_train.validate(rows, quick=QUICK)
 
 
 def _bench_fig5_grid(n: int, trials: int = 1000, reps: int = 5):
@@ -686,6 +706,101 @@ def _bench_control_plane(trials: int = 3):
     }
 
 
+def _bench_train(reps: int = 3):
+    """The batched ``lax.scan`` gradient engine vs the per-unit jitted
+    loop it replaced: one fused dispatch over a sorted, pow2-bucketed
+    unit group against one ``value_and_grad`` device round trip per
+    microbatch (the pre-refactor ``HetTrainer`` inner loop, reproduced
+    faithfully: same jit, same f32 accumulation order).
+
+    Alongside the walls, two correctness certificates ride along:
+    the loop and the engine agree numerically on the gradient sum
+    (same math, different fusion -- allclose, not bitwise), and three
+    ``HetTrainer`` policies (static / exchange / coded) land
+    BIT-identical final parameters from the same seed -- the work-
+    conservation claim the whole training subsystem rests on.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.distributed.hetsched import HetTrainer
+    from repro.hettrain import ScanGradEngine, TrainConfig
+
+    n_units = 16 if QUICK else 64
+    training = TrainConfig(steps=2)
+    model, params = training.build_model()
+    store = training.build_store()
+    engine = ScanGradEngine(model, store)
+    unit_ids = list(range(n_units))
+
+    def unit_loss(p, batch):
+        return model.loss(p, batch, mode="scan", remat=False)[0]
+
+    per_unit = jax.jit(jax.value_and_grad(unit_loss))
+
+    def loop():
+        acc = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                           params)
+        for u in unit_ids:
+            _, g = per_unit(params, store.fetch(u))
+            acc = jax.tree.map(
+                lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+        jax.block_until_ready(acc)
+        return acc
+
+    def scan():
+        g, _ = engine.grad_sum(params, unit_ids)
+        jax.block_until_ready(g)
+        return g
+
+    loop_g = loop()                     # pay both compiles up front
+    scan_g = scan()
+    agree = all(np.allclose(a, b, rtol=2e-5, atol=1e-6)
+                for a, b in zip(jax.tree.leaves(loop_g),
+                                jax.tree.leaves(scan_g)))
+
+    walls = {"loop": [], "scan": []}
+    for _ in range(reps):
+        for key, fn in (("loop", loop), ("scan", scan)):
+            t0 = time.perf_counter()
+            fn()
+            walls[key].append(time.perf_counter() - t0)
+    loop_s = min(walls["loop"])
+    scan_s = min(walls["scan"])
+
+    # bit-identity across policies: same seed, same unit stream, three
+    # different schedulers -> np.array_equal final params
+    rates = [1.0, 2.0, 4.0, 8.0]
+    finals = []
+    for policy in ("equal_static", "work_exchange", "gradient_coded"):
+        trainer = HetTrainer(model, training.build_optimizer(), rates,
+                             training.build_store(), policy=policy,
+                             units_per_step=8, seed=3)
+        p, _, _ = trainer.train(params, steps=2)
+        finals.append(p)
+    bitwise = all(
+        all(np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(finals[0]),
+                            jax.tree.leaves(f)))
+        for f in finals[1:])
+
+    return {
+        "model": training.model, "units": n_units, "wall_reps": reps,
+        "per_unit_loop_s": round(loop_s, 4),
+        "scan_engine_s": round(scan_s, 4),
+        "speedup_scan_vs_per_unit": round(loop_s / scan_s, 2),
+        "grad_sum_allclose": bool(agree),
+        "policies_bitwise_identical": bool(bitwise),
+        "engine": engine.stats(),
+        "note": "one optimizer step's gradient sum: per-unit jitted "
+                "value_and_grad loop (the pre-refactor HetTrainer path) "
+                "vs one bucketed lax.scan dispatch; bitwise certificate "
+                "is final params across equal_static / work_exchange / "
+                "gradient_coded at a fixed seed",
+    }
+
+
 def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     """Per-scheme MC means + engine/grid wall-clock, machine-readable."""
     import numpy as np
@@ -701,7 +816,7 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
               "schemes": {}, "mc_engine": {}, "fig5_grid": {},
               "mds_grid": {}, "fig5_sharded": {}, "fig5_drifting": {},
               "panel": {}, "serve_load": {}, "jax_cache": {},
-              "control_plane": {}}
+              "control_plane": {}, "train": {}}
 
     # per-trial-loop schemes walk unit ids in Python: bound their budget
     # (the JSON records the actual N/trials used -- no silent caps)
@@ -756,6 +871,7 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     report["serve_load"] = _bench_serve_load()
     report["jax_cache"] = _bench_jax_cache()
     report["control_plane"] = _bench_control_plane()
+    report["train"] = _bench_train()
 
     out_path.parent.mkdir(parents=True, exist_ok=True)
     out_path.write_text(json.dumps(report, indent=2))
@@ -778,6 +894,12 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
                 f"{100 * ctl['coordination_frac']:.1f}%"
                 if "agreement_se" in ctl
                 else f"live: {ctl.get('skipped', 'n/a')}")
+    tr = report["train"]
+    train_note = (f"train scan {tr['speedup_scan_vs_per_unit']}x vs "
+                  f"per-unit loop, policies bitwise="
+                  f"{tr['policies_bitwise_identical']}"
+                  if "speedup_scan_vs_per_unit" in tr
+                  else f"train: {tr.get('skipped', 'n/a')}")
     print(f"# wrote {out_path} (engine speedup "
           f"{report['mc_engine']['speedup']}x; fig5 grid: jax "
           f"{g['speedup_jax_vs_pr1_loop']}x vs PR1 loop, "
@@ -787,7 +909,8 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
           f"drifting: jax {d['speedup_jax_vs_numpy']}x vs numpy, "
           f"agreement <= {max(d['max_mean_drift_se_jax'], d['max_mean_drift_se_pallas'])} SE; "
           f"fused panel {p['speedup_jax']}x on jax; "
-          f"serve cell {sv['engine_wall_s']}s; {cache_note}; {ctl_note})",
+          f"serve cell {sv['engine_wall_s']}s; {cache_note}; {ctl_note}; "
+          f"{train_note})",
           file=sys.stderr)
     return []
 
@@ -810,7 +933,7 @@ def main() -> None:
     checks = []
     crashed = []
     for step in (run_fig5, run_fig6, run_fig7, run_fig_load,
-                 run_schemes_json, run_roofline):
+                 run_fig_train, run_schemes_json, run_roofline):
         try:
             checks += step()
         except Exception:

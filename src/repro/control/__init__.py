@@ -26,8 +26,10 @@ from .transport import (Comm, CommClosedError, HandleComm, Listener,
                         list_transports, register_transport)
 from . import inproc       # noqa: F401  (registers "inproc")
 from . import faults       # noqa: F401  (registers "flaky")
+from . import tcp          # noqa: F401  (registers "tcp")
 from .inproc import InProcTransport
 from .faults import FlakyTransport
+from .tcp import TCPTransport
 from .config import LiveConfig
 from .compute import MatmulPayload
 from .telemetry import Telemetry
@@ -38,7 +40,8 @@ from .coordinator import (Coordinator, EpisodeStats, WorkerLost,
 __all__ = [
     "Comm", "CommClosedError", "HandleComm", "Listener", "Transport",
     "TRANSPORT_REGISTRY", "register_transport", "get_transport",
-    "list_transports", "InProcTransport", "FlakyTransport", "LiveConfig",
+    "list_transports", "InProcTransport", "FlakyTransport",
+    "TCPTransport", "LiveConfig",
     "MatmulPayload", "Telemetry", "Worker", "Coordinator", "EpisodeStats",
     "WorkerLost", "WorkerProxy", "run_live", "run_live_grid",
 ]

@@ -414,12 +414,20 @@ def live_supported(scheme) -> str:
     an executable master protocol) or ``"coded"`` (redundant with the
     size-cover rule).  Raises ``ValueError`` -- at compile time, not
     mid-episode -- for schemes with neither."""
+    if getattr(scheme, "live_cover", False):
+        return "coded"
+    if getattr(scheme, "cover_scheduler", False):
+        # the training subsystem's one-shot CoverScheduler takes
+        # whole-queue finish-time feedback, which the live round-trip
+        # loop cannot provide
+        raise ValueError(
+            f"scheme {scheme.name!r} cannot run live: its scheduler is a "
+            f"one-shot cover protocol (training-only), and it declares "
+            f"no live cover rule (live_cover)")
     try:
         scheme.make_scheduler([0], rates=np.ones(1))
         return "exchange"
     except NotImplementedError:
-        if getattr(scheme, "live_cover", False):
-            return "coded"
         raise ValueError(
             f"scheme {scheme.name!r} cannot run live: no executable "
             f"master protocol (make_scheduler) and no cover rule "

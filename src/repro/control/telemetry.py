@@ -98,11 +98,15 @@ class Telemetry:
 
     def to_dict(self, events_tail: int = 200) -> Dict[str, Any]:
         """JSON-safe timeline; only the last ``events_tail`` events are
-        embedded verbatim (the counters and spans carry the totals)."""
+        embedded verbatim (the counters and spans carry the totals).
+        Raw per-worker spans ride along under ``"spans"`` -- what the
+        occupancy-timeline figure (``benchmarks/fig_timeline``) renders."""
         self.close_all()
         return {
             "counters": dict(sorted(self.counters.items())),
             "occupancy": {str(k): v for k, v in self.occupancy().items()},
+            "spans": {str(k): list(v)
+                      for k, v in sorted(self.spans.items())},
             "n_events": len(self.events) + self.dropped_events,
             "events": self.events[-int(events_tail):],
         }

@@ -157,3 +157,95 @@ class MasterScheduler:
 
     def estimated_rates(self) -> np.ndarray:
         return self.rates if self.known else self.estimator.rates()
+
+
+class CoverScheduler:
+    """One-shot replicated master: coded redundancy instead of exchange.
+
+    The registry scheduler surface for ``gradient_coded`` (fractional
+    repetition, Tandon-style): every unit is replicated ``s + 1`` times
+    across disjoint worker groups, the single epoch dispatches the
+    replicated queues, and the run completes at the earliest instant the
+    fully-finished workers jointly *cover* all N units -- up to ``s``
+    stragglers (or failures) tolerated with zero coordination rounds.
+
+    Unlike ``MasterScheduler`` the feedback is a whole-queue finish-time
+    vector (``VirtualWorkerPool.finish_times``), resolved via
+    ``resolve(t_k)``; executors branch on the ``cover`` attribute.
+    ``n_comm`` is the shipped redundancy (sizes.sum() - N, eq. 2's
+    analogue for coded schemes).
+    """
+
+    cover = True
+
+    def __init__(self, unit_ids: Sequence[int], K: int, s: int = 1):
+        from .coded import GradientCoding
+        self.N = len(unit_ids)
+        self.K = int(K)
+        self.s = int(s)
+        K_used = self.K - self.K % (self.s + 1)   # FR needs (s+1) | K
+        if K_used < self.s + 1:
+            raise ValueError(f"need >= {self.s + 1} workers for s={self.s}")
+        ids = list(unit_ids)
+        owners = GradientCoding(K=K_used, s=self.s).assignment(self.N)
+        self.queues: List[List[int]] = [[ids[i] for i in o] for o in owners]
+        self.queues += [[] for _ in range(self.K - K_used)]
+        self.n_comm = int(sum(len(q) for q in self.queues) - self.N)
+        self.dead = np.zeros(self.K, dtype=bool)
+        self._dispatched = False
+        self._finished = False
+        self._t_comp = 0.0
+
+    def next_assignment(self) -> Optional[Assignment]:
+        if self._dispatched:
+            return None
+        self._dispatched = True
+        return Assignment(queues=[list(q) for q in self.queues],
+                          wait_all=True)
+
+    def resolve(self, t_k: np.ndarray):
+        """Walk finishers in time order until every unit is covered.
+
+        Returns ``(t_done, done_counts, groups)`` where ``groups`` is the
+        per-worker list of units whose *first* replica to finish came
+        from that worker -- exactly one credited replica per unit, so the
+        union is the full step (work conserved)."""
+        t_k = np.asarray(t_k, dtype=np.float64)
+        order = np.argsort(t_k, kind="stable")
+        covered: set = set()
+        done = np.zeros(self.K, dtype=np.int64)
+        groups: List[tuple] = []
+        t_done = None
+        for w in order:
+            if not np.isfinite(t_k[w]) or not self.queues[w]:
+                continue
+            fresh = [u for u in self.queues[w] if u not in covered]
+            covered.update(fresh)
+            done[w] = len(fresh)
+            if fresh:
+                groups.append((int(w), fresh))
+            if len(covered) == self.N:
+                t_done = float(t_k[w])
+                break
+        if t_done is None:
+            raise RuntimeError(
+                f"coverage impossible: {len(covered)}/{self.N} units "
+                f"reachable (more than s={self.s} workers lost?)")
+        self._finished = True
+        self._t_comp = t_done
+        return t_done, done, groups
+
+    def mark_failed(self, k: int) -> None:
+        self.dead[int(k)] = True
+
+    @property
+    def finished(self) -> bool:
+        return self._finished
+
+    @property
+    def iterations(self) -> int:
+        return 1 if self._finished else 0
+
+    @property
+    def t_comp(self) -> float:
+        return self._t_comp

@@ -55,12 +55,33 @@ class VirtualWorkerPool:
                 raise ValueError("trace rates must be finite and positive")
             self.traces = traces
         self.epoch = 0
+        # per-worker finish/stop times of the last epoch (inf for idle or
+        # dead workers) -- what straggler-wait accounting reads back
+        self.last_t_k = np.full(self.K, np.inf)
 
     def rates_at(self, epoch: int) -> np.ndarray:
         """True service rates in effect during ``epoch``."""
         if self.traces is None:
             return self.rates
         return self.traces[:, epoch % self.traces.shape[1]]
+
+    def finish_times(self, sizes: Sequence[int],
+                     dead: Optional[np.ndarray] = None) -> np.ndarray:
+        """Whole-queue finish times for one epoch: worker k completes its
+        ``sizes[k]`` units at Gamma(sizes[k], rate_k) -- the cover-rule
+        primitive (coded schemes race full replicated queues).  Advances
+        the epoch counter like ``run_epoch``; idle/dead workers get inf."""
+        rates = self.rates_at(self.epoch)
+        self.epoch += 1
+        sizes = np.asarray(sizes, dtype=np.int64)
+        dead = np.zeros(self.K, bool) if dead is None else dead
+        t_k = np.full(self.K, np.inf)
+        busy = (sizes > 0) & ~dead
+        if busy.any():
+            t_k[busy] = self.rng.gamma(shape=sizes[busy],
+                                       scale=self.unit_cost / rates[busy])
+        self.last_t_k = t_k
+        return t_k
 
     def run_epoch(self, assignment: Assignment,
                   dead: Optional[np.ndarray] = None
@@ -73,6 +94,7 @@ class VirtualWorkerPool:
         dead = np.zeros(self.K, bool) if dead is None else dead
         t_k = np.full(self.K, np.inf)
         busy = (sizes > 0) & ~dead
+        self.last_t_k = t_k
         if not busy.any():
             return 0.0, np.zeros(self.K, dtype=np.int64)
         t_k[busy] = self.rng.gamma(shape=sizes[busy],

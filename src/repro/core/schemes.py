@@ -1210,6 +1210,10 @@ class GradientCodedScheme(Scheme):
     no coordination -- redundancy instead of exchange)."""
 
     redundant = True
+    # make_scheduler returns a one-shot CoverScheduler (whole-queue
+    # finish-time feedback), not a MasterScheduler: training executors
+    # branch on it; the live round-trip loop cannot drive it
+    cover_scheduler = True
 
     def __init__(self, s: int = 1):
         self.s = int(s)
@@ -1247,6 +1251,14 @@ class GradientCodedScheme(Scheme):
                 break
         return RunStats(t_comp=t_done, iterations=1,
                         n_comm=float(sizes.sum() - N), n_done=n_done)
+
+    def make_scheduler(self, unit_ids, rates=None, estimator=None,
+                       threshold_frac=None) -> "CoverScheduler":
+        """The registry scheduler path (replaces the bespoke training
+        branch): a ``CoverScheduler`` over ``len(rates)`` workers."""
+        from .exchange import CoverScheduler
+        K = np.asarray(rates, dtype=np.float64).size
+        return CoverScheduler(unit_ids, K, s=self.s)
 
 
 @register_scheme("hedged", aliases=("replicate_slowest", "hedged_requests"))

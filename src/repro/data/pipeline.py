@@ -53,6 +53,16 @@ class HetShardedLoader:
             out.append(self.store.fetch(u))
         return out
 
+    def touch(self, worker: int, unit_ids: Sequence[int]) -> None:
+        """Ownership/refetch accounting without materializing batches --
+        what the batched scan engine uses (it fetches units itself, in
+        canonical order, one stacked dispatch per group)."""
+        for u in unit_ids:
+            if u not in self._owned[worker]:
+                self.refetched_units += 1
+                self.refetched_tokens += self.store.tokens_per_unit()
+                self._owned[worker].add(u)
+
     def prefetch(self, worker: int, unit_ids: Sequence[int]) -> None:
         """Initial placement (not counted -- paper counts from epoch 2)."""
         self._owned[worker].update(unit_ids)

@@ -12,32 +12,38 @@ The unit of work is a microbatch; the K workers are DP rank groups / pods
                          fractional-repetition gradient coding, any K-s
                          replies recover the exact batch gradient
 
-All policies run REAL gradients through the same jitted per-unit step and
-MUST produce the same parameter trajectory (work conservation) -- asserted
-in tests.  Time is virtual (exponential service model or traces).
+Every policy resolves through ``SCHEME_REGISTRY`` to an executable
+scheduler -- exchange protocols to ``MasterScheduler``, gradient coding
+to ``CoverScheduler`` -- and the shared virtual-step executor
+(``repro.hettrain.policies.run_virtual_step``) drives it over the pool's
+virtual clocks.  Gradients run through the batched ``lax.scan`` engine
+(``repro.hettrain.engine``): ONE canonical-order fused dispatch per
+optimizer step (pow2 unit-count bucketing shares compiles across
+epochs), so the parameter trajectory is *bit-identical* across policies
+by work conservation -- asserted in tests.  The old per-unit jitted loop
+(one device round trip per microbatch, one recompile per distinct queue
+shape) is gone.  Time is virtual (exponential service model or traces).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.coded import GradientCoding
 from repro.core.estimator import make_estimator
-from repro.core.exchange import MasterScheduler
 from repro.core.runtime import VirtualWorkerPool
 from repro.core.schemes import get_scheme
 from repro.data.pipeline import HetShardedLoader, UnitStore
+from repro.hettrain.engine import ScanGradEngine, tree_bytes
+from repro.hettrain.policies import run_virtual_step
 from repro.optim import AdamW
-from repro.train.loop import make_grad_step
 
 # Training policy names are scheme-registry names/aliases (equal_static ->
 # uniform, het_static -> fixed, work_exchange_online -> unknown-het work
-# exchange); gradient_coded replaces the exchange protocol with coded
-# redundancy and keeps its dedicated step path below.
+# exchange, gradient_coded -> the CoverScheduler path).
 POLICIES = ("equal_static", "het_static", "work_exchange",
             "work_exchange_online", "gradient_coded")
 
@@ -91,21 +97,23 @@ class HetTrainer:
         self.coded_stragglers = coded_stragglers
         self.threshold_frac = threshold_frac
         self.compressor = compressor
-        self._grad_fn = jax.jit(make_grad_step(model, mode="scan"))
+        self.engine = ScanGradEngine(model, store)
         self._update_fn = jax.jit(self.opt.update)
         self._persistent_estimator = None
         self._next_unit = 0
 
     # -- scheduler construction per policy ---------------------------------
 
-    def _make_scheduler(self, unit_ids) -> MasterScheduler:
+    def _make_scheduler(self, unit_ids):
         """Resolve the policy through SCHEME_REGISTRY and let the scheme
-        build its executable master protocol."""
+        build its executable master protocol (exchange or cover)."""
         if self.policy == "work_exchange_online":
             if self._persistent_estimator is None:
                 self._persistent_estimator = make_estimator(
                     self.estimator_kind, self.K)
-        scheme = get_scheme(self.policy)
+        params = ({"s": self.coded_stragglers}
+                  if self.policy == "gradient_coded" else {})
+        scheme = get_scheme(self.policy, **params)
         return scheme.make_scheduler(unit_ids, rates=self.rates,
                                      estimator=self._persistent_estimator,
                                      threshold_frac=self.threshold_frac)
@@ -117,111 +125,39 @@ class HetTrainer:
         unit_ids = list(range(self._next_unit,
                               self._next_unit + self.units_per_step))
         self._next_unit += self.units_per_step
-        if self.policy == "gradient_coded":
-            return self._coded_step(params, opt_state, step_idx, unit_ids)
-
         sched = self._make_scheduler(unit_ids)
-        # initial placement follows the first assignment (free prefetch)
-        grads_sum = None
-        loss_sum = 0.0
-        grad_bytes = 0.0
-        processed = set()
-        dead = np.zeros(self.K, dtype=bool)
-        epoch = 0
         refetch0 = self.loader.refetched_tokens
-        while not sched.finished:
-            assignment = sched.next_assignment()
-            if assignment is None:
-                break
-            if epoch == 0:
-                for k in range(self.K):
-                    self.loader.prefetch(k, assignment.queues[k])
-            for w in failures:
-                if not dead[w]:
-                    dead[w] = True
-            elapsed, done = self.pool.run_epoch(assignment, dead)
-            for k in range(self.K):
-                todo = assignment.queues[k][: int(done[k])]
-                if todo:
-                    batches = self.loader.assign(k, todo)
-                for j, u in enumerate(todo):
-                    assert u not in processed, f"unit {u} done twice"
-                    processed.add(u)
-                    loss, g = self._grad_fn(params, batches[j])
-                    loss_sum += float(loss)
-                    g, nbytes = self._ship(g, k)
-                    grad_bytes += nbytes
-                    grads_sum = g if grads_sum is None else jax.tree.map(
-                        jnp.add, grads_sum, g)
-            sched.report(done, elapsed)
-            for w in np.nonzero(dead)[0]:
-                sched.mark_failed(int(w))
-            epoch += 1
-        assert processed == set(unit_ids), "work conservation violated"
-        grads = jax.tree.map(lambda g: g / len(unit_ids), grads_sum)
+        stats = run_virtual_step(sched, self.pool, unit_ids,
+                                 failures=failures, loader=self.loader)
+        n = len(unit_ids)
+        if self.compressor is None:
+            # canonical path: ONE fused dispatch over the full sorted
+            # step -- the gradient sum is policy-independent bitwise
+            grads_sum, losses = self.engine.grad_sum(params, unit_ids)
+            loss_sum = float(losses.sum())
+            grad_bytes = n * tree_bytes(params)
+        else:
+            # lossy path: the compressor quantizes each worker group's
+            # partial sum before "transmission", so dispatch follows the
+            # realized (worker, units) groups instead
+            grads_sum = None
+            loss_sum = 0.0
+            grad_bytes = 0.0
+            for worker, us in stats.groups:
+                g, losses = self.engine.grad_sum(params, us)
+                loss_sum += float(losses.sum())
+                g, nbytes = self.compressor.roundtrip(g, worker)
+                grad_bytes += nbytes
+                grads_sum = (g if grads_sum is None
+                             else jax.tree.map(jnp.add, grads_sum, g))
+        grads = jax.tree.map(lambda g: g / n, grads_sum)
         params, opt_state = self._update_fn(grads, opt_state, params)
         report = StepReport(
-            step=step_idx, loss=loss_sum / len(unit_ids),
-            t_virtual=sched.t_comp, iterations=sched.iterations,
-            n_comm_units=sched.n_comm,
+            step=step_idx, loss=loss_sum / n,
+            t_virtual=stats.t_comp, iterations=stats.iterations,
+            n_comm_units=stats.n_comm,
             refetch_tokens=self.loader.refetched_tokens - refetch0,
             grad_bytes=grad_bytes)
-        return params, opt_state, report
-
-    def _ship(self, grads, worker: int):
-        """Optionally compress the per-unit gradient for 'transmission'."""
-        if self.compressor is None:
-            nbytes = sum(g.size * g.dtype.itemsize
-                         for g in jax.tree.leaves(grads))
-            return grads, float(nbytes)
-        return self.compressor.roundtrip(grads, worker)
-
-    # -- gradient-coded baseline ---------------------------------------------
-
-    def _coded_step(self, params, opt_state, step_idx, unit_ids):
-        gc = GradientCoding(self.K, self.coded_stragglers)
-        owners = gc.assignment(len(unit_ids))   # per-worker local unit idx
-        sizes = np.array([len(o) for o in owners])
-        # completion: worker k finishes its whole queue at Gamma(|q|, rate);
-        # master stops at the earliest time the union of done-prefixes
-        # covers every unit (redundancy => no work exchange needed).
-        t_k = self.pool.rng.gamma(shape=np.maximum(sizes, 1),
-                                  scale=1.0 / self.rates)
-        order = np.argsort(t_k)
-        covered: set = set()
-        t_done = float(t_k[order[-1]])
-        used_workers: List[int] = []
-        for w in order:
-            used_workers.append(int(w))
-            covered |= set(owners[w])
-            if len(covered) == len(unit_ids):
-                t_done = float(t_k[w])
-                break
-        # real gradients: one replica per unit, from the covering workers
-        grads_sum = None
-        loss_sum = 0.0
-        grad_bytes = 0.0
-        done_units: set = set()
-        compute_units = 0
-        for w in used_workers:
-            for li in owners[w]:
-                compute_units += 1          # redundant compute happens anyway
-                if li in done_units:
-                    continue
-                done_units.add(li)
-                batch = self.store.fetch(unit_ids[li])
-                loss, g = self._grad_fn(params, batch)
-                loss_sum += float(loss)
-                g, nbytes = self._ship(g, w)
-                grad_bytes += nbytes
-                grads_sum = g if grads_sum is None else jax.tree.map(
-                    jnp.add, grads_sum, g)
-        grads = jax.tree.map(lambda g: g / len(unit_ids), grads_sum)
-        params, opt_state = self._update_fn(grads, opt_state, params)
-        report = StepReport(step=step_idx, loss=loss_sum / len(unit_ids),
-                            t_virtual=t_done, iterations=1,
-                            n_comm_units=0, refetch_tokens=0,
-                            grad_bytes=grad_bytes)
         return params, opt_state, report
 
     # -- loop -----------------------------------------------------------------

@@ -47,7 +47,7 @@ from .spec import ExperimentSpec, ScenarioGrid, scheme_spec
 from .store import ResultsStore, default_store
 
 DEMOS = ("quick", "drifting", "trace", "hcmm", "serving", "serving-trace",
-         "live", "live-fault")
+         "live", "live-fault", "train")
 
 
 def demo_spec(kind: str) -> ExperimentSpec:
@@ -140,6 +140,21 @@ def demo_spec(kind: str) -> ExperimentSpec:
             execution="live",
             live=LiveConfig(target_wall_s=0.5, timeout_s=0.1, retries=1,
                             kill_worker=0, kill_after_frac=0.25))
+    if kind == "train":
+        # every scheme as an epoch-assignment policy over real
+        # gradients: one shared trajectory (bit-identical loss curves),
+        # per-policy virtual wall-clock (the hettrain-smoke CI spec)
+        from repro.hettrain import TrainConfig
+        return ExperimentSpec(
+            name="demo-train",
+            grid=ScenarioGrid(K=4, points=[(4.0, 4.0 ** 2 / 6, 11)]),
+            schemes=(scheme_spec("work_exchange"),
+                     scheme_spec("work_exchange_unknown"),
+                     scheme_spec("uniform"),
+                     scheme_spec("fixed"),
+                     scheme_spec("gradient_coded")),
+            N=16, trials=3, seed=1234,
+            training=TrainConfig(steps=6))
     raise SystemExit(f"unknown demo {kind!r}; have: {', '.join(DEMOS)}")
 
 
@@ -192,6 +207,22 @@ def show(result: ExperimentResult, store: ResultsStore) -> None:
                       f"p99={rep.extra['p99']:.4f} "
                       f"thru={rep.extra['throughput_jobs']:.2f}/s "
                       f"reject={rep.extra['reject_rate']:.3f}{slo}")
+                continue
+            tr = rep.extra.get("training")
+            if tr:
+                tgt = ("" if "wall_to_target" not in tr else
+                       (f" wall_to_target={tr['wall_to_target']:.3f}"
+                        f"@{tr['steps_to_target']} steps"
+                        if tr["steps_to_target"] > 0
+                        else " target NOT reached"))
+                nom = (" [nominal rates]"
+                       if rep.extra.get("nominal_rates_only") else "")
+                print(f"  {key:24s} point {g}: wall={rep.t_comp:10.4f} "
+                      f"+- {rep.t_comp_std:8.4f}  "
+                      f"loss {tr['loss_curve'][0]:.4f}->"
+                      f"{tr['final_loss']:.4f} in {tr['steps']} steps  "
+                      f"wait={tr['straggler_wait_frac']:.1%}"
+                      f"{tgt}{nom}")
                 continue
             cp = rep.extra.get("control_plane")
             if cp:
@@ -276,6 +307,17 @@ def cmd_ls(argv) -> int:
             if parts:
                 print(f"{'':18s}serving p99@load={top:g}: "
                       + "  ".join(parts))
+        if spec.training is not None:
+            # training entries: per-scheme final loss (identical across
+            # schemes by work conservation) and mean total wall
+            parts = [f"{key}={rows[0].t_comp:.3g}"
+                     for key, rows in result.reports.items() if rows]
+            fl = next((rows[0].extra["training"]["final_loss"]
+                       for rows in result.reports.values()
+                       if rows and "training" in rows[0].extra), None)
+            if parts:
+                tail = "" if fl is None else f"  final_loss={fl:.4f}"
+                print(f"{'':18s}train wall: " + "  ".join(parts) + tail)
     return 0
 
 

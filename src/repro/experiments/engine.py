@@ -143,6 +143,22 @@ def _execute_live(plan: Plan) -> Dict[str, List[MCReport]]:
     return reports
 
 
+def _execute_training(plan: Plan) -> Dict[str, List[MCReport]]:
+    """Training specs: every scheme task becomes an epoch-assignment
+    policy over real gradients (``repro.hettrain``) -- the batched scan
+    engine computes one shared optimizer trajectory, each policy's
+    scheduler moves virtual wall-clock, one report row per grid point
+    with the loss curve in ``extra["training"]``."""
+    from repro.hettrain.runner import run_training_grid
+    reports: Dict[str, List[MCReport]] = {}
+    for task in plan.tasks:
+        reports[task.key] = run_training_grid(
+            task.scheme, task.params_dict, plan.het_specs,
+            plan.spec.training, plan.spec.N, plan.spec.trials, task.seed,
+            rate_schedules=plan.rate_schedules)
+    return reports
+
+
 def execute_plan(plan: Plan) -> ExperimentResult:
     """Run a compiled plan (no store interaction)."""
     spec = plan.spec
@@ -156,6 +172,11 @@ def execute_plan(plan: Plan) -> ExperimentResult:
                                 wall_s=time.perf_counter() - t0)
     if spec.serving is not None:
         reports = _execute_serving(plan)
+        return ExperimentResult(spec=spec, spec_hash=plan.spec_hash,
+                                reports=reports, env=_environment(plan),
+                                wall_s=time.perf_counter() - t0)
+    if spec.training is not None:
+        reports = _execute_training(plan)
         return ExperimentResult(spec=spec, spec_hash=plan.spec_hash,
                                 reports=reports, env=_environment(plan),
                                 wall_s=time.perf_counter() - t0)

@@ -124,6 +124,10 @@ def compile_plan(spec: ExperimentSpec) -> Plan:
         # the fused-panel executors run single-device (the mixed-mode
         # launch does not shard; see we_rounds_grid)
         devices = 1
+    if spec.training is not None:
+        # the training engine is one jit stream (scan over unit groups);
+        # the sharded MC executor does not apply
+        devices = 1
     tasks = []
     for s in spec.schemes:
         scheme = get_scheme(s.scheme, **s.params_dict)  # fail fast

@@ -42,6 +42,7 @@ from typing import Any, Dict, Mapping, Optional, Tuple, Union
 
 from repro.control.config import LiveConfig
 from repro.core.types import HetSpec
+from repro.hettrain.config import TrainConfig
 from repro.scenarios import (ExplicitScenario, ScenarioFamily,
                              ScenarioPoint, UniformRandomScenario,
                              scenario_from_dict)
@@ -174,6 +175,16 @@ class ExperimentSpec:
     mode is opt-in.  The key is omitted from serialization at the
     ``"per_scheme"`` default, so every pre-panel spec hash and store
     address is unchanged.
+
+    ``training`` attaches the heterogeneous-training axis
+    (``repro.hettrain.TrainConfig``): every scheme task then runs as an
+    epoch-assignment policy over real gradients -- ``N`` becomes units
+    (microbatches) per optimizer step, ``trials`` the independent
+    virtual-time realizations of the one shared trajectory, and each
+    report row carries the loss curve, per-step ``T_comp`` and
+    straggler-wait fractions in ``extra["training"]``.  ``None`` (the
+    default) serializes with the key omitted, so every pre-training
+    spec hash and store address is unchanged (pinned by test).
     """
 
     name: str
@@ -188,6 +199,7 @@ class ExperimentSpec:
     execution: str = "mc"
     live: Optional[LiveConfig] = None
     panel: str = "per_scheme"
+    training: Optional[TrainConfig] = None
     version: int = SPEC_VERSION
 
     def __post_init__(self):
@@ -220,6 +232,17 @@ class ExperimentSpec:
                                       or self.execution != "mc"):
             raise ValueError("panel='fused' applies to batch MC only; "
                              "drop serving= / execution='live'")
+        if self.training is not None:
+            if not isinstance(self.training, TrainConfig):
+                raise TypeError(f"training must be a TrainConfig or None; "
+                                f"got {type(self.training).__name__}")
+            if self.serving is not None or self.execution != "mc":
+                raise ValueError("training= and serving= / "
+                                 "execution='live' are mutually exclusive "
+                                 "axes")
+            if self.panel != "per_scheme":
+                raise ValueError("training= runs per-scheme; drop "
+                                 "panel='fused'")
         object.__setattr__(self, "schemes", tuple(self.schemes))
         if not self.schemes:
             raise ValueError("ExperimentSpec needs at least one scheme")
@@ -258,12 +281,16 @@ class ExperimentSpec:
         if self.panel != "per_scheme":
             # key omitted at the default: pre-panel hashes survive
             d["panel"] = self.panel
+        if self.training is not None:
+            # key omitted when absent: pre-training hashes stay valid
+            d["training"] = self.training.to_dict()
         return d
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
         serving = d.get("serving")
         live = d.get("live")
+        training = d.get("training")
         return cls(name=d["name"], grid=ScenarioGrid.from_dict(d["grid"]),
                    schemes=tuple(SchemeSpec.from_dict(s)
                                  for s in d["schemes"]),
@@ -276,6 +303,8 @@ class ExperimentSpec:
                    live=(None if live is None
                          else LiveConfig.from_dict(live)),
                    panel=d.get("panel", "per_scheme"),
+                   training=(None if training is None
+                             else TrainConfig.from_dict(training)),
                    version=int(d.get("version", SPEC_VERSION)))
 
     def to_json(self, indent: Optional[int] = 2) -> str:

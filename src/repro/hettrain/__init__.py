@@ -1,0 +1,34 @@
+"""Heterogeneity-aware distributed-training subsystem.
+
+Every registered scheme becomes an epoch-assignment policy over real
+gradients: the batched ``lax.scan`` engine (``engine``) computes one
+canonical-order gradient dispatch per optimizer step -- bit-identical
+across policies by work conservation -- while each policy's scheduler
+(``policies``) moves virtual wall-clock over a ``VirtualWorkerPool``.
+``runner.run_training_grid`` is the executor entry point for specs with
+``ExperimentSpec(training=TrainConfig(...))``.
+
+``TrainConfig`` imports eagerly (specs must stay import-light); the
+jax-heavy engine/runner/policies modules load on attribute access.
+"""
+from .config import MODEL_PRESETS, TrainConfig
+
+_LAZY = {
+    "ScanGradEngine": "engine", "bucket_units": "engine",
+    "tree_bytes": "engine", "MIN_BUCKET": "engine",
+    "StepStats": "policies", "policy_mode": "policies",
+    "run_virtual_step": "policies", "build_scheduler": "policies",
+    "run_training_grid": "runner", "compute_trajectory": "runner",
+}
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(f".{mod}", __name__), name)
+
+
+__all__ = ["TrainConfig", "MODEL_PRESETS", *_LAZY]

@@ -1,0 +1,122 @@
+"""Batched ``lax.scan`` microbatch-gradient engine.
+
+The old ``HetTrainer`` drove one jitted gradient call per *unit* from a
+Python loop -- K x units_per_step dispatches per step, each paying the
+host-to-device round trip, and a fresh XLA compile whenever unit batch
+shapes differed across workers.  ``ScanGradEngine`` replaces that with
+ONE dispatch per unit group: the group's units are stacked on a leading
+axis and a jitted ``lax.scan`` folds ``value_and_grad`` over them,
+mean-free f32 accumulation into a zeros tree (the ``make_train_step``
+accumulation idiom).
+
+Two properties the training subsystem leans on:
+
+* **pow2 unit-count bucketing** (the PR-8 shape-bucket discipline):
+  group sizes are padded up to the next power of two (floor
+  ``MIN_BUCKET``) by repeating the last unit under a zero mask, so every
+  epoch/step shares a handful of compiled shapes instead of one per
+  distinct group size.  Masked slots add ``g * 0.0`` in f32 -- exactly 0
+  -- so padding never changes the sum bitwise.
+* **canonical-order dispatch**: ``grad_sum`` sorts unit ids before
+  stacking.  A full-step call therefore returns a bit-identical gradient
+  sum no matter which policy scheduled the units (work conservation,
+  pinned at engine scale by the policy battery).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+MIN_BUCKET = 4
+
+
+def bucket_units(n: int, min_bucket: int = MIN_BUCKET) -> int:
+    """Next power-of-two group size >= n (floor ``min_bucket``)."""
+    if n <= 0:
+        raise ValueError("bucket_units needs n >= 1")
+    b = max(int(min_bucket), 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+def tree_bytes(tree) -> float:
+    """Dense byte size of one gradient tree (the uncompressed wire cost)."""
+    import jax
+    return float(sum(x.size * x.dtype.itemsize
+                     for x in jax.tree.leaves(tree)))
+
+
+class ScanGradEngine:
+    """Jitted scan over a stacked unit group -> (f32 grad sum, losses).
+
+    One instance per (model, store): the jit cache is keyed on the
+    bucketed group size, so all callers -- the canonical full-step path,
+    per-worker compressor groups, every policy -- share compiles.
+    """
+
+    def __init__(self, model, store, min_bucket: int = MIN_BUCKET):
+        import jax
+        self.model = model
+        self.store = store
+        self.min_bucket = int(min_bucket)
+        self.dispatches = 0          # engine calls (each = one device launch)
+        self.units_in = 0            # real units summed
+        self.bucket_sizes: set = set()    # distinct compiled group sizes
+        self._jit = jax.jit(self._scan)
+
+    # -- the jitted kernel --------------------------------------------------
+
+    def _scan(self, params, toks, labels, mask):
+        import jax
+        import jax.numpy as jnp
+
+        def unit_loss(p, batch):
+            return self.model.loss(p, batch, mode="scan", remat=False)[0]
+
+        def body(acc, xs):
+            t, l, m = xs
+            loss, g = jax.value_and_grad(unit_loss)(
+                params, {"tokens": t, "labels": l})
+            acc = jax.tree.map(
+                lambda a, gg: a + gg.astype(jnp.float32) * m, acc, g)
+            return acc, loss
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        grads, losses = jax.lax.scan(body, zeros, (toks, labels, mask))
+        return grads, losses
+
+    # -- host-side dispatch -------------------------------------------------
+
+    def _stack(self, unit_ids: Sequence[int]):
+        ids = sorted(int(u) for u in unit_ids)
+        B = bucket_units(len(ids), self.min_bucket)
+        batches: List[Dict[str, np.ndarray]] = [self.store.fetch(u)
+                                                for u in ids]
+        batches += [batches[-1]] * (B - len(ids))   # masked pad slots
+        toks = np.stack([b["tokens"] for b in batches])
+        labels = np.stack([b["labels"] for b in batches])
+        mask = np.zeros(B, dtype=np.float32)
+        mask[: len(ids)] = 1.0
+        return ids, toks, labels, mask
+
+    def grad_sum(self, params, unit_ids: Sequence[int]):
+        """One dispatch: (f32 gradient SUM over the group, per-unit
+        losses in canonical sorted-id order).  Divide by the step's unit
+        count at the caller -- partial groups must stay sums so they
+        compose."""
+        ids, toks, labels, mask = self._stack(unit_ids)
+        grads, losses = self._jit(params, toks, labels, mask)
+        self.dispatches += 1
+        self.units_in += len(ids)
+        self.bucket_sizes.add(int(mask.size))
+        return grads, np.asarray(losses)[: len(ids)]
+
+    def stats(self) -> Dict[str, float]:
+        return {"dispatches": self.dispatches, "units": self.units_in,
+                "bucket_sizes": sorted(self.bucket_sizes)}
+
+
+__all__ = ["ScanGradEngine", "bucket_units", "tree_bytes", "MIN_BUCKET"]

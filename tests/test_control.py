@@ -26,7 +26,8 @@ RNG = np.random.default_rng
 
 # constructor params that make each registered transport behave as a
 # reliable channel -- what the conformance battery runs against
-RELIABLE_PARAMS = {"inproc": {}, "flaky": {"drop": 0.0, "seed": 0}}
+RELIABLE_PARAMS = {"inproc": {}, "flaky": {"drop": 0.0, "seed": 0},
+                   "tcp": {}}
 
 
 def small_het(K=4, seed=2):
@@ -161,6 +162,56 @@ class TestTransportConformance:
     def test_get_transport_bad_param_lists_allowed(self):
         with pytest.raises(KeyError, match="bad params.*nope.*allowed"):
             get_transport("inproc", nope=1)
+
+    def test_tcp_address_concrete_after_start(self):
+        async def main():
+            tr = get_transport("tcp")
+            listener = tr.listen(echo_handler())
+            await listener.start()
+            host, _, port = listener.address[len("tcp://"):].rpartition(":")
+            assert host == "127.0.0.1" and int(port) > 0
+            await listener.stop()
+        asyncio.run(main())
+
+    def test_tcp_connect_dead_port_fails(self):
+        async def main():
+            tr = get_transport("tcp")
+            listener = tr.listen(echo_handler())
+            await listener.start()
+            addr = listener.address
+            await listener.stop()
+            with pytest.raises(CommClosedError):
+                await tr.connect(addr)
+        asyncio.run(main())
+
+    def test_tcp_serializes_numpy_scalars(self):
+        async def main():
+            tr = get_transport("tcp")
+            listener = tr.listen(echo_handler())
+            await listener.start()
+            comm = await tr.connect(listener.address)
+            await comm.send({"n": np.int64(3), "t": np.float64(0.5),
+                             "v": np.arange(3)})
+            reply = await comm.recv(timeout=2.0)
+            assert reply == {"echo": {"n": 3, "t": 0.5, "v": [0, 1, 2]}}
+            await comm.close()
+            await listener.stop()
+        asyncio.run(main())
+
+    def test_flaky_composes_over_tcp(self):
+        async def main():
+            tr = get_transport("flaky", inner="tcp", delay=0.001, seed=4)
+            listener = tr.listen(echo_handler())
+            await listener.start()
+            assert listener.address.startswith("tcp://127.0.0.1:")
+            comm = await tr.connect(listener.address)
+            for i in range(5):
+                await comm.send({"i": i})
+            got = [(await comm.recv(timeout=5.0))["echo"]["i"]
+                   for _ in range(5)]
+            assert got == list(range(5))
+            await listener.stop()
+        asyncio.run(main())
 
 
 # ---------------------------------------------------------------------------
@@ -481,3 +532,48 @@ class TestRegistryHelper:
             assert isinstance(reg, Registry)
             assert key in reg.names()
             assert reg.get(key) is reg[key]
+
+
+class TestTimelineFigure:
+    """The occupancy-timeline figure over telemetry spans."""
+
+    SPANS = {"0": [{"t0": 0.0, "t1": 0.6, "state": "busy", "units": 3},
+                   {"t0": 0.6, "t1": 1.0, "state": "idle"}],
+             "1": [{"t0": 0.0, "t1": 1.0, "state": "busy", "units": 5}]}
+
+    def test_renders_span_rows(self):
+        from benchmarks.fig_timeline import render_timeline
+        out = render_timeline({"spans": self.SPANS}, width=10)
+        lines = out.splitlines()
+        assert "spans" in lines[0]
+        w0 = next(ln for ln in lines if ln.strip().startswith("w0"))
+        w1 = next(ln for ln in lines if ln.strip().startswith("w1"))
+        # worker 0: 60% busy then idle; worker 1: solid busy
+        assert "######...." in w0 and "busy  60.0%" in w0
+        assert "units 3" in w0
+        assert "##########" in w1 and "busy 100.0%" in w1
+
+    def test_occupancy_fallback_for_pre_span_records(self):
+        from benchmarks.fig_timeline import render_timeline
+        out = render_timeline(
+            {"occupancy": {"0": {"busy_s": 0.25, "idle_s": 0.75,
+                                 "units_done": 2}}}, width=8)
+        assert "occupancy summary" in out
+        assert "##......" in out and "busy  25.0%" in out
+
+    def test_accepts_control_plane_wrapper_and_empty(self):
+        from benchmarks.fig_timeline import render_timeline
+        wrapped = render_timeline({"timeline": {"spans": self.SPANS}},
+                                  width=10)
+        assert "w1" in wrapped
+        assert "no worker telemetry" in render_timeline({})
+
+    def test_live_episode_renders(self):
+        from benchmarks.fig_timeline import render_report
+        het = HetSpec.uniform_random(3, 4.0, 4.0 ** 2 / 6,
+                                     np.random.default_rng(2))
+        rep = run_live("work_exchange", {}, het, N=32,
+                       cfg=LiveConfig(target_wall_s=0.1), trials=1, seed=3)
+        out = render_report(rep)
+        assert "scheme=work_exchange" in out
+        assert "#" in out          # somebody was busy

@@ -1,0 +1,219 @@
+"""The spec-driven training subsystem (``repro.hettrain``): engine
+bit-identity, the policy battery over the whole scheme registry,
+spec-hash preservation, and store-addressed training studies."""
+import numpy as np
+import pytest
+
+from repro.core.estimator import make_estimator
+from repro.core.runtime import VirtualWorkerPool
+from repro.core.schemes import get_scheme, list_schemes
+from repro.core.types import HetSpec
+from repro.experiments import (ExperimentSpec, ResultsStore, ScenarioGrid,
+                               run_experiment, scheme_spec)
+from repro.hettrain import (MIN_BUCKET, ScanGradEngine, TrainConfig,
+                            bucket_units, policy_mode, run_training_grid,
+                            run_virtual_step, build_scheduler)
+
+RATES = np.array([1.0, 4.0, 2.0, 8.0])
+HET = HetSpec(RATES)
+
+SMALL = TrainConfig(steps=2)
+N_STEP = 8
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    model, params = SMALL.build_model()
+    store = SMALL.build_store()
+    return model, params, store
+
+
+class TestTrainConfig:
+    def test_round_trip(self):
+        cfg = TrainConfig(steps=5, model="small", lr=3e-3,
+                          estimator="ema", target_loss=2.5)
+        back = TrainConfig.from_dict(cfg.to_dict())
+        assert back == cfg
+        assert back.to_dict() == cfg.to_dict()
+
+    def test_unknown_key_rejected(self):
+        d = TrainConfig().to_dict()
+        d["typo_knob"] = 1
+        with pytest.raises(KeyError):
+            TrainConfig.from_dict(d)
+
+    def test_bad_model_and_estimator_fail_fast(self):
+        with pytest.raises(ValueError):
+            TrainConfig(model="gpt-7t")
+        with pytest.raises(KeyError, match="psychic"):
+            TrainConfig(estimator="psychic")
+        with pytest.raises(ValueError):
+            TrainConfig(steps=0)
+
+    def test_training_excludes_other_execution_axes(self):
+        from repro.experiments import ServingConfig
+        kw = dict(name="x", grid=ScenarioGrid(K=4, points=[(4.0, 1.0, 1)]),
+                  schemes=(scheme_spec("work_exchange"),), N=8, trials=2,
+                  seed=1)
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            ExperimentSpec(training=TrainConfig(), serving=ServingConfig(),
+                           **kw)
+        with pytest.raises(ValueError, match="fused"):
+            ExperimentSpec(training=TrainConfig(), panel="fused", **kw)
+
+
+class TestBucketing:
+    def test_pow2_with_floor(self):
+        assert [bucket_units(n) for n in (1, 3, 4, 5, 8, 9, 16, 17)] == \
+            [4, 4, 4, 8, 8, 16, 16, 32]
+        assert bucket_units(3, min_bucket=1) == 4
+        assert bucket_units(2, min_bucket=1) == 2
+        with pytest.raises(ValueError):
+            bucket_units(0)
+
+    def test_epochs_share_compiles(self, engine_setup):
+        model, params, store = engine_setup
+        eng = ScanGradEngine(model, store)
+        for ids in ([0, 1, 2], [3, 4, 5, 6], [7], [8, 9]):
+            eng.grad_sum(params, ids)
+        # 1..4 units all pad to the one MIN_BUCKET shape
+        assert eng.stats()["bucket_sizes"] == [MIN_BUCKET]
+        assert eng.stats()["dispatches"] == 4
+        assert eng.stats()["units"] == 10
+
+
+class TestEngineBitIdentity:
+    def test_order_invariance_bitwise(self, engine_setup):
+        model, params, store = engine_setup
+        eng = ScanGradEngine(model, store)
+        import jax
+        a, la = eng.grad_sum(params, [5, 1, 3, 7, 0, 2, 6, 4])
+        b, lb = eng.grad_sum(params, list(range(8)))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+        assert np.array_equal(la, lb)
+
+    def test_masked_padding_adds_exact_zero(self, engine_setup):
+        model, params, store = engine_setup
+        import jax
+        padded = ScanGradEngine(model, store, min_bucket=4)
+        exact = ScanGradEngine(model, store, min_bucket=1)
+        a, _ = padded.grad_sum(params, [0, 1])    # bucket 4: 2 pad slots
+        b, _ = exact.grad_sum(params, [0, 1])     # bucket 2: no padding
+        assert padded.stats()["bucket_sizes"] == [4]
+        assert exact.stats()["bucket_sizes"] == [2]
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestPolicyBattery:
+    """Every registered scheme as an epoch-assignment policy."""
+
+    @pytest.mark.parametrize("name", list_schemes())
+    def test_conservation_and_seed_determinism(self, name):
+        scheme = get_scheme(name)
+        mode = policy_mode(scheme)
+        unit_ids = list(range(16))
+        if mode == "simulate":
+            a = scheme.simulate(HET, 16, np.random.default_rng(3))
+            b = scheme.simulate(HET, 16, np.random.default_rng(3))
+            assert a.t_comp == b.t_comp and a.t_comp > 0
+            return
+        stats = []
+        for rep in range(2):
+            # fresh estimator per rep: online estimates are state, and
+            # a carried-over one would (correctly) change the schedule
+            estimator = (make_estimator("cumulative", HET.K)
+                         if getattr(scheme, "known", True) is False
+                         else None)
+            pool = VirtualWorkerPool(RATES, seed=11)
+            sched = build_scheduler(scheme, unit_ids, RATES,
+                                    estimator=estimator,
+                                    threshold_frac=0.05)
+            stats.append(run_virtual_step(sched, pool, unit_ids))
+        a, b = stats
+        # same seed -> identical virtual time; fresh pools both times
+        assert a.t_comp == b.t_comp and a.t_comp > 0
+        assert a.iterations == b.iterations
+        # conservation: the realized (worker, units) groups partition the
+        # step's unit set -- each unit dispatched exactly once
+        dispatched = sorted(u for _, us in a.groups for u in us)
+        assert dispatched == unit_ids
+
+    def test_loss_curves_bit_identical_across_schemes(self):
+        curves = {}
+        for name in ("work_exchange", "uniform", "gradient_coded"):
+            reps = run_training_grid(name, {}, [HET], SMALL, N_STEP,
+                                     trials=2, seed=5)
+            curves[name] = tuple(reps[0].extra["training"]["loss_curve"])
+            assert reps[0].t_comp > 0
+        assert len(set(curves.values())) == 1
+
+    def test_grid_seed_determinism(self):
+        a = run_training_grid("work_exchange", {}, [HET], SMALL, N_STEP,
+                              trials=2, seed=9)[0]
+        b = run_training_grid("work_exchange", {}, [HET], SMALL, N_STEP,
+                              trials=2, seed=9)[0]
+        assert a.t_comp == b.t_comp
+        assert a.extra["training"] == b.extra["training"]
+
+
+class TestSpecHashPreservation:
+    def test_training_key_omitted_when_absent(self):
+        spec = ExperimentSpec(
+            name="pre-training",
+            grid=ScenarioGrid(K=4, points=[(4.0, 1.0, 1)]),
+            schemes=(scheme_spec("work_exchange"),), N=8, trials=2, seed=1)
+        assert "training" not in spec.to_dict()
+
+    def test_pre_training_spec_hash_pinned(self):
+        # the PR-4 literal: every stored result written before the
+        # training axis existed must stay addressable
+        spec = ExperimentSpec(
+            name="pin-uniform",
+            grid=ScenarioGrid(K=8, points=[(10.0, 10.0 ** 2 / 6, 1),
+                                           (20.0, 0.0, 2)]),
+            schemes=(scheme_spec("work_exchange"),),
+            N=5000, trials=8, seed=42, backend="numpy", devices=1)
+        assert spec.spec_hash() == (
+            "5a1f47511f756d8832ec4d975a58a840"
+            "d31fdba8c55412fde64066b0a98e06e0")
+
+    def test_training_spec_round_trips(self):
+        spec = ExperimentSpec(
+            name="train-rt",
+            grid=ScenarioGrid(K=4, points=[(4.0, 1.0, 1)]),
+            schemes=(scheme_spec("work_exchange"),), N=8, trials=2, seed=1,
+            training=TrainConfig(steps=3, target_loss=3.0))
+        back = ExperimentSpec.from_dict(spec.to_dict())
+        assert back.training == spec.training
+        assert back.spec_hash() == spec.spec_hash()
+
+
+class TestStoreAddressedTraining:
+    def _spec(self):
+        return ExperimentSpec(
+            name="train-store",
+            grid=ScenarioGrid(K=4, points=[(4.0, 4.0 ** 2 / 6, 11)]),
+            schemes=(scheme_spec("work_exchange"),
+                     scheme_spec("uniform")), N=N_STEP, trials=2,
+            seed=77, training=SMALL)
+
+    def test_miss_then_hit_with_loss_rows(self, tmp_path):
+        store = ResultsStore(tmp_path / "store")
+        first = run_experiment(self._spec(), store=store)
+        assert not first.cache_hit
+        again = run_experiment(self._spec(), store=store)
+        assert again.cache_hit
+        for name in again.keys():
+            (rep,) = again.report(name)
+            tr = rep.extra["training"]
+            assert len(tr["loss_curve"]) == SMALL.steps
+            assert all(isinstance(x, float) for x in tr["loss_curve"])
+            assert tr["final_loss"] == tr["loss_curve"][-1]
+            assert len(tr["t_comp_per_step"]) == SMALL.steps
+            assert 0.0 <= tr["straggler_wait_frac"] <= 1.0
+        we = again.report("work_exchange")[0]
+        un = again.report("uniform")[0]
+        assert we.extra["training"]["loss_curve"] == \
+            un.extra["training"]["loss_curve"]
