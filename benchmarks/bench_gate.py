@@ -44,6 +44,8 @@ WALL_KEYS_DRIFTING = ("numpy_grid_s", "jax_grid_s", "pallas_grid_s")
 WALL_KEYS_PANEL = ("per_scheme_jax_s", "fused_jax_s",
                    "per_scheme_pallas_s", "fused_pallas_s")
 WALL_KEYS_SERVE = ("engine_wall_s",)
+WALL_KEYS_SERVE_SCAN = ("numpy_sweep_s", "jax_sweep_s",
+                        "jax_first_call_s")
 WALL_KEYS_JAX_CACHE = ("cold_first_call_s", "cold_second_shape_s",
                        "warm_first_call_s", "warm_second_shape_s")
 # episode wall is pinned by LiveConfig.target_wall_s (time-scale solved),
@@ -92,6 +94,15 @@ def collect_walls(report: dict) -> dict:
     for key in WALL_KEYS_SERVE:
         if key in serve:
             walls[f"serve_load.{key}"] = float(serve[key])
+    serve_scan = report.get("serve_scan", {})
+    for key in WALL_KEYS_SERVE_SCAN:
+        if key in serve_scan:
+            walls[f"serve_scan.{key}"] = float(serve_scan[key])
+    # the sharded sweep wall is only comparable at equal device counts
+    if "sharded_jax_sweep_s" in serve_scan:
+        walls[(f"serve_scan.sharded_jax_sweep_s"
+               f"@{serve_scan.get('sharded_devices')}dev")] = \
+            float(serve_scan["sharded_jax_sweep_s"])
     jax_cache = report.get("jax_cache", {})
     for key in WALL_KEYS_JAX_CACHE:
         if key in jax_cache:

@@ -17,7 +17,10 @@ L-sweep vs the PR-2 per-L loop), the ``fig5_sharded`` benchmark
 grid), the ``panel`` section (fused whole-panel ``mc_grid_panel``
 dispatch vs the per-scheme loop on the jax / pallas backends), the
 ``serve_load`` section (streaming-arrival engine wall +
-per-policy p99 at a pinned load -- see ``benchmarks.fig_load``), and the
+per-policy p99 at a pinned load -- see ``benchmarks.fig_load``), the
+``serve_scan`` section (the jitted ``lax.scan`` serving backend vs the
+numpy slot loop over the full fig_load sweep, with the Erlang-C anchor
+and the sharded-sweep drift), and the
 ``jax_cache`` section (cold vs warm first-call wall with the persistent
 compilation cache), and the ``control_plane`` section (live async
 execution: measured vs MC-predicted T_comp plus the coordination-wall
@@ -590,6 +593,114 @@ def _bench_serve_load(reps: int = 2):
     }
 
 
+def _bench_serve_scan(reps: int = 2):
+    """The jitted ``lax.scan`` serving engine vs the numpy slot loop at
+    the full ``fig_load`` sweep scale.  The numpy wall is the historical
+    per-(policy, load) Python loop; the jax wall is one warm dispatch
+    per policy -- the whole load sweep rides the batch axis of a single
+    ``lax.scan``, so the comparison is sweep-for-sweep.  Also recorded:
+    the compile-inclusive first call, the max |numpy - jax| mean-sojourn
+    drift in combined-SE units, an Erlang-C M/M/K closed-form anchor for
+    the scan engine, and -- when simulated host devices are attached --
+    the same sweep sharded over the device mesh with its drift vs the
+    single-device run.
+    """
+    import numpy as np
+
+    from repro.core.types import HetSpec
+    from repro.serving import (ServingConfig, mmk_sojourn,
+                               run_serving_grid, serving_backend_available)
+    from . import fig_load
+
+    if not serving_backend_available("jax"):
+        return {"skipped": "jax serving backend unavailable"}
+
+    trials = 4 if QUICK else fig_load.TRIALS
+    if QUICK:
+        reps = 1
+    cfg = fig_load.serving_config(quick=QUICK)
+    het = HetSpec.uniform_random(fig_load.K_SERVE, fig_load.MU,
+                                 fig_load.SIGMA2,
+                                 np.random.default_rng(fig_load.HET_SEED))
+
+    def sweep(backend):
+        return {name: run_serving_grid(name, {}, [het], cfg,
+                                       fig_load.N_SERVE, trials, 1234,
+                                       backend=backend)
+                for name in fig_load.SERVE_SCHEMES}
+
+    numpy_rows = sweep("numpy")
+    t0 = time.perf_counter()
+    jax_rows = sweep("jax")                      # compiles per policy
+    first_call_s = time.perf_counter() - t0
+    agree = 0.0
+    for name in fig_load.SERVE_SCHEMES:
+        for a, b in zip(numpy_rows[name], jax_rows[name]):
+            se = max(float(np.hypot(a.t_comp_std, b.t_comp_std))
+                     / float(np.sqrt(trials)), 1e-12)
+            agree = max(agree, abs(a.t_comp - b.t_comp) / se)
+
+    walls = {"numpy": float("inf"), "jax": float("inf")}
+    for _ in range(reps):
+        for key in walls:
+            t0 = time.perf_counter()
+            sweep(key)
+            walls[key] = min(walls[key], time.perf_counter() - t0)
+
+    # closed-form anchor: homogeneous workers + 1-unit jobs + pooled
+    # work-exchange dispatch make the scan an M/M/K simulator up to
+    # O(slot_dt) -- its mean sojourn must hit Erlang-C
+    K_mmk, mu_mmk, load_mmk = 4, 20.0, 0.65
+    mmk_cfg = ServingConfig(loads=(load_mmk,), slots=4000, slot_dt=0.0025,
+                            warmup_frac=0.25)
+    mmk_rep = run_serving_grid("work_exchange", {},
+                               [HetSpec(np.full(K_mmk, mu_mmk))], mmk_cfg,
+                               1, 16, 0, backend="jax")[0]
+    mmk_expect = mmk_sojourn(load_mmk * K_mmk * mu_mmk, mu_mmk, K_mmk)
+    mmk_rel = abs(mmk_rep.t_comp - mmk_expect) / mmk_expect
+
+    out = {
+        "K": fig_load.K_SERVE, "N": fig_load.N_SERVE,
+        "loads": list(cfg.loads), "slots": cfg.slots, "trials": trials,
+        "schemes": len(fig_load.SERVE_SCHEMES), "wall_reps": reps,
+        "numpy_sweep_s": round(walls["numpy"], 4),
+        "jax_sweep_s": round(walls["jax"], 4),
+        "jax_first_call_s": round(first_call_s, 4),
+        "speedup": round(walls["numpy"] / walls["jax"], 2),
+        "max_mean_drift_se": round(agree, 2),
+        "mmk_sojourn_expected_s": round(mmk_expect, 4),
+        "mmk_sojourn_jax_s": round(mmk_rep.t_comp, 4),
+        "mmk_rel_err": round(mmk_rel, 4),
+        "note": "fig_load sweep, numpy slot loop vs one jitted lax.scan "
+                "dispatch per policy (loads ride the batch axis); drift "
+                "in combined-SE units; Erlang-C anchor at K=4 mu=20 "
+                "load=0.65",
+    }
+
+    try:
+        import jax
+        devices = len(jax.devices())
+    except Exception:                            # pragma: no cover
+        devices = 1
+    if devices > 1:
+        from repro.core.samplers import grid_sharding
+        with grid_sharding():
+            sh_rows = sweep("jax")               # compiles sharded variant
+            t0 = time.perf_counter()
+            sweep("jax")
+            sharded_s = time.perf_counter() - t0
+        sh_agree = 0.0
+        for name in fig_load.SERVE_SCHEMES:
+            for a, b in zip(jax_rows[name], sh_rows[name]):
+                se = max(float(np.hypot(a.t_comp_std, b.t_comp_std))
+                         / float(np.sqrt(trials)), 1e-12)
+                sh_agree = max(sh_agree, abs(a.t_comp - b.t_comp) / se)
+        out["sharded_devices"] = devices
+        out["sharded_jax_sweep_s"] = round(sharded_s, 4)
+        out["max_sharded_drift_se"] = round(sh_agree, 2)
+    return out
+
+
 def _bench_jax_cache():
     """Cold vs warm first-call wall with the persistent jax compilation
     cache (``REPRO_JAX_CACHE_DIR``): two fresh subprocesses share one
@@ -815,8 +926,8 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
                          "sigma2": "mu^2/6", "trials": trials},
               "schemes": {}, "mc_engine": {}, "fig5_grid": {},
               "mds_grid": {}, "fig5_sharded": {}, "fig5_drifting": {},
-              "panel": {}, "serve_load": {}, "jax_cache": {},
-              "control_plane": {}, "train": {}}
+              "panel": {}, "serve_load": {}, "serve_scan": {},
+              "jax_cache": {}, "control_plane": {}, "train": {}}
 
     # per-trial-loop schemes walk unit ids in Python: bound their budget
     # (the JSON records the actual N/trials used -- no silent caps)
@@ -869,6 +980,7 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
     report["fig5_drifting"] = _bench_fig5_drifting(n)
     report["panel"] = _bench_panel(n)
     report["serve_load"] = _bench_serve_load()
+    report["serve_scan"] = _bench_serve_scan()
     report["jax_cache"] = _bench_jax_cache()
     report["control_plane"] = _bench_control_plane()
     report["train"] = _bench_train()
@@ -885,6 +997,11 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
                   else f"sharded: {s.get('skipped', 'n/a')}")
     p = report["panel"]
     sv = report["serve_load"]
+    sc = report["serve_scan"]
+    scan_note = (f"serve scan {sc['speedup']}x vs numpy sweep, "
+                 f"drift <= {sc['max_mean_drift_se']} SE"
+                 if "speedup" in sc
+                 else f"serve scan: {sc.get('skipped', 'n/a')}")
     jc = report["jax_cache"]
     cache_note = (f"jax cache warm {jc['speedup_warm_vs_cold']}x vs cold"
                   if "speedup_warm_vs_cold" in jc
@@ -909,10 +1026,24 @@ def run_schemes_json(out_path: Path = Path("results/BENCH_schemes.json")):
           f"drifting: jax {d['speedup_jax_vs_numpy']}x vs numpy, "
           f"agreement <= {max(d['max_mean_drift_se_jax'], d['max_mean_drift_se_pallas'])} SE; "
           f"fused panel {p['speedup_jax']}x on jax; "
-          f"serve cell {sv['engine_wall_s']}s; {cache_note}; {ctl_note}; "
-          f"{train_note})",
+          f"serve cell {sv['engine_wall_s']}s; {scan_note}; {cache_note}; "
+          f"{ctl_note}; {train_note})",
           file=sys.stderr)
-    return []
+    checks = []
+    if "speedup" in sc:
+        # the quick config is too small to amortize dispatch, so the
+        # speedup bar is only meaningful at the full fig_load scale
+        if not QUICK:
+            checks.append(("serve_scan: jax scan >= 3x the numpy sweep",
+                           sc["speedup"] >= 3.0))
+        checks.append(("serve_scan: numpy-vs-jax drift within 6 SE",
+                       sc["max_mean_drift_se"] <= 6.0))
+        checks.append(("serve_scan: Erlang-C M/M/K anchor within 15%",
+                       sc["mmk_rel_err"] <= 0.15))
+        if "max_sharded_drift_se" in sc:
+            checks.append(("serve_scan: sharded within 6 SE of "
+                           "single-device", sc["max_sharded_drift_se"] <= 6.0))
+    return checks
 
 
 def run_roofline():

@@ -1395,8 +1395,11 @@ def work_exchange_panel_pallas(lam: np.ndarray, N: int,
                                ) -> Dict[str, GridArrays]:
     """The pair as ONE ``we_rounds`` launch: known rows stacked on top of
     unknown rows with a per-row flag column, so the whole figure is a
-    single tiled kernel pass (single-device; the panel path does not
-    shard)."""
+    single tiled kernel pass.  With a grid mesh active the stacked rows
+    shard over the devices (flags travel with their rows); each shard
+    keys its Threefry counters from its own seed pair, so sharded runs
+    are statistically equivalent -- not bit-identical -- to the
+    single-device launch."""
     from repro.kernels.we_rounds import we_rounds_grid
 
     _panel_pair_check(cfg_known, cfg_unknown)
@@ -1426,12 +1429,19 @@ def work_exchange_panel_pallas(lam: np.ndarray, N: int,
         sched_half = np.repeat(sched, int(trials), axis=0)
         sched_rows = _pad_rows_like(
             np.concatenate([sched_half, sched_half]), stacked.shape[0])
-    seed = rng.integers(0, 2 ** 32, size=2, dtype=np.uint32)
+    mesh = active_grid_mesh()
+    if mesh is not None:
+        # sharded launch: one independent seed pair per device (same
+        # discipline as work_exchange_grid_pallas)
+        seed = rng.integers(0, 2 ** 32, size=(int(mesh.size), 2),
+                            dtype=np.uint32)
+    else:
+        seed = rng.integers(0, 2 ** 32, size=2, dtype=np.uint32)
     t, it, cm = we_rounds_grid(stacked, seed, n0=float(N),
                                threshold=float(threshold), cap=cap_u,
                                known=flags,
                                max_iter=int(cfg_known.max_iterations),
-                               rate_schedule=sched_rows)
+                               mesh=mesh, rate_schedule=sched_rows)
     return {"known": (t[:B], it[:B], cm[:B]),
             "unknown": (t[B:2 * B], it[B:2 * B], cm[B:2 * B])}
 

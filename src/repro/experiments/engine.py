@@ -114,16 +114,21 @@ def _environment(plan: Plan) -> Dict[str, Any]:
 def _execute_serving(plan: Plan) -> Dict[str, List[MCReport]]:
     """Serving specs: every scheme task becomes a dispatch policy run
     through the slotted queueing engine -- one report row per (grid
-    point x offered load) instead of per grid point.  Always
-    single-device numpy (the queue state machine is inherently
-    sequential in time; trials are the batch axis)."""
+    point x offered load) instead of per grid point.  The engine is the
+    plan's resolved serving backend (``SERVING_BACKENDS``): the numpy
+    oracle loop runs single-device; the jax scan engine stacks the
+    (load x trial) rows and, at ``devices > 1``, splits them over the
+    1-D grid mesh exactly like the batch MC executor does."""
     from repro.serving import run_serving_grid
+    shard = (grid_sharding(plan.devices) if plan.devices > 1
+             else contextlib.nullcontext())
     reports: Dict[str, List[MCReport]] = {}
-    for task in plan.tasks:
-        reports[task.key] = run_serving_grid(
-            task.scheme, task.params_dict, plan.het_specs,
-            plan.spec.serving, plan.spec.N, plan.spec.trials, task.seed,
-            rate_schedules=plan.rate_schedules)
+    with shard:
+        for task in plan.tasks:
+            reports[task.key] = run_serving_grid(
+                task.scheme, task.params_dict, plan.het_specs,
+                plan.spec.serving, plan.spec.N, plan.spec.trials,
+                task.seed, rate_schedules=plan.rate_schedules)
     return reports
 
 
@@ -188,9 +193,13 @@ def execute_plan(plan: Plan) -> ExperimentResult:
         schemes = {t.key: get_scheme(t.scheme, **t.params_dict)
                    for t in plan.tasks}
         rngs = {t.key: np.random.default_rng(t.seed) for t in plan.tasks}
-        reports = mc_grid_panel(schemes, plan.het_specs, spec.N,
-                                spec.trials, rngs, backend=plan.backend,
-                                rate_schedule=plan.rate_schedules)
+        shard = (grid_sharding(plan.devices) if plan.devices > 1
+                 else contextlib.nullcontext())
+        with shard:
+            reports = mc_grid_panel(schemes, plan.het_specs, spec.N,
+                                    spec.trials, rngs,
+                                    backend=plan.backend,
+                                    rate_schedule=plan.rate_schedules)
         if plan.rate_schedules is not None:
             for key, sch in schemes.items():
                 if not sch.supports_rate_schedule:

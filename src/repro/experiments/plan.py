@@ -112,17 +112,32 @@ def compile_plan(spec: ExperimentSpec) -> Plan:
     backend = resolve_backend(spec.backend)
     devices = _resolve_devices(spec.devices, backend)
     if spec.serving is not None:
-        # the queueing engine is sequential in time (trials are the
-        # batch axis) and runs single-device regardless of backend
-        devices = 1
+        # the queueing engine resolves like the sampler backend does
+        # (explicit field > $REPRO_SERVING_BACKEND > numpy) and the
+        # concrete name lands in the stored spec: the cache address
+        # promises which engine produced the numbers
+        from repro.serving.backends import get_serving_backend
+        sname = spec.serving.resolve_backend()
+        if sname != spec.serving.backend:
+            spec = spec.replace(
+                serving=dataclasses.replace(spec.serving, backend=sname))
+        if get_serving_backend(sname).shards:
+            # the scan engine stacks (load x trial) rows -- a batch axis
+            # the 1-D grid mesh splits like any other
+            devices = _resolve_devices(spec.devices, "jax")
+        else:
+            # the numpy oracle loop is sequential in time and runs
+            # single-device regardless of sampler backend
+            devices = 1
     if spec.execution == "live":
         # live episodes are one asyncio event loop; the sharded executor
         # does not apply, and the transport must exist at compile time
         devices = 1
         spec.live.build_transport()
-    if spec.panel == "fused":
-        # the fused-panel executors run single-device (the mixed-mode
-        # launch does not shard; see we_rounds_grid)
+    if spec.panel == "fused" and backend != "pallas":
+        # the jax coupled-CRN fused-panel engine runs single-device;
+        # only the pallas kernel path shards the stacked mixed-mode
+        # rows (see we_rounds_grid)
         devices = 1
     if spec.training is not None:
         # the training engine is one jit stream (scan over unit groups);

@@ -96,20 +96,42 @@ def _jit_kernel_panel(n0: float, threshold: float, cap: float,
 @functools.lru_cache(maxsize=None)
 def _jit_sharded(mesh, n0: float, threshold: float, cap: float, known: bool,
                  max_iter: int, block_b: int, mode: str,
-                 drift: bool = False):
+                 drift: bool = False, panel: bool = False):
     """shard_map wrapper over the per-mode fn, cached per (mesh, config).
 
     Each device runs the whole pipeline on its block of rows with its own
     seed pair (one ``(D, 2)`` seed matrix, one row per device), so shards
     never synchronize; ``check_rep=False`` because jax<=0.4 has no
     replication rule for ``while``.  ``drift`` adds the per-round rate
-    schedule as a third batch-sharded input.
+    schedule as a batch-sharded input; ``panel`` is the fused mixed-mode
+    launch, which adds the per-row known flags (row-sharded like the
+    rates -- a flag travels with its row).
     """
     import jax
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec
 
-    if mode == "reference":
+    if panel:
+        if mode == "reference":
+            fn = _jit_reference_panel(n0, threshold, cap, max_iter)
+
+            def block(seeds_b, lam_b, flags_b):
+                return fn(lam_b, seeds_b[0], flags_b)
+
+            def block_drift(seeds_b, lam_b, flags_b, sched_b):
+                return fn(lam_b, seeds_b[0], flags_b, sched_b)
+        else:
+            fn = _jit_kernel_panel(n0, threshold, cap, max_iter, block_b,
+                                   mode == "interpret")
+
+            def block(seeds_b, lam_b, flags_b):
+                out = fn(lam_b, seeds_b, flags_b)
+                return out[:, 0], out[:, 1], out[:, 2]
+
+            def block_drift(seeds_b, lam_b, flags_b, sched_b):
+                out = fn(lam_b, seeds_b, flags_b, sched_b)
+                return out[:, 0], out[:, 1], out[:, 2]
+    elif mode == "reference":
         fn = _jit_reference(n0, threshold, cap, known, max_iter)
 
         def block(seeds_b, lam_b):
@@ -130,11 +152,12 @@ def _jit_sharded(mesh, n0: float, threshold: float, cap: float, known: bool,
             return out[:, 0], out[:, 1], out[:, 2]
 
     spec = PartitionSpec(mesh.axis_names[0])
+    n_in = 2 + (1 if panel else 0)
     if drift:
         return jax.jit(shard_map(block_drift, mesh=mesh,
-                                 in_specs=(spec, spec, spec),
+                                 in_specs=(spec,) * (n_in + 1),
                                  out_specs=spec, check_rep=False))
-    return jax.jit(shard_map(block, mesh=mesh, in_specs=(spec, spec),
+    return jax.jit(shard_map(block, mesh=mesh, in_specs=(spec,) * n_in,
                              out_specs=spec, check_rep=False))
 
 
@@ -193,9 +216,6 @@ def we_rounds_grid(lam_rows: np.ndarray, seed, *, n0: float,
                              f"row (B={B}); got {flags.shape[0]}")
         known = False
     mode = resolve_mode(mode)
-    if flags is not None and mesh is not None and mesh.size > 1:
-        raise ValueError("the fused-panel mixed mode does not shard; "
-                         "call without mesh=")
     if mesh is not None and mesh.size > 1:
         D = int(mesh.size)
         seed_arr = np.asarray(seed, dtype=np.uint32).reshape(D, 2)
@@ -204,10 +224,13 @@ def we_rounds_grid(lam_rows: np.ndarray, seed, *, n0: float,
         pad = (-B) % quantum
         lam_rows = _pad_rows(lam_rows, pad)
         sched = _pad_rows(sched, pad)
+        flags = _pad_rows(flags, pad)
         fn = _jit_sharded(mesh, float(n0), float(threshold), float(cap),
                           bool(known), int(max_iter), int(block_b), mode,
-                          drift=sched is not None)
+                          drift=sched is not None, panel=flags is not None)
         args = (jnp.asarray(seed_arr), jnp.asarray(lam_rows))
+        if flags is not None:
+            args += (jnp.asarray(flags),)
         if sched is not None:
             args += (jnp.asarray(sched),)
         t, it, cm = fn(*args)

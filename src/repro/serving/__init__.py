@@ -11,17 +11,25 @@ Three registries already cover *how work is split* (schemes), *how
 samples are drawn* (sampler backends), and *what the cluster looks like*
 (scenario families); ``ARRIVAL_REGISTRY`` adds *who sends jobs and
 when*.  Every registered scheme is recast as a dispatch policy
-(``repro.serving.policies``) and run through the slotted queueing engine
-(``repro.serving.engine``); ``repro.serving.queueing`` holds the
-closed-form M/M/K results the engine is validated against.
+(``repro.serving.policies``) and run through a pluggable queueing engine
+behind ``SERVING_BACKENDS`` (``repro.serving.backends``): the slotted
+numpy loop (``repro.serving.engine``) is the exact conservation oracle,
+the ``jax`` backend (``repro.serving.scan``) compiles the whole load
+sweep as one jitted ``lax.scan`` dispatch and shards the stacked
+(load x trial) rows over the grid mesh.  ``repro.serving.queueing``
+holds the closed-form M/M/K results both engines are validated against.
 
 Wiring: attach ``ServingConfig`` to ``ExperimentSpec(serving=...)`` and
 the ordinary ``run_experiment`` path -- compile, store, CLI -- sweeps
 offered load instead of running single-batch MC.
 """
-from .arrivals import (ARRIVAL_REGISTRY, ArrivalProcess, ClosedLoopArrivals,
-                       PoissonArrivals, TraceArrivals, get_arrival,
-                       list_arrivals, register_arrival)
+from .arrivals import (ARRIVAL_REGISTRY, ArrivalProcess, BurstArrivals,
+                       ClosedLoopArrivals, PoissonArrivals, TraceArrivals,
+                       get_arrival, list_arrivals, register_arrival)
+from .backends import (SERVING_BACKENDS, SERVING_ENV, ServingBackend,
+                       get_serving_backend, list_serving_backends,
+                       register_serving_backend, resolve_serving_backend,
+                       serving_backend_available)
 from .config import AUTO_SLOTS_PER_JOB, ServingConfig
 from .engine import run_serving_grid, simulate_serving
 from .policies import (POLICY_ADAPTERS, DispatchPolicy, dispatch_policy,
@@ -30,8 +38,12 @@ from .queueing import erlang_b, erlang_c, mm1_sojourn, mmk_sojourn, mmk_wait
 
 __all__ = [
     "ARRIVAL_REGISTRY", "ArrivalProcess", "PoissonArrivals",
-    "TraceArrivals", "ClosedLoopArrivals", "register_arrival",
-    "get_arrival", "list_arrivals",
+    "TraceArrivals", "BurstArrivals", "ClosedLoopArrivals",
+    "register_arrival", "get_arrival", "list_arrivals",
+    "SERVING_BACKENDS", "SERVING_ENV", "ServingBackend",
+    "register_serving_backend", "get_serving_backend",
+    "list_serving_backends", "resolve_serving_backend",
+    "serving_backend_available",
     "ServingConfig", "AUTO_SLOTS_PER_JOB",
     "simulate_serving", "run_serving_grid",
     "DispatchPolicy", "POLICY_ADAPTERS", "dispatch_policy",

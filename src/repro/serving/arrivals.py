@@ -116,6 +116,30 @@ class TraceArrivals(ArrivalProcess):
         return rng.poisson(np.broadcast_to(lam, (trials, slots)))
 
 
+@register_arrival("burst")
+@dataclasses.dataclass(frozen=True)
+class BurstArrivals(ArrivalProcess):
+    """Open-loop burst-then-idle stream: the whole offered demand lands
+    in the first ``burst_frac`` of the horizon (intensity ``1 /
+    burst_frac`` there, silence after; mean exactly 1, so the swept load
+    stays the average).  The adversarial shape for queue mechanics --
+    occupancy spikes to the buffer cap then drains to nothing, which is
+    exactly what the engine's ``q_hi`` compaction regression test
+    needs."""
+
+    burst_frac: float = 0.1
+
+    def __post_init__(self):
+        if not 0.0 < float(self.burst_frac) <= 1.0:
+            raise ValueError("burst_frac must be in (0, 1]")
+
+    def job_counts(self, trials, slots, jobs_per_slot, rng):
+        cut = max(1, int(round(float(self.burst_frac) * slots)))
+        lam = np.zeros(slots, dtype=np.float64)
+        lam[:cut] = jobs_per_slot * slots / cut
+        return rng.poisson(np.broadcast_to(lam, (trials, slots)))
+
+
 @register_arrival("closed_loop")
 @dataclasses.dataclass(frozen=True)
 class ClosedLoopArrivals(ArrivalProcess):
@@ -151,6 +175,6 @@ class ClosedLoopArrivals(ArrivalProcess):
 
 __all__ = [
     "ARRIVAL_REGISTRY", "ArrivalProcess", "register_arrival", "get_arrival",
-    "list_arrivals", "PoissonArrivals", "TraceArrivals",
+    "list_arrivals", "PoissonArrivals", "TraceArrivals", "BurstArrivals",
     "ClosedLoopArrivals",
 ]

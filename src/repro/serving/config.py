@@ -35,6 +35,13 @@ Knobs:
 ``max_queue_jobs`` / ``exchange_every``
     Buffer capacity (jobs, per trial) and the rebalance period (slots)
     for exchange-class dispatch policies.
+``backend``
+    The queueing engine (``SERVING_BACKENDS``): ``"numpy"`` = the exact
+    slotted oracle loop, ``"jax"`` = one jitted ``lax.scan`` per load
+    sweep.  The key is OMITTED from ``to_dict`` at the default, so every
+    pre-backend spec hash and store address survives; the default also
+    defers to ``$REPRO_SERVING_BACKEND`` at resolution time
+    (``resolve_backend``).
 """
 from __future__ import annotations
 
@@ -65,6 +72,7 @@ class ServingConfig:
     admission: str = "queue"
     max_queue_jobs: int = 64
     exchange_every: int = 1
+    backend: str = "numpy"
 
     def __post_init__(self):
         object.__setattr__(self, "loads",
@@ -101,6 +109,17 @@ class ServingConfig:
         # fail at construction, not mid-run: unknown arrival names/params
         # raise KeyError listing the registry (validate_backend discipline)
         get_arrival(self.arrival, **self.arrival_params_dict)
+        # same discipline for the engine name (availability is checked
+        # at resolution time, not here -- a spec naming "jax" must stay
+        # constructible on a host without jax)
+        from .backends import SERVING_BACKENDS
+        SERVING_BACKENDS.get(self.backend)
+
+    def resolve_backend(self) -> str:
+        """The engine this config runs on: the explicit field, with the
+        ``"numpy"`` default deferring to ``$REPRO_SERVING_BACKEND``."""
+        from .backends import resolve_serving_backend
+        return resolve_serving_backend(self.backend)
 
     @property
     def arrival_params_dict(self) -> Dict[str, Any]:
@@ -109,10 +128,11 @@ class ServingConfig:
     def build_arrival(self):
         return get_arrival(self.arrival, **self.arrival_params_dict)
 
-    # -- serialization (every knob appears: the dict is the hash input) -----
+    # -- serialization (the dict is the hash input; ``backend`` is
+    # omitted at its default so pre-backend hashes survive) -----------------
 
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        d = {
             "loads": [float(x) for x in self.loads],
             "arrival": self.arrival,
             "arrival_params": self.arrival_params_dict,
@@ -127,6 +147,9 @@ class ServingConfig:
             "max_queue_jobs": int(self.max_queue_jobs),
             "exchange_every": int(self.exchange_every),
         }
+        if self.backend != "numpy":
+            d["backend"] = self.backend
+        return d
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "ServingConfig":

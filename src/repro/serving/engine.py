@@ -140,6 +140,8 @@ def simulate_serving(het: HetSpec, scheme_name: str,
     # compact at the front: q_hi (high-water mark of rows ever used)
     # bounds every O(Q) pass by the actual concurrency, not the cap
     q_hi = 0
+    q_hi_peak = 0
+    q_hi_sum = 0
     for s in range(S):
         lam_t = lam
         if sched is not None:
@@ -268,10 +270,19 @@ def simulate_serving(het: HetSpec, scheme_name: str,
             activev &= ~done
             if resub is not None and s + 1 + think < S:
                 resub[:, s + 1 + think] += n_done_t
+            # the mark must also SHRINK: after a burst drains, a frozen
+            # q_hi keeps every later pass O(peak) instead of O(live) --
+            # recompact to the last live row once occupancy halves
+            live_rows = activev.any(axis=0)
+            if int(live_rows.sum()) < q_hi // 2:
+                nz = np.nonzero(live_rows)[0]
+                q_hi = int(nz[-1]) + 1 if nz.size else 0
 
         if s >= warm:
             qd_sum += Rv.sum(axis=(1, 2))
             served_units_w += srv_k.sum(axis=1)
+        q_hi_peak = max(q_hi_peak, q_hi)
+        q_hi_sum += q_hi
 
         # -- conservation: exact, every slot -------------------------------
         backlog = Rv.sum(axis=(1, 2))
@@ -315,6 +326,11 @@ def simulate_serving(het: HetSpec, scheme_name: str,
         "units_served": float(served_cum.mean()),
         "units_cancelled": float(cancelled_cum.mean()),
         "units_backlog": float(R.sum(axis=(1, 2)).mean()),
+        # scan-window telemetry: mean/peak high-water mark over slots
+        # (the compaction regression test reads these -- a burst that
+        # drains must pull the mean well below the peak)
+        "q_hi_mean": float(q_hi_sum / max(S, 1)),
+        "q_hi_peak": float(q_hi_peak),
     }
     if deadline_t is not None:
         extra["deadline_s"] = float(deadline_t)
@@ -341,21 +357,29 @@ def run_serving_grid(scheme_name: str, params: Optional[Dict[str, Any]],
                      het_specs: Sequence[HetSpec], cfg: ServingConfig,
                      N: int, trials: int, seed: int,
                      rate_schedules: Optional[np.ndarray] = None,
-                     ) -> List[MCReport]:
+                     backend: Optional[str] = None) -> List[MCReport]:
     """The serving analogue of ``Scheme.mc_grid``: one report per
     (grid point x offered load), loads innermost, ``extra["grid_point"]``
     marking the scenario row.  Each cell draws from its own
     ``default_rng([seed, g, load_index])`` so numbers are independent of
-    which other cells run -- the engine seed discipline."""
+    which other cells run -- the engine seed discipline.
+
+    ``backend`` picks the queueing engine (kwarg > ``cfg.backend`` >
+    ``$REPRO_SERVING_BACKEND`` > ``"numpy"``); the ``jax`` backend runs
+    every load of a cell as one jitted ``lax.scan`` dispatch
+    (``repro.serving.scan``), the numpy default is this module's loop."""
+    from .backends import get_serving_backend, resolve_serving_backend
+
+    name = resolve_serving_backend(
+        backend if backend is not None else cfg.backend)
+    sweep = get_serving_backend(name).sweep
     reports: List[MCReport] = []
     for g, het in enumerate(het_specs):
         sched = (None if rate_schedules is None
                  else np.asarray(rate_schedules[g], dtype=np.float64))
-        for li, load in enumerate(cfg.loads):
-            rng = np.random.default_rng([int(seed) & (2**63 - 1), g, li])
-            rep = simulate_serving(het, scheme_name, params, cfg, N,
-                                   float(load), trials, rng,
-                                   rate_schedule=sched)
+        rows = sweep(het, scheme_name, params, cfg, N, trials,
+                     int(seed), g, sched)
+        for rep in rows:
             rep.extra["grid_point"] = float(g)
-            reports.append(rep)
+        reports.extend(rows)
     return reports

@@ -460,3 +460,61 @@ class TestShardedEquivalence:
         for name in ("jax", "pallas"):
             if name in verdicts:
                 assert not all(r["bitwise"] for r in verdicts[name]), name
+
+
+SHARDED_PANEL_PROBE = textwrap.dedent("""
+    import os, json, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    from repro.experiments import (ExperimentSpec, ScenarioGrid,
+                                   compile_plan, run_experiment,
+                                   scheme_spec)
+
+    def make(devices):
+        return ExperimentSpec(
+            name="shard-fused",
+            grid=ScenarioGrid(K=8, points=[(24.0, 24.0**2/8, 3),
+                                           (24.0, 24.0**2/8, 6)]),
+            schemes=(scheme_spec("work_exchange"),
+                     scheme_spec("work_exchange_unknown"),
+                     scheme_spec("fixed")),
+            N=200, trials=64, seed=5, backend="pallas",
+            devices=devices, panel="fused")
+
+    plan = compile_plan(make(4))
+    assert plan.devices == 4, plan.devices      # fused pin lifted
+    r1, r4 = run_experiment(make(1)), run_experiment(make(4))
+    rows = []
+    for k in r1.keys():
+        for a, b in zip(r1.report(k), r4.report(k)):
+            rows.append({"key": k, "single": a.t_comp,
+                         "sharded": b.t_comp, "std": a.t_comp_std})
+    json.dump(rows, sys.stdout)
+""")
+
+
+class TestShardedFusedPanel:
+    """The fused known/unknown WE panel over a 4-device mesh: the
+    stacked mixed-mode rows (per-row known flags) shard like any other
+    batch, and must agree with the single-device launch at 6 SE."""
+
+    @pytest.fixture(scope="class")
+    def rows(self):
+        env = dict(os.environ)
+        env.pop("XLA_FLAGS", None)
+        env.pop("REPRO_SAMPLER_BACKEND", None)
+        src = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run([sys.executable, "-c", SHARDED_PANEL_PROBE],
+                              capture_output=True, text=True, env=env,
+                              timeout=900)
+        assert proc.returncode == 0, proc.stderr[-4000:]
+        return json.loads(proc.stdout)
+
+    def test_sharded_fused_panel_agrees_at_six_se(self, rows):
+        assert len(rows) == 6                   # 3 schemes x 2 points
+        for row in rows:
+            se = max(row["std"] / np.sqrt(64), 1e-9)
+            drift = abs(row["single"] - row["sharded"])
+            assert drift < 6.0 * se + 1e-12, row

@@ -2,22 +2,31 @@
 
 Engine physics (exact work conservation, the M/M/K closed-form anchor,
 seed determinism), the arrival registry, every registered scheme as a
-dispatch policy, the ``ServingConfig`` value discipline, the Experiment
-API integration (spec-hash back-compat, store round trip), and the CLI
-rendering of serving rows.
+dispatch policy, the ``SERVING_BACKENDS`` registry and the
+backend-conformance battery (the jax ``lax.scan`` engine against the
+numpy slot-loop oracle: conservation, determinism, 6-SE latency /
+goodput / SLO agreement, bucketing, censoring parity, sharding), the
+``ServingConfig`` value discipline, the Experiment API integration
+(spec-hash back-compat, store round trip), and the CLI rendering of
+serving rows.
 """
+import json
 import os
 import subprocess
 import sys
+import textwrap
 
 import numpy as np
 import pytest
 
 from repro.core.schemes import MCReport, list_schemes
 from repro.core.types import HetSpec
-from repro.serving import (ServingConfig, erlang_b, erlang_c, get_arrival,
-                           list_arrivals, lr_round_rows, mm1_sojourn,
-                           mmk_sojourn, run_serving_grid, simulate_serving)
+from repro.serving import (SERVING_BACKENDS, SERVING_ENV, ServingConfig,
+                           erlang_b, erlang_c, get_arrival, list_arrivals,
+                           list_serving_backends, lr_round_rows,
+                           mm1_sojourn, mmk_sojourn,
+                           resolve_serving_backend, run_serving_grid,
+                           serving_backend_available, simulate_serving)
 
 RNG = np.random.default_rng
 
@@ -364,11 +373,27 @@ class TestExperimentIntegration:
         spec = serving_spec().replace(serving=None)
         assert "serving" not in spec.to_dict()
 
-    def test_compile_pins_serving_to_one_device(self):
+    def test_compile_pins_numpy_serving_to_one_device(self):
+        # the numpy oracle loop is sequential in time: it pins to one
+        # device even when the SAMPLER backend is a sharded one
         from repro.experiments import compile_plan
         plan = compile_plan(serving_spec().replace(backend="jax",
                                                    devices="auto"))
+        assert plan.spec.serving.backend == "numpy"
         assert plan.devices == 1
+
+    def test_compile_resolves_serving_backend_env(self, monkeypatch):
+        # $REPRO_SERVING_BACKEND lands in the RESOLVED spec: the store
+        # address promises which engine produced the numbers
+        from repro.experiments import compile_plan
+        monkeypatch.delenv(SERVING_ENV, raising=False)
+        base = compile_plan(serving_spec())
+        assert base.spec.serving.backend == "numpy"
+        monkeypatch.setenv(SERVING_ENV, "jax")
+        plan = compile_plan(serving_spec())
+        assert plan.spec.serving.backend == "jax"
+        assert plan.devices >= 1          # scan shards; clamped to host
+        assert plan.spec_hash != base.spec_hash
 
     def test_store_miss_then_hit_with_latency_rows(self, tmp_path):
         from repro.experiments import ResultsStore, run_experiment
@@ -398,7 +423,7 @@ class TestExperimentIntegration:
 
 
 # ---------------------------------------------------------------------------
-# CLI rendering (ls / compare / demo) -- subprocess, store under tmp
+# subprocess helpers (CLI rendering + sharded probes)
 # ---------------------------------------------------------------------------
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -411,6 +436,340 @@ def _cli(args, timeout=420):
                          timeout=timeout, cwd=REPO, env=CLI_ENV)
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# serving backends: registry surface + conformance battery
+# ---------------------------------------------------------------------------
+
+needs_jax = pytest.mark.skipif(not serving_backend_available("jax"),
+                               reason="jax not importable")
+
+# one shared cell for the whole battery: every test below reuses these
+# rows, so the scan engine compiles each policy family exactly once
+CELL_CFG = dict(loads=(0.7,), slots=600, deadline_slo=2.5)
+CELL_N, CELL_TRIALS, CELL_SEED = 10, 8, 21
+
+
+class TestServingBackendRegistry:
+    def test_registry_contents(self):
+        names = list_serving_backends()
+        assert {"numpy", "jax"} <= set(names)
+        assert not SERVING_BACKENDS.get("numpy").shards
+        assert SERVING_BACKENDS.get("jax").shards
+        for n in names:
+            assert SERVING_BACKENDS.get(n).description
+
+    def test_unknown_backend_fails_loudly(self):
+        with pytest.raises(KeyError, match="unknown serving backend"):
+            SERVING_BACKENDS.get("cuda")
+        with pytest.raises(KeyError, match="unknown serving backend"):
+            run_serving_grid("fixed", {}, [small_het()], quick_cfg(),
+                             30, 2, 0, backend="cuda")
+
+    def test_resolution_order(self, monkeypatch):
+        # explicit non-default name wins; the "numpy" default defers to
+        # the env var (the sampler-backend semantics)
+        monkeypatch.delenv(SERVING_ENV, raising=False)
+        assert resolve_serving_backend() == "numpy"
+        assert resolve_serving_backend("jax") == "jax"
+        monkeypatch.setenv(SERVING_ENV, "jax")
+        assert resolve_serving_backend() == "jax"
+        assert resolve_serving_backend("numpy") == "jax"
+        assert ServingConfig().resolve_backend() == "jax"
+        assert ServingConfig(backend="jax").resolve_backend() == "jax"
+
+    def test_bad_env_value_fails_loudly(self, monkeypatch):
+        monkeypatch.setenv(SERVING_ENV, "cuda")
+        with pytest.raises(KeyError, match="unknown serving backend"):
+            resolve_serving_backend()
+
+
+@needs_jax
+class TestBackendConformance:
+    """The jitted scan engine against the numpy slot-loop oracle: same
+    arrival streams (both build the identical per-load count matrices),
+    independent service draws -- reports must close the same ledger and
+    agree within the MC band on every latency/goodput/SLO metric."""
+
+    @pytest.fixture(scope="class")
+    def cell(self):
+        cfg = ServingConfig(**CELL_CFG)
+        het = small_het()
+        out = {}
+        for backend in list_serving_backends():
+            if not serving_backend_available(backend):
+                continue                                # pragma: no cover
+            out[backend] = {
+                name: run_serving_grid(name, {}, [het], cfg, CELL_N,
+                                       CELL_TRIALS, CELL_SEED,
+                                       backend=backend)[0]
+                for name in list_schemes()}
+        return out
+
+    @pytest.mark.parametrize("name", list_schemes())
+    def test_scan_report_closes_ledger(self, cell, name):
+        rep = cell["jax"][name]
+        e = rep.extra
+        assert e["serving_backend"] == "jax"
+        assert rep.trials == CELL_TRIALS and np.isfinite(rep.t_comp)
+        assert e["completed_jobs"] > 0
+        assert e["p50"] <= e["p95"] + 1e-12 <= e["p99"] + 2e-12
+        assert 0.0 <= e["reject_rate"] <= 1.0
+        assert 0.0 <= e["slo_miss_rate"] <= 1.0
+        assert e["units_admitted"] == pytest.approx(
+            e["units_served"] + e["units_cancelled"] + e["units_backlog"])
+
+    @pytest.mark.parametrize("name", list_schemes())
+    def test_backends_agree_within_band(self, cell, name):
+        rn, rj = cell["numpy"][name], cell["jax"][name]
+        # identical arrival streams: the offered demand must match
+        # exactly, not statistically
+        assert rn.extra["units_admitted"] == pytest.approx(
+            rj.extra["units_admitted"])
+        se = max(np.hypot(rn.t_comp_std, rj.t_comp_std)
+                 / np.sqrt(CELL_TRIALS), 1e-9)
+        assert abs(rn.t_comp - rj.t_comp) <= 6 * se + 1e-12
+        for q in ("p50", "p95", "p99"):
+            assert abs(rn.extra[q] - rj.extra[q]) <= 6 * se + 1e-12, q
+        g = rn.extra["goodput_units"]
+        assert abs(g - rj.extra["goodput_units"]) <= max(
+            6 * 0.03 * g, 6 * se * CELL_N) + 1e-12
+        m = rn.extra["slo_miss_rate"]
+        ntot = max(rn.extra["completed_jobs"] * CELL_TRIALS, 1.0)
+        se_m = np.sqrt(max(m * (1 - m), 0.25 / ntot) / ntot)
+        assert abs(m - rj.extra["slo_miss_rate"]) <= 6 * se_m + 1e-12
+
+    def test_scan_seed_determinism(self):
+        cfg = ServingConfig(**CELL_CFG)
+        args = ("work_exchange", {}, [small_het()], cfg, CELL_N,
+                CELL_TRIALS)
+        a = run_serving_grid(*args, CELL_SEED, backend="jax")[0]
+        b = run_serving_grid(*args, CELL_SEED, backend="jax")[0]
+        assert a.to_dict() == b.to_dict()
+        c = run_serving_grid(*args, CELL_SEED + 1, backend="jax")[0]
+        assert c.t_comp != a.t_comp
+
+    def test_env_resolution_reaches_engine(self, monkeypatch):
+        monkeypatch.setenv(SERVING_ENV, "jax")
+        rep = run_serving_grid("work_exchange", {}, [small_het()],
+                               ServingConfig(**CELL_CFG), CELL_N,
+                               CELL_TRIALS, CELL_SEED)[0]
+        assert rep.extra["serving_backend"] == "jax"
+
+    def test_bucketed_matches_exact_shapes(self, cell, monkeypatch):
+        # REPRO_SHAPE_BUCKETS=0 compiles at the exact (S, Q, B) instead
+        # of the pow2 bucket: different draw shapes, same distribution
+        monkeypatch.setenv("REPRO_SHAPE_BUCKETS", "0")
+        exact = run_serving_grid("work_exchange", {}, [small_het()],
+                                 ServingConfig(**CELL_CFG), CELL_N,
+                                 CELL_TRIALS, CELL_SEED,
+                                 backend="jax")[0]
+        bucketed = cell["jax"]["work_exchange"]
+        se = max(np.hypot(exact.t_comp_std, bucketed.t_comp_std)
+                 / np.sqrt(CELL_TRIALS), 1e-9)
+        assert abs(exact.t_comp - bucketed.t_comp) <= 6 * se + 1e-12
+        assert abs(exact.extra["p99"] - bucketed.extra["p99"]) \
+            <= 6 * se + 1e-12
+
+    def test_queue_tier_splice_bitwise(self, monkeypatch):
+        # fixed-units scans first run every row at the narrow _TIER_Q
+        # physical queue width, then rerun exactly the rows whose true
+        # admission cap was ever threatened at the full width; the
+        # splice must be invisible -- bitwise equal to one full-width
+        # dispatch (same bucketed shapes, so identical cap streams)
+        import repro.serving.scan as scan
+        cfg = ServingConfig(loads=(0.95, 1.15), slots=200,
+                            max_queue_jobs=48, deadline_slo=None)
+        args = ("work_exchange", {}, [small_het(K=5, mu=25.0, seed=11)],
+                cfg, 20, 6, 77)
+        tiered = run_serving_grid(*args, backend="jax")
+        monkeypatch.setattr(scan, "_TIER_Q", sys.maxsize)
+        full = run_serving_grid(*args, backend="jax")
+        assert [r.to_dict() for r in tiered] == [r.to_dict() for r in full]
+
+    def test_censored_parity(self):
+        # jobs too large to ever finish: both engines must flag the
+        # horizon bound instead of posing as a measurement
+        cfg = quick_cfg(slots=100, slot_dt=0.01)
+        args = ("fixed", {}, [small_het()], cfg, 1_000_000, 4, 5)
+        rn = run_serving_grid(*args)[0]
+        rj = run_serving_grid(*args, backend="jax")[0]
+        for rep in (rn, rj):
+            assert rep.extra["latency_censored"] == 1.0
+            assert rep.extra["censored_frac"] == 1.0
+            assert rep.extra["p50"] == rep.extra["p99"] \
+                == pytest.approx(1.0)
+            assert rep.t_comp == pytest.approx(1.0)
+
+    def test_unadaptable_policy_falls_back_to_numpy(self, monkeypatch):
+        # adapter classes the scan has no pure-function translation for
+        # run through the oracle loop, stamped so reports never lie
+        import repro.serving.scan as scan
+        monkeypatch.setattr(scan, "_policy_static", lambda pol: None)
+        cfg = quick_cfg()
+        args = ("work_exchange", {}, [small_het()], cfg, 30, 4, 9)
+        via_jax = run_serving_grid(*args, backend="jax")[0]
+        pure = run_serving_grid(*args, backend="numpy")[0]
+        assert via_jax.extra["serving_backend"] == "numpy"
+        assert via_jax.t_comp == pure.t_comp
+
+    def test_closed_loop_rejected_on_scan(self):
+        cfg = quick_cfg(arrival="closed_loop",
+                        arrival_params={"think_slots": 2})
+        with pytest.raises(ValueError, match="[Cc]losed-loop"):
+            run_serving_grid("work_exchange", {}, [small_het()], cfg,
+                             30, 2, 0, backend="jax")
+
+
+# ---------------------------------------------------------------------------
+# q_hi window compaction (burst-then-idle regression)
+# ---------------------------------------------------------------------------
+
+class TestQHiCompaction:
+    def test_burst_arrivals_shape(self):
+        arr = get_arrival("burst", burst_frac=0.05)
+        c = arr.job_counts(2000, 600, 0.3, RNG(0))
+        assert c.shape == (2000, 600)
+        assert c.mean() == pytest.approx(0.3, rel=0.1)   # mean preserved
+        assert c[:, 30:].sum() == 0                      # silent tail
+        with pytest.raises(ValueError):
+            get_arrival("burst", burst_frac=0.0)
+        with pytest.raises(ValueError):
+            get_arrival("burst", burst_frac=1.5)
+
+    def test_burst_drain_compacts_high_water_mark(self):
+        # the whole demand lands in the first 5% of the horizon and
+        # drains; a frozen high-water mark would keep q_hi_mean pinned
+        # near q_hi_peak for the idle tail, so the shrink is visible as
+        # mean << peak
+        cfg = quick_cfg(loads=(0.3,), slots=800, arrival="burst",
+                        arrival_params={"burst_frac": 0.05})
+        rep = simulate_serving(small_het(), "work_exchange", {}, cfg,
+                               N=5, load=0.3, trials=4, rng=RNG(12))
+        e = rep.extra
+        assert e["q_hi_peak"] >= 4
+        assert e["q_hi_mean"] < 0.65 * e["q_hi_peak"]
+        assert e["units_admitted"] == pytest.approx(
+            e["units_served"] + e["units_cancelled"] + e["units_backlog"])
+
+    def test_steady_state_mark_stays_tight(self):
+        # at steady load the mark tracks occupancy: mean close to peak
+        rep = simulate_serving(small_het(), "work_exchange", {},
+                               quick_cfg(), N=30, load=0.6, trials=4,
+                               rng=RNG(12))
+        e = rep.extra
+        assert e["q_hi_peak"] > 0
+        assert e["q_hi_mean"] > 0.2 * e["q_hi_peak"]
+
+
+# ---------------------------------------------------------------------------
+# ServingConfig.backend spec-hash discipline
+# ---------------------------------------------------------------------------
+
+class TestServingBackendSpecHash:
+    def test_backend_key_omitted_at_default(self):
+        cfg = ServingConfig()
+        assert "backend" not in cfg.to_dict()
+        assert ServingConfig.from_dict(cfg.to_dict()) == cfg
+
+    def test_backend_key_present_when_set(self):
+        cfg = ServingConfig(backend="jax")
+        d = cfg.to_dict()
+        assert d["backend"] == "jax"
+        assert ServingConfig.from_dict(d) == cfg
+
+    def test_unknown_backend_fails_at_construction(self):
+        with pytest.raises(KeyError, match="unknown serving backend"):
+            ServingConfig(backend="cuda")
+
+    def test_pre_backend_spec_hash_pinned(self):
+        """Literal regression pin: a serving spec at the default backend
+        hashes exactly as it did before the backend field existed, so
+        every stored serving result keeps its address."""
+        from repro.experiments import ExperimentSpec, ScenarioGrid, \
+            scheme_spec
+        spec = ExperimentSpec(
+            name="pin-serving",
+            grid=ScenarioGrid(K=6, points=[(20.0, 20.0 ** 2 / 6, 3)]),
+            schemes=(scheme_spec("work_exchange"), scheme_spec("fixed")),
+            N=100, trials=4, seed=11,
+            serving=ServingConfig(loads=(0.6, 0.9), slots=400,
+                                  deadline_slo=4.0))
+        pinned = ("770dfde613e0d7df6303627d1ccbe12b"
+                  "867d3665e5485910235bc0fcb6deb96b")
+        assert spec.spec_hash() == pinned
+        # a non-default engine is a different address on purpose
+        import dataclasses
+        jax_spec = spec.replace(serving=dataclasses.replace(
+            spec.serving, backend="jax"))
+        assert jax_spec.spec_hash() != pinned
+        assert ExperimentSpec.from_json(jax_spec.to_json()) == jax_spec
+
+
+# ---------------------------------------------------------------------------
+# sharded scan: stacked (load x trial) rows over simulated devices
+# ---------------------------------------------------------------------------
+
+SHARDED_SERVING_PROBE = textwrap.dedent("""
+    import json, os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    from repro.experiments import (ExperimentSpec, ScenarioGrid,
+                                   compile_plan, run_experiment,
+                                   scheme_spec)
+    from repro.serving import ServingConfig
+
+    def make(devices):
+        return ExperimentSpec(
+            name="shard-serving",
+            grid=ScenarioGrid(K=6, points=[(20.0, 20.0**2/6, 3)]),
+            schemes=(scheme_spec("work_exchange"),
+                     scheme_spec("het_mds")),
+            N=100, trials=8, seed=7, devices=devices,
+            serving=ServingConfig(loads=(0.6, 0.9), slots=400,
+                                  deadline_slo=4.0, backend="jax"))
+
+    plan = compile_plan(make(4))
+    assert plan.devices == 4, plan.devices
+    r1, r4 = run_experiment(make(1)), run_experiment(make(4))
+    rows = []
+    for k in r1.keys():
+        for a, b in zip(r1.report(k), r4.report(k)):
+            rows.append({"key": k, "load": a.extra["offered_load"],
+                         "single": a.t_comp, "shard": b.t_comp,
+                         "std": a.t_comp_std})
+    print("PROBE" + json.dumps(rows))
+""")
+
+
+@needs_jax
+class TestShardedServingScan:
+    @pytest.fixture(scope="class")
+    def probe(self):
+        env = {k: v for k, v in os.environ.items()
+               if k not in ("XLA_FLAGS", "REPRO_SERVING_BACKEND")}
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        out = subprocess.run([sys.executable, "-c",
+                              SHARDED_SERVING_PROBE],
+                             capture_output=True, text=True, timeout=900,
+                             cwd=REPO, env=env)
+        assert out.returncode == 0, out.stderr[-3000:]
+        line = next(ln for ln in out.stdout.splitlines()
+                    if ln.startswith("PROBE"))
+        return json.loads(line[len("PROBE"):])
+
+    def test_four_device_scan_matches_single(self, probe):
+        assert len(probe) == 4                  # 2 schemes x 2 loads
+        for row in probe:
+            se = max(row["std"] / np.sqrt(8), 1e-9)
+            drift = abs(row["single"] - row["shard"])
+            assert drift <= 6.0 * se + 1e-12, row
+
+
+# ---------------------------------------------------------------------------
+# CLI rendering (ls / compare / demo) -- subprocess, store under tmp
+# ---------------------------------------------------------------------------
 
 
 class TestCLIServingRows:
